@@ -1,0 +1,35 @@
+"""Theorems 2/3 trade-off: bits/coordinate vs achieved variance for
+star / tree / butterfly topologies (the paper's communication-variance
+frontier)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (LatticeQ, CompressorCtx, mean_estimation_star,
+                        mean_estimation_tree, butterfly_mean)
+
+
+def main():
+    d, n = 512, 8
+    mu = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 100
+    xs = mu + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    y = float(2 * jnp.max(jnp.abs(xs - xs.mean(0))))
+    for q in (4, 16, 64):
+        comp = LatticeQ(q=q)
+        star = mean_estimation_star(xs, y, comp, jax.random.PRNGKey(2),
+                                    CompressorCtx(y=y))
+        bfly = butterfly_mean(xs, y, comp, jax.random.PRNGKey(3),
+                              CompressorCtx(y=y))
+        mse_s = float(jnp.mean((star.est[0] - xs.mean(0)) ** 2))
+        mse_b = float(jnp.mean((bfly.est[0] - xs.mean(0)) ** 2))
+        bits = int(np.log2(q))
+        emit(f"dme_tradeoff_q{q}", 0.0,
+             f"bits/coord={bits};star_mse={mse_s:.3e};butterfly_mse={mse_b:.3e}")
+    tree = mean_estimation_tree(xs, y, m=n, key=jax.random.PRNGKey(4))
+    emit("dme_tree_m8", 0.0,
+         f"mse={float(jnp.mean((tree.est[0]-xs.mean(0))**2)):.3e}")
+
+
+if __name__ == "__main__":
+    main()

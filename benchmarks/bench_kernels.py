@@ -1,0 +1,32 @@
+"""Pallas kernel timings (interpret mode on CPU — correctness-representative,
+not TPU wall-clock) + derived wire-compression factors."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+from repro.core import lattice as L
+
+
+def main():
+    n = 1 << 20
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    u = jax.random.uniform(jax.random.PRNGKey(1), (n,), minval=-.5, maxval=.5)
+    for q in (16, 256):
+        bits = L.bits_for_q(q)
+        t_enc = time_fn(lambda: ops.lattice_encode(x, u, 0.01, q=q), iters=5)
+        w = ops.lattice_encode(x, u, 0.01, q=q)
+        t_dec = time_fn(lambda: ops.lattice_decode(w, x, u, 0.01, q=q), iters=5)
+        comp = 32 / bits
+        emit(f"kernel_lattice_encode_q{q}", t_enc,
+             f"n={n};wire_compression={comp:.0f}x")
+        emit(f"kernel_lattice_decode_q{q}", t_dec, f"n={n}")
+    for d in (1024, 8192):
+        xb = jax.random.normal(jax.random.PRNGKey(2), (64, d))
+        t_k = time_fn(lambda: ops.fwht(xb), iters=5)
+        t_r = time_fn(lambda: ref.fwht_ref(xb), iters=5)
+        emit(f"kernel_fwht_d{d}", t_k, f"ref_us={t_r:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper §8 (Theorems 6/8): empirical error-vs-bits against the
+information-theoretic wall Var >= Omega(y^2 * 2^(-2b/d))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.compressors import LatticeQ, CompressorCtx
+from repro.core import mean_estimation_star
+
+
+def main():
+    d, n, y = 256, 4, 1.0
+    mu = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 50
+    xs = mu + (y / 4) * jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    yb = float(2 * jnp.max(jnp.abs(xs - xs.mean(0))))
+    for q in (4, 16, 64, 256):
+        bits_per_coord = int(np.log2(q))
+        mses = []
+        for t in range(5):
+            res = mean_estimation_star(xs, yb, LatticeQ(q=q),
+                                       jax.random.PRNGKey(10 + t),
+                                       CompressorCtx(y=yb))
+            mses.append(float(jnp.mean((res.est[0] - xs.mean(0)) ** 2)))
+        mse = np.mean(mses)
+        # lower bound per coordinate: c * y^2 * 2^(-2b) (b bits per coord)
+        wall = (yb ** 2) * 2.0 ** (-2 * bits_per_coord) / 48
+        emit(f"lb_q{q}", 0.0,
+             f"mse={mse:.3e};wall={wall:.3e};gap={mse/max(wall,1e-15):.1f}x")
+        assert mse > wall * 0.8, "no scheme may beat the lower bound"
+
+
+if __name__ == "__main__":
+    main()

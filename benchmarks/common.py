@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing, CSV emission, least-squares setup."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def least_squares_problem(S=8192, d=100, seed=0):
+    """Paper §9.2 setup: A ~ N(0,1), b = A w*, w* ~ N(0,1)."""
+    kw, ka = jax.random.split(jax.random.PRNGKey(seed))
+    w_star = jax.random.normal(kw, (d,))
+    A = jax.random.normal(ka, (S, d))
+    b = A @ w_star
+    return A, b, w_star
+
+
+def batch_grads(A, b, w, n_workers: int, key):
+    """Random split of rows into n equal batches; per-worker LS gradients."""
+    S = A.shape[0]
+    perm = jax.random.permutation(key, S)
+    batches = perm.reshape(n_workers, S // n_workers)
+    gs = []
+    for i in range(n_workers):
+        Ai, bi = A[batches[i]], b[batches[i]]
+        gs.append(2 * Ai.T @ (Ai @ w - bi) / Ai.shape[0])
+    return jnp.stack(gs)
+
+
+def full_grad(A, b, w):
+    return 2 * A.T @ (A @ w - b) / A.shape[0]

@@ -1,0 +1,75 @@
+"""§Perf report: compare tagged hillclimb variants against baselines."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.roofline import terms, PEAK_FLOPS, HBM_BW, LINK_BW
+
+
+def load_all(results="results/dryrun"):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(results, "*.json"))):
+        r = json.load(open(p))
+        if r.get("skipped"):
+            continue
+        key = (r["arch"], r["shape"], "2pod" if r["multi_pod"] else "1pod",
+               r.get("tag") or "")
+        out[key] = r
+    return out
+
+
+def coll_total(r):
+    return sum(v for k, v in r["collectives"].items()
+               if not k.endswith("_count"))
+
+
+def grad_sync_bytes(r):
+    """collective-permute bytes = the quantized grad RS payload."""
+    return r["collectives"].get("collective-permute", 0.0)
+
+
+def row(r, base=None):
+    t = terms(r)
+    c = coll_total(r)
+    extras = ""
+    if base is not None:
+        tb = terms(base)
+        cb = coll_total(base)
+        extras = (f" | Δmem {t['t_memory_s']/max(tb['t_memory_s'],1e-12):.2f}x"
+                  f" Δcoll {c/max(cb,1):.2f}x"
+                  f" Δpeak {r['memory']['peak_bytes']/max(base['memory']['peak_bytes'],1):.2f}x")
+    return (f"compute {t['t_compute_s']*1e3:9.2f} ms | mem {t['t_memory_s']*1e3:9.2f} ms | "
+            f"coll {c/LINK_BW*1e3:9.2f} ms | gradwire {grad_sync_bytes(r)/2**20:9.1f} MiB | "
+            f"peak {r['memory']['peak_bytes']/2**30:6.2f} GiB | "
+            f"roofline {t['roofline_fraction']*100:5.1f}%{extras}")
+
+
+def main(results="results/dryrun"):
+    all_ = load_all(results)
+    cells = [
+        ("qwen3-32b", "train_4k", "1pod",
+         ["fp32sync", "", "q4", "rlq", "mb4", "nosp_mb4"]),
+        ("granite-moe-1b-a400m", "train_4k", "1pod",
+         ["fp32sync", "", "nosp"]),
+        ("glm4-9b", "decode_32k", "1pod", ["", "gqa", "gqa_kvq8"]),
+        ("qwen3-32b", "decode_32k", "1pod", ["", "gqa", "gqa_kvq8"]),
+        ("nemotron-4-340b", "decode_32k", "1pod", ["", "gqa", "gqa_kvq8"]),
+    ]
+    for arch, shape, mesh, tags in cells:
+        base = all_.get((arch, shape, mesh, tags[0] if tags[0] else ""))
+        baseline = all_.get((arch, shape, mesh, ""))
+        print(f"\n## {arch} {shape} {mesh}")
+        for tag in tags:
+            r = all_.get((arch, shape, mesh, tag))
+            if r is None:
+                print(f"  {tag or 'baseline':12s}: (missing)")
+                continue
+            ref = baseline if tag else (base if tag == "" else None)
+            print(f"  {tag or 'baseline':12s}: {row(r, baseline if tag else None)}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,138 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs        / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes        / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw              (per chip)
+
+HLO_FLOPs / bytes / collective bytes are already *per device* (the dry-run
+lowers the shard_map-local program and hlo_analysis expands loop trip
+counts), so the "/(chips x ...)" in the assignment's formulas is applied by
+construction.  Hardware constants: TPU v5e-class — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+MODEL_FLOPS = 6*N*D (dense train; N = params, D = tokens) or 6*N_active*D
+(MoE); serve steps use 2*N*D_new + attention cache reads.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one new token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    """Global model flops for the step (then divided by chips)."""
+    n_active = rec["active_params_B"] * 1e9
+    toks = SHAPE_TOKENS[rec["shape"]]
+    if rec["shape"] == "train_4k":
+        return 6.0 * n_active * toks
+    return 2.0 * n_active * toks
+
+
+def chips(rec: dict) -> int:
+    m = rec["mesh"]
+    c = 1
+    for v in m.values():
+        c *= v
+    return c
+
+
+def load(results_dir: str = "results/dryrun", tag: str = "") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        r = json.load(open(p))
+        if r.get("skipped"):
+            r["_file"] = p
+            out.append(r)
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        r["_file"] = p
+        out.append(r)
+    return out
+
+
+def terms(rec: dict) -> dict:
+    coll_bytes = sum(v for k, v in rec["collectives"].items()
+                     if not k.endswith("_count"))
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["traffic_bytes"] / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(rec) / chips(rec)
+    useful = mf / rec["flops"] if rec["flops"] else 0.0
+    bound = max(t_compute, t_memory, t_coll)
+    ideal = mf / PEAK_FLOPS
+    return {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom[0],
+        "model_flops_per_chip": mf, "useful_ratio": useful,
+        "roofline_fraction": (ideal / bound) if bound > 0 else 0.0,
+        "step_lower_bound_s": bound,
+    }
+
+
+def fmt_row(rec: dict) -> str:
+    mesh = "2pod" if rec["multi_pod"] else "1pod"
+    if rec.get("skipped"):
+        return (f"| {rec['arch']} | {rec['shape']} | {mesh} | — | — | — | "
+                f"skip | — | — | {rec['reason'][:40]} |")
+    t = terms(rec)
+    peak = rec["memory"]["peak_bytes"] / 2 ** 30
+    return (f"| {rec['arch']} | {rec['shape']} | {mesh} "
+            f"| {t['t_compute_s']*1e3:.2f} | {t['t_memory_s']*1e3:.2f} "
+            f"| {t['t_collective_s']*1e3:.2f} | {t['dominant']} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']*100:.1f}% "
+            f"| peak {peak:.1f} GiB |")
+
+
+HEADER = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+          "collective (ms) | dominant | MODEL/HLO | roofline frac | note |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(results_dir: str = "results/dryrun", tag: str = ""):
+    recs = load(results_dir, tag)
+    if not recs:
+        print("roofline: no dry-run results found; run "
+              "`python -m repro.launch.dryrun --both-meshes` first")
+        return
+    print("\n# Roofline (from dry-run)\n")
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+    # CSV for EXPERIMENTS.md tooling
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.csv", "w") as f:
+        f.write("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+                "dominant,useful_ratio,roofline_fraction,peak_gib,skipped\n")
+        for r in recs:
+            mesh = "2pod" if r["multi_pod"] else "1pod"
+            if r.get("skipped"):
+                f.write(f"{r['arch']},{r['shape']},{mesh},,,,,,,,1\n")
+                continue
+            t = terms(r)
+            f.write(f"{r['arch']},{r['shape']},{mesh},{t['t_compute_s']:.6e},"
+                    f"{t['t_memory_s']:.6e},{t['t_collective_s']:.6e},"
+                    f"{t['dominant']},{t['useful_ratio']:.4f},"
+                    f"{t['roofline_fraction']:.4f},"
+                    f"{r['memory']['peak_bytes']/2**30:.2f},0\n")
+    print("\nwrote results/roofline.csv")
+
+
+if __name__ == "__main__":
+    import sys
+    main(*(sys.argv[1:] or []))

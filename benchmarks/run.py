@@ -1,0 +1,35 @@
+"""Run every paper-table benchmark.  Prints ``name,us_per_call,derived``."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_norms, bench_variance, bench_convergence,
+                            bench_sublinear, bench_multimachine,
+                            bench_localsgd, bench_nn, bench_power_iteration,
+                            bench_lower_bound, bench_dme, bench_kernels)
+    mods = [bench_norms, bench_variance, bench_convergence, bench_sublinear,
+            bench_multimachine, bench_localsgd, bench_nn,
+            bench_power_iteration, bench_lower_bound, bench_dme,
+            bench_kernels]
+    print("name,us_per_call,derived")
+    failed = []
+    for m in mods:
+        try:
+            m.main()
+        except Exception:
+            failed.append(m.__name__)
+            traceback.print_exc()
+    # roofline table (requires dry-run results; skipped gracefully otherwise)
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except Exception:
+        traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Paper §9.5: distributed power iteration with quantized partial products.
+
+    PYTHONPATH=src python examples/power_iteration.py
+"""
+from benchmarks.bench_power_iteration import run
+
+for n in (2, 8):
+    for name in ("fp32", "lq", "rlq", "qsgd"):
+        align = run(name, n=n, iters=30)
+        print(f"n={n:2d} {name:5s}: |<x, v1>| = {align:.4f}")

@@ -1,0 +1,33 @@
+"""Quickstart: lattice-quantized distributed mean estimation in 30 lines.
+
+The paper's core claim, live: with inputs concentrated far from the origin,
+LQ's error tracks the *pairwise distance* y while norm-based quantizers pay
+for the norm.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LatticeQ, QSGD, CompressorCtx, mean_estimation_star)
+
+n, d = 8, 1024
+mu = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 1000.0   # huge norm
+xs = mu + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n, d))
+y = float(2 * jnp.max(jnp.abs(xs - xs.mean(0))))               # tiny spread
+
+res = mean_estimation_star(xs, y, LatticeQ(q=16), jax.random.PRNGKey(2),
+                           CompressorCtx(y=y))
+err_lq = float(jnp.linalg.norm(res.est[0] - xs.mean(0)))
+
+qs = QSGD(qlevel=16)
+zs = [qs.roundtrip(xs[i], CompressorCtx(), jax.random.PRNGKey(3 + i))
+      for i in range(n)]
+err_qsgd = float(jnp.linalg.norm(jnp.stack(zs).mean(0) - xs.mean(0)))
+
+print(f"input norm        : {float(jnp.linalg.norm(xs[0])):12.2f}")
+print(f"input spread (y)  : {y:12.4f}")
+print(f"LQ (4 bits/coord) : error {err_lq:10.4f}   <- tracks y")
+print(f"QSGD (same bits)  : error {err_qsgd:10.4f}   <- pays for the norm")
+print(f"advantage         : {err_qsgd/err_lq:10.1f}x")
+assert err_lq * 10 < err_qsgd

@@ -1,0 +1,18 @@
+"""End-to-end driver (deliverable b): train a ~100M-param LM with
+lattice-quantized gradient synchronization for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+On this CPU container a full run takes tens of minutes; pass --steps 20 for
+a quick check.  On a pod: --mesh 16x16.
+"""
+import sys
+
+sys.argv = [sys.argv[0], "--preset", "100m", "--steps",
+            sys.argv[sys.argv.index("--steps") + 1] if "--steps" in sys.argv
+            else "300", "--seq", "128", "--batch", "4", "--lr", "1e-3",
+            "--ckpt-dir", "/tmp/repro_train_100m"]
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Per-arch configs (--arch <id>); see registry.py."""

@@ -1,0 +1,14 @@
+"""Core library: the paper's lattice quantization + DME/VR algorithms."""
+from repro.core.lattice import (LatticeSpec, lattice_encode, lattice_decode,
+                                pack_colors, unpack_colors, bits_for_q,
+                                shared_offset, wire_bytes)
+from repro.core.compressors import (Compressor, CompressorCtx, LatticeQ,
+                                    RotatedLatticeQ, QSGD, HadamardUniform,
+                                    TernGrad, EFSign, TopK, PowerSGDLike, FP32,
+                                    make_compressor, ef_roundtrip,
+                                    ALL_COMPRESSORS)
+from repro.core.dme import (mean_estimation_star, mean_estimation_tree,
+                            variance_reduction, butterfly_mean, DMEResult)
+from repro.core import rotation
+from repro.core import error_detect
+from repro.core import sublinear

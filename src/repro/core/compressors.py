@@ -1,0 +1,381 @@
+"""Unified compressor zoo: the paper's method + every baseline it compares to.
+
+All compressors implement the same pure-functional interface so the DME
+algorithms (core/dme.py), the distributed collectives (dist/collectives.py)
+and the benchmarks can swap them freely:
+
+    payload, aux = comp.encode(x, ctx, key)        # what goes on the wire
+    x_hat        = comp.decode(payload, anchor, ctx)
+    nbytes       = comp.wire_bytes(d)              # exact bytes on the wire
+
+``ctx`` is a CompressorCtx carrying the distance bound y (LQ family), the
+shared rotation diagonal, and the shared lattice offset.  ``anchor`` is the
+*decoder's own vector* — only the lattice family uses it (the paper's core
+idea); norm-based baselines ignore it.
+
+Implemented (paper §9 comparisons):
+  lq       — cubic-lattice quantization, LQSGD           (the paper)
+  rlq      — + Walsh-Hadamard rotation, RLQSGD           (the paper, §6)
+  qsgd_l2  — QSGD with l2-norm scaling [Alistarh+ 17]
+  qsgd_linf— QSGD variant scaled by (max-min)/2 around the coordinate mean
+  hadamard — Suresh+ 17: rotate, then uniform stochastic quantization
+  terngrad — Wen+ 17: ternary {-1,0,1}·max|x|
+  efsign   — Seide/Karimireddy sign-SGD with error feedback (stateful)
+  topk     — magnitude top-k sparsification (indices+values)
+  powersgd — Vogels+ 19 rank-r (stateful; benchmark-only, for matrices)
+  fp32     — identity (naive averaging baseline)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lattice as L
+from repro.core import rotation as R
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorCtx:
+    """Per-step shared context (same values on every machine)."""
+    y: Any = 1.0                      # distance bound (LQ family)
+    diag: Optional[Array] = None      # shared rotation diagonal (rlq/hadamard)
+    u: Optional[Array] = None         # shared lattice offset (dithering)
+
+
+class Compressor:
+    """Base: stateless pure-functional compressor."""
+
+    name: str = "base"
+    needs_anchor: bool = False
+
+    def encode(self, x: Array, ctx: CompressorCtx, key: Optional[Array] = None):
+        raise NotImplementedError
+
+    def decode(self, payload, anchor: Optional[Array], ctx: CompressorCtx) -> Array:
+        raise NotImplementedError
+
+    def wire_bytes(self, d: int) -> int:
+        raise NotImplementedError
+
+    def roundtrip(self, x: Array, ctx: CompressorCtx, key: Optional[Array] = None,
+                  anchor: Optional[Array] = None) -> Array:
+        """encode+decode locally (benchmark convenience)."""
+        payload = self.encode(x, ctx, key)
+        return self.decode(payload, x if anchor is None else anchor, ctx)
+
+
+# ---------------------------------------------------------------------------
+# The paper's method
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LatticeQ(Compressor):
+    """LQSGD: cubic lattice, mod-q colors (paper §3/§9.1)."""
+    q: int = 16
+    pack: bool = True
+
+    name = "lq"
+    needs_anchor = True
+
+    @property
+    def spec(self) -> L.LatticeSpec:
+        return L.LatticeSpec(self.q)
+
+    def encode(self, x, ctx, key=None):
+        colors, _ = L.lattice_encode(x, ctx.y, self.spec, key=key, u=ctx.u)
+        if self.pack:
+            return L.pack_colors(colors, self.spec.bits)
+        return colors
+
+    def decode(self, payload, anchor, ctx):
+        colors = payload
+        if self.pack:
+            colors = L.unpack_colors(payload, anchor.shape[-1], self.spec.bits)
+        return L.lattice_decode(colors, anchor, ctx.y, self.spec, u=ctx.u,
+                                dtype=anchor.dtype)
+
+    def wire_bytes(self, d):
+        return L.wire_bytes(d, self.spec.bits) + 4   # + y scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class RotatedLatticeQ(Compressor):
+    """RLQSGD: Walsh-Hadamard rotation + cubic lattice (paper §6).
+
+    ctx.y must be the post-rotation l-inf bound y_R (paper §9.1); encode/
+    decode operate in the rotated space and the decode anchor is rotated
+    symmetrically, so communication cost is identical to LatticeQ on the
+    padded dimension.
+    """
+    q: int = 16
+    pack: bool = True
+    use_kernel: bool = False
+
+    name = "rlq"
+    needs_anchor = True
+
+    @property
+    def spec(self) -> L.LatticeSpec:
+        return L.LatticeSpec(self.q)
+
+    def encode(self, x, ctx, key=None):
+        assert ctx.diag is not None, "rlq needs ctx.diag"
+        xr = R.rotate(x, ctx.diag, use_kernel=self.use_kernel)
+        colors, _ = L.lattice_encode(xr, ctx.y, self.spec, key=key, u=ctx.u)
+        if self.pack:
+            return L.pack_colors(colors, self.spec.bits)
+        return colors
+
+    def decode(self, payload, anchor, ctx):
+        assert ctx.diag is not None
+        d = anchor.shape[-1]
+        ar = R.rotate(anchor, ctx.diag, use_kernel=self.use_kernel)
+        colors = payload
+        if self.pack:
+            colors = L.unpack_colors(payload, ar.shape[-1], self.spec.bits)
+        zr = L.lattice_decode(colors, ar, ctx.y, self.spec, u=ctx.u)
+        return R.unrotate(zr, ctx.diag, d, use_kernel=self.use_kernel).astype(anchor.dtype)
+
+    def wire_bytes(self, d):
+        return L.wire_bytes(R.next_pow2(d), self.spec.bits) + 4
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def _stochastic_levels(t: Array, levels: int, key: Optional[Array]) -> Array:
+    """Stochastically round t in [0, levels] to an integer level."""
+    lo = jnp.floor(t)
+    if key is None:
+        return jnp.round(t)
+    frac = t - lo
+    return lo + (jax.random.uniform(key, t.shape) < frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    """QSGD [4]: x_hat = ||x|| * sign(x) * level/qlevel, stochastic levels.
+
+    norm="l2" is the original; norm="linf" scales by max|x| (the QSGD-LInf
+    variant from the paper's experiments).
+    """
+    qlevel: int = 8
+    norm: str = "l2"
+
+    needs_anchor = False
+
+    @property
+    def name(self):  # type: ignore[override]
+        return f"qsgd_{self.norm}"
+
+    def encode(self, x, ctx, key=None):
+        xf = x.astype(jnp.float32)
+        if self.norm == "l2":
+            scale = jnp.linalg.norm(xf, axis=-1, keepdims=True)
+        else:
+            scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+        scale = jnp.maximum(scale, 1e-30)
+        t = jnp.abs(xf) / scale * self.qlevel
+        lev = _stochastic_levels(t, self.qlevel, key)
+        return {"scale": scale, "sign": jnp.sign(xf), "lev": lev}
+
+    def decode(self, payload, anchor, ctx):
+        out = payload["scale"] * payload["sign"] * payload["lev"] / self.qlevel
+        return out.astype(anchor.dtype if anchor is not None else jnp.float32)
+
+    def wire_bytes(self, d):
+        bits = int(np.ceil(np.log2(self.qlevel + 1))) + 1   # level + sign
+        return (d * bits + 7) // 8 + 8                      # + float64 norm (paper §9.2)
+
+
+@dataclasses.dataclass(frozen=True)
+class HadamardUniform(Compressor):
+    """Suresh et al. 17: rotate with HD, uniform stochastic k-level quantize."""
+    levels: int = 8
+
+    name = "hadamard"
+    needs_anchor = False
+
+    def encode(self, x, ctx, key=None):
+        assert ctx.diag is not None, "hadamard needs ctx.diag"
+        xr = R.rotate(x, ctx.diag)
+        mn = jnp.min(xr, axis=-1, keepdims=True)
+        mx = jnp.max(xr, axis=-1, keepdims=True)
+        span = jnp.maximum(mx - mn, 1e-30)
+        t = (xr - mn) / span * (self.levels - 1)
+        lev = _stochastic_levels(t, self.levels - 1, key)
+        return {"mn": mn, "span": span, "lev": lev, "d": x.shape[-1]}
+
+    def decode(self, payload, anchor, ctx):
+        xr = payload["mn"] + payload["lev"] / (self.levels - 1) * payload["span"]
+        out = R.unrotate(xr, ctx.diag, payload["d"])
+        return out.astype(anchor.dtype if anchor is not None else jnp.float32)
+
+    def wire_bytes(self, d):
+        bits = int(np.ceil(np.log2(self.levels)))
+        return (R.next_pow2(d) * bits + 7) // 8 + 16
+
+
+@dataclasses.dataclass(frozen=True)
+class TernGrad(Compressor):
+    name = "terngrad"
+    needs_anchor = False
+
+    def encode(self, x, ctx, key=None):
+        xf = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), 1e-30)
+        t = jnp.abs(xf) / scale
+        b = (jax.random.uniform(key, xf.shape) < t) if key is not None else jnp.round(t)
+        return {"scale": scale, "t": jnp.sign(xf) * b}
+
+    def decode(self, payload, anchor, ctx):
+        out = payload["scale"] * payload["t"]
+        return out.astype(anchor.dtype if anchor is not None else jnp.float32)
+
+    def wire_bytes(self, d):
+        return (d * 2 + 7) // 8 + 4
+
+
+@dataclasses.dataclass(frozen=True)
+class EFSign(Compressor):
+    """EF-SignSGD [Karimireddy+ 19].  Stateful: call via ef_roundtrip."""
+    name = "efsign"
+    needs_anchor = False
+
+    def encode(self, x, ctx, key=None):
+        xf = x.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(xf), axis=-1, keepdims=True)
+        return {"scale": scale, "sign": jnp.sign(xf)}
+
+    def decode(self, payload, anchor, ctx):
+        out = payload["scale"] * payload["sign"]
+        return out.astype(anchor.dtype if anchor is not None else jnp.float32)
+
+    def wire_bytes(self, d):
+        return (d + 7) // 8 + 4
+
+
+def ef_roundtrip(comp: Compressor, x: Array, err: Array, ctx: CompressorCtx,
+                 key: Optional[Array] = None) -> tuple[Array, Array]:
+    """Error-feedback wrapper: compress (x + err), carry the residual."""
+    corrected = x + err
+    x_hat = comp.roundtrip(corrected, ctx, key)
+    return x_hat, corrected - x_hat
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    frac: float = 0.01
+    name = "topk"
+    needs_anchor = False
+
+    def k_of(self, d: int) -> int:
+        return max(1, int(d * self.frac))
+
+    def encode(self, x, ctx, key=None):
+        xf = x.astype(jnp.float32)
+        k = self.k_of(x.shape[-1])
+        vals, idx = jax.lax.top_k(jnp.abs(xf), k)
+        sel = jnp.take_along_axis(xf, idx, axis=-1)
+        return {"idx": idx, "vals": sel, "d": x.shape[-1]}
+
+    def decode(self, payload, anchor, ctx):
+        d = payload["d"]
+        shape = payload["vals"].shape[:-1] + (d,)
+        out = jnp.zeros(shape, jnp.float32)
+        out = jnp.put_along_axis(out, payload["idx"], payload["vals"], axis=-1,
+                                 inplace=False)
+        return out.astype(anchor.dtype if anchor is not None else jnp.float32)
+
+    def wire_bytes(self, d):
+        return self.k_of(d) * 8   # 4B idx + 4B val
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerSGDLike(Compressor):
+    """Rank-r one-power-iteration compressor for (m, n) matrices.
+
+    Benchmark-only (paper Exp. 7 table comparison); operates on a 2D shape
+    hint via ctx-free reshape of the flat vector to (m, d//m).
+    """
+    rank: int = 4
+    rows: int = 64
+    name = "powersgd"
+    needs_anchor = False
+
+    def _shape(self, d: int) -> tuple[int, int]:
+        m = min(self.rows, d)
+        while d % m:
+            m -= 1
+        return m, d // m
+
+    def encode(self, x, ctx, key=None):
+        d = x.shape[-1]
+        m, n = self._shape(d)
+        M = x.astype(jnp.float32).reshape(x.shape[:-1] + (m, n))
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        Q = jax.random.normal(key, x.shape[:-1] + (n, self.rank), jnp.float32)
+        P = M @ Q
+        P, _ = jnp.linalg.qr(P)
+        Qt = jnp.swapaxes(M, -1, -2) @ P
+        return {"P": P, "Q": Qt, "d": d}
+
+    def decode(self, payload, anchor, ctx):
+        M = payload["P"] @ jnp.swapaxes(payload["Q"], -1, -2)
+        out = M.reshape(M.shape[:-2] + (payload["d"],))
+        return out.astype(anchor.dtype if anchor is not None else jnp.float32)
+
+    def wire_bytes(self, d):
+        m, n = self._shape(d)
+        return (m + n) * self.rank * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class FP32(Compressor):
+    name = "fp32"
+    needs_anchor = False
+
+    def encode(self, x, ctx, key=None):
+        return x.astype(jnp.float32)
+
+    def decode(self, payload, anchor, ctx):
+        return payload.astype(anchor.dtype if anchor is not None else jnp.float32)
+
+    def wire_bytes(self, d):
+        return d * 4
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def make_compressor(name: str, **kw) -> Compressor:
+    name = name.lower()
+    table = {
+        "lq": LatticeQ,
+        "rlq": RotatedLatticeQ,
+        "qsgd_l2": partial(QSGD, norm="l2"),
+        "qsgd_linf": partial(QSGD, norm="linf"),
+        "hadamard": HadamardUniform,
+        "terngrad": TernGrad,
+        "efsign": EFSign,
+        "topk": TopK,
+        "powersgd": PowerSGDLike,
+        "fp32": FP32,
+    }
+    if name not in table:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(table)}")
+    return table[name](**kw)
+
+
+ALL_COMPRESSORS = ("lq", "rlq", "qsgd_l2", "qsgd_linf", "hadamard", "terngrad",
+                   "efsign", "topk", "powersgd", "fp32")

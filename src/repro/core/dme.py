@@ -1,0 +1,173 @@
+"""Paper algorithms: MeanEstimation / VarianceReduction (§4).
+
+These are the *faithful* reference implementations over a stacked input
+``xs: (n, d)`` — n machines' vectors — used by tests and by the paper-table
+benchmarks.  The production path (quantized collectives inside shard_map)
+lives in repro/dist and is validated against these.
+
+Algorithm 3 (star):   random leader gathers colors, decodes against its own
+input, averages, re-broadcasts quantized; everyone decodes against their own
+input.
+
+Algorithm 4 (tree):   sample T = min(m, n) machines; binary tree over them;
+average + re-quantize with Q_{y/m^2, m^3} at every internal node; broadcast.
+
+VarianceReduction reduces to MeanEstimation with y = 2*sigma*sqrt(alpha*n)
+(Theorem 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressors import Compressor, CompressorCtx, LatticeQ
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class DMEResult:
+    est: Array                 # (n, d) per-machine outputs (identical on success)
+    bits_per_machine: Array    # (n,) wire bits sent by each machine
+    decode_ok: Array           # scalar bool: all decodes consistent
+
+
+def _keys(key: Array, n: int):
+    return jax.random.split(key, n)
+
+
+def mean_estimation_star(xs: Array, y, comp: Compressor, key: Array,
+                         ctx: Optional[CompressorCtx] = None,
+                         leader: Optional[int] = None) -> DMEResult:
+    """Paper Algorithm 3 on inputs xs: (n, d)."""
+    n, d = xs.shape
+    ctx = dataclasses.replace(ctx or CompressorCtx(), y=y)
+    kl, kb, *ks = _keys(key, n + 2)
+    if leader is None:
+        leader = int(jax.random.randint(kl, (), 0, n))
+    x_leader = xs[leader]
+
+    # Phase 1: everyone -> leader; leader decodes against its own input.
+    decoded = []
+    for v in range(n):
+        payload = comp.encode(xs[v], ctx, ks[v])
+        decoded.append(comp.decode(payload, x_leader, ctx))
+    mu_hat = jnp.mean(jnp.stack(decoded), axis=0)
+
+    # Phase 2: leader -> everyone; each decodes against its own input.
+    payload = comp.encode(mu_hat, ctx, kb)
+    outs = jnp.stack([comp.decode(payload, xs[v], ctx) for v in range(n)])
+
+    per_machine = comp.wire_bytes(d) * 8
+    bits = jnp.full((n,), per_machine, jnp.int32)
+    # Leader additionally broadcasts (n-1 sends in a naive star; a broadcast
+    # tree makes it O(1) per machine — we report the per-machine payload).
+    ok = jnp.all(jnp.abs(outs - outs[0]) <= 1e-6 * (1.0 + jnp.abs(outs[0])))
+    return DMEResult(outs, bits, ok)
+
+
+def mean_estimation_tree(xs: Array, y, m: int, key: Array,
+                         q_override: Optional[int] = None,
+                         ctx: Optional[CompressorCtx] = None) -> DMEResult:
+    """Paper Algorithm 4: binary-tree aggregation with Q_{y/m^2, m^3}.
+
+    For practicality q = m^3 is capped at 2^16 colors per coordinate (the
+    paper's asymptotic statement allows any q = Omega(1); the cap only
+    affects constants).
+    """
+    n, d = xs.shape
+    t = min(m, n)
+    # power-of-two leaf count (paper: "we may assume it is a power of 2")
+    t = 1 << int(np.floor(np.log2(max(t, 1))))
+    kperm, key = jax.random.split(key)
+    perm = jax.random.permutation(kperm, n)[:t]
+    leaves = xs[perm]
+
+    # Paper: Q_{y/m^2, m^3} — lattice granularity eps = y/m^2, q = m^3 colors.
+    # On the cubic lattice (side s = 2*y/(q-1), decode margin (q-1)s/2 = y)
+    # q = m^3 already gives per-hop error s/2 = y/(m^3-1) <= paper's 7y/m^2
+    # while the decode margin stays the full distance bound y.
+    q = q_override or min(int(m) ** 3, 1 << 16)
+    comp = LatticeQ(q=q)
+    ctx = dataclasses.replace(ctx or CompressorCtx(), y=y)
+
+    bits_total = np.zeros((n,), np.int64)
+    level = leaves
+    depth = 0
+    while level.shape[0] > 1:
+        key, *ks = _keys(key, level.shape[0] // 2 + 1)
+        nxt = []
+        for i in range(level.shape[0] // 2):
+            a, b = level[2 * i], level[2 * i + 1]
+            payload = comp.encode(a, ctx, ks[i])
+            a_dec = comp.decode(payload, b, ctx)   # child a -> parent (anchored at b)
+            nxt.append((a_dec + b) * 0.5)
+        level = jnp.stack(nxt)
+        depth += 1
+    root = level[0]
+
+    key, kb = jax.random.split(key)
+    payload = comp.encode(root, ctx, kb)
+    outs = jnp.stack([comp.decode(payload, xs[v], ctx) for v in range(n)])
+    per_machine = comp.wire_bytes(d) * 8
+    bits = jnp.full((n,), per_machine, jnp.int32)
+    ok = jnp.all(jnp.abs(outs - outs[0]) <= 1e-6 * (1.0 + jnp.abs(outs[0])))
+    return DMEResult(outs, bits, ok)
+
+
+def variance_reduction(xs: Array, sigma: float, comp: Compressor, key: Array,
+                       alpha: float = 4.0,
+                       ctx: Optional[CompressorCtx] = None,
+                       topology: str = "star") -> DMEResult:
+    """Theorem 17 reduction: VR via ME with y = 2*sigma*sqrt(alpha*n)."""
+    n = xs.shape[0]
+    y = 2.0 * sigma * float(np.sqrt(alpha * n))
+    if topology == "star":
+        return mean_estimation_star(xs, y, comp, key, ctx)
+    return mean_estimation_tree(xs, y, m=n, key=key, ctx=ctx)
+
+
+def butterfly_mean(xs: Array, y, comp: Compressor, key: Array,
+                   ctx: Optional[CompressorCtx] = None) -> DMEResult:
+    """TPU-native analogue of the tree (DESIGN §2): recursive doubling.
+
+    log2(n) rounds; in round k, machine i exchanges quantized estimates with
+    machine i XOR 2^k and averages.  Error accumulates O(eps log n) like the
+    paper's tree; per-machine bits are log2(n) * d * log2(q) — the price of
+    every machine learning the mean with no broadcast phase.
+
+    Reference implementation of dist/collectives.py:quantized_butterfly.
+    """
+    n, d = xs.shape
+    assert n & (n - 1) == 0, "butterfly needs power-of-two n"
+    cur = xs
+    rounds = int(np.log2(n))
+    bits = 0
+    for r in range(rounds):
+        # Shared-randomness dither (paper §9.1): encode is *deterministic*
+        # given (x, u), so machines holding equal values produce identical
+        # lattice points — after log n rounds all outputs are bitwise equal
+        # (the paper's common-output requirement), with unbiasedness coming
+        # from the shared offset u.
+        key, ku = jax.random.split(key)
+        from repro.core.lattice import shared_offset
+        u = shared_offset(ku, (d,))
+        rctx = dataclasses.replace(ctx or CompressorCtx(), y=y, u=u)
+        stride = 1 << r
+        payloads = [comp.encode(cur[i], rctx) for i in range(n)]
+        nxt = []
+        for i in range(n):
+            j = i ^ stride
+            zii = comp.decode(payloads[i], cur[i], rctx)   # own lattice point
+            zij = comp.decode(payloads[j], cur[i], rctx)   # partner's
+            nxt.append((zii + zij) * 0.5)
+        cur = jnp.stack(nxt)
+        bits += comp.wire_bytes(d) * 8
+        # distances shrink every round; a production impl may shrink y too.
+    outs = cur
+    ok = jnp.all(jnp.abs(outs - outs[0]) <= 1e-5 * (1.0 + jnp.abs(outs[0])))
+    return DMEResult(outs, jnp.full((n,), bits, jnp.int32), ok)

@@ -1,0 +1,219 @@
+"""Cubic-lattice quantization (paper §3, §6, §9.1).
+
+The practical scheme from the paper ("The Algorithm in Practice", §9.1):
+
+* The lattice is the scaled cubic lattice ``s·Z^d`` (optionally offset by a
+  shared-random shift ``u·s`` with ``u ~ U[-1/2, 1/2)^d``; with shared
+  randomness, *nearest-point* rounding after the shift is already unbiased).
+* Encoding a vector ``x``: find lattice coordinates ``k = round(x/s - u)``
+  (or stochastic rounding when no shared offset is available), and transmit
+  the *color* ``c = k mod q`` — ``log2(q)`` bits per coordinate.
+* Decoding against an anchor ``a`` (the receiver's own input): the unique
+  lattice point with color ``c`` nearest to ``a``:
+      k_a   = round(a/s - u)
+      k_hat = k_a + centered_mod(c - k_a, q)
+      z     = (k_hat + u) * s
+  Correct whenever ``|x - a|_inf <= (q-1)s/2`` coordinate-wise (the cubic-
+  lattice sharpening of Lemma 15; see §9.1: side length s = 2y/(q-1)).
+
+Bit accounting: a color in ``[0, q)`` takes ``ceil(log2 q)`` bits; colors are
+bit-packed into uint32 words by :mod:`repro.kernels` on the wire.
+
+Everything here is pure jnp (jit/vjp/shard_map-safe).  The Pallas kernels in
+``repro/kernels`` implement the fused HBM-bandwidth-optimal versions of
+``encode``/``decode``; ``repro/kernels/ref.py`` delegates to this module as
+the oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Supported color bit-widths for packing (colors per uint32 word).
+PACK_BITS = (1, 2, 4, 8, 16)
+
+
+def bits_for_q(q: int) -> int:
+    """Bits per coordinate for q color classes, rounded up to a packable width."""
+    raw = max(1, int(np.ceil(np.log2(q))))
+    for b in PACK_BITS:
+        if b >= raw:
+            return b
+    raise ValueError(f"q={q} needs {raw} bits/coord; max supported is 16")
+
+
+@dataclasses.dataclass(frozen=True)
+class LatticeSpec:
+    """Static parameters of a cubic-lattice quantizer.
+
+    Attributes:
+      q: number of color classes (mod-q coloring).  The wire cost is
+         ``bits_for_q(q)`` bits per coordinate.
+      scale_rule: how the lattice side ``s`` is derived from the distance
+         bound ``y``:  s = 2*y / (q-1)   (paper §9.1).
+    """
+
+    q: int
+
+    def __post_init__(self):
+        if self.q < 2:
+            raise ValueError("q must be >= 2")
+
+    @property
+    def bits(self) -> int:
+        return bits_for_q(self.q)
+
+    def side(self, y: Array | float) -> Array:
+        """Lattice side length s for distance bound y (paper: s = 2y/(q-1))."""
+        return jnp.asarray(y, jnp.float32) * (2.0 / (self.q - 1))
+
+    def wire_bits(self, d: int) -> int:
+        """Payload bits for a d-dim vector (excl. the O(1) scalar y)."""
+        return d * self.bits
+
+
+def shared_offset(key: Array, shape: tuple[int, ...]) -> Array:
+    """Shared-randomness lattice offset u ~ U[-1/2, 1/2)^d (paper §9.1)."""
+    return jax.random.uniform(key, shape, jnp.float32, -0.5, 0.5)
+
+
+def _to_f32(x: Array) -> Array:
+    return x.astype(jnp.float32)
+
+
+def encode_coords(x: Array, s: Array | float, u: Optional[Array] = None,
+                  *, rbits: Optional[Array] = None) -> Array:
+    """Map x to integer lattice coordinates, unbiasedly.
+
+    Two unbiasedness mechanisms (paper §3.2 / §9.1):
+      * shared offset ``u`` (dithering): k = round(x/s - u); decoded point
+        (k+u)s has E[.] = x over u.  Preferred: deterministic given (x, u).
+      * stochastic rounding with explicit random bits ``rbits`` in [0,1):
+        k = floor(x/s) + (frac > rbits).  Used when no shared randomness.
+
+    Exactly one of ``u`` / ``rbits`` may be given; with neither, plain
+    nearest-rounding (biased; for tests only).
+    """
+    t = _to_f32(x) / jnp.asarray(s, jnp.float32)
+    if u is not None and rbits is not None:
+        raise ValueError("pass at most one of u, rbits")
+    if u is not None:
+        return jnp.round(t - u).astype(jnp.int32)
+    if rbits is not None:
+        lo = jnp.floor(t)
+        frac = t - lo
+        return (lo + (frac > rbits)).astype(jnp.int32)
+    return jnp.round(t).astype(jnp.int32)
+
+
+def color_of(k: Array, q: int) -> Array:
+    """Mod-q color class of integer lattice coordinates (paper §3.1)."""
+    return jnp.mod(k, q).astype(jnp.uint32)
+
+
+def centered_mod(delta: Array, q: int) -> Array:
+    """Map integers to the representative in [-q/2, q/2) of their mod-q class."""
+    half = q // 2
+    return jnp.mod(delta + half, q) - half
+
+
+def decode_coords(colors: Array, anchor: Array, s: Array | float,
+                  u: Optional[Array] = None, *, q: int) -> Array:
+    """Nearest lattice point to ``anchor`` whose color matches (paper Alg. 2)."""
+    t = _to_f32(anchor) / jnp.asarray(s, jnp.float32)
+    if u is not None:
+        t = t - u
+    k_a = jnp.round(t).astype(jnp.int32)
+    delta = centered_mod(colors.astype(jnp.int32) - k_a, q)
+    return k_a + delta
+
+
+def coords_to_point(k: Array, s: Array | float, u: Optional[Array] = None,
+                    dtype=jnp.float32) -> Array:
+    t = k.astype(jnp.float32)
+    if u is not None:
+        t = t + u
+    return (t * jnp.asarray(s, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# One-call encode/decode API (unpacked colors; packing lives in kernels/)
+# ---------------------------------------------------------------------------
+
+def lattice_encode(x: Array, y: Array | float, spec: LatticeSpec,
+                   key: Optional[Array] = None,
+                   u: Optional[Array] = None) -> tuple[Array, Array]:
+    """Encode x given distance bound y.  Returns (colors uint32, side s).
+
+    If ``u`` is given it is the shared offset; else if ``key`` is given,
+    stochastic rounding is used; else nearest rounding.
+    """
+    s = spec.side(y)
+    rbits = None
+    if u is None and key is not None:
+        rbits = jax.random.uniform(key, x.shape, jnp.float32)
+    k = encode_coords(x, s, u, rbits=rbits)
+    return color_of(k, spec.q), s
+
+
+def lattice_decode(colors: Array, anchor: Array, y: Array | float,
+                   spec: LatticeSpec, u: Optional[Array] = None,
+                   dtype=jnp.float32) -> Array:
+    """Decode colors against the receiver's anchor vector."""
+    s = spec.side(y)
+    k = decode_coords(colors, anchor, s, u, q=spec.q)
+    return coords_to_point(k, s, u, dtype)
+
+
+def decode_failure(z: Array, anchor: Array, y: Array | float) -> Array:
+    """Error-detection surrogate (paper §5, step-level policy; DESIGN §2).
+
+    If the decoded point is farther from the anchor than the distance bound
+    plus one lattice cell, the mod-q class wrapped: the true point cannot be
+    recovered.  Returns a scalar bool (any coordinate failed).
+    """
+    yv = jnp.asarray(y, jnp.float32)
+    return jnp.any(jnp.abs(_to_f32(z) - _to_f32(anchor)) > 1.5 * yv)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (jnp reference; the Pallas kernel fuses this with encode)
+# ---------------------------------------------------------------------------
+
+def packed_len(n: int, bits: int) -> int:
+    per = 32 // bits
+    return (n + per - 1) // per
+
+
+def pack_colors(colors: Array, bits: int) -> Array:
+    """Pack uint32 colors (< 2**bits) into uint32 words, little-endian lanes."""
+    assert bits in PACK_BITS, bits
+    per = 32 // bits
+    n = colors.shape[-1]
+    pad = (-n) % per
+    c = jnp.pad(colors.astype(jnp.uint32), [(0, 0)] * (colors.ndim - 1) + [(0, pad)])
+    c = c.reshape(c.shape[:-1] + (c.shape[-1] // per, per))
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)
+    return jnp.bitwise_or.reduce(c << shifts, axis=-1)
+
+
+def unpack_colors(words: Array, n: int, bits: int) -> Array:
+    """Inverse of pack_colors; returns first n colors."""
+    assert bits in PACK_BITS, bits
+    per = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)
+    c = (words[..., :, None] >> shifts) & mask
+    c = c.reshape(words.shape[:-1] + (words.shape[-1] * per,))
+    return c[..., :n]
+
+
+def wire_bytes(n: int, bits: int) -> int:
+    """Bytes on the wire for n coordinates at `bits` bits each (packed)."""
+    return packed_len(n, bits) * 4

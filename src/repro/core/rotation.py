@@ -1,0 +1,82 @@
+"""Structured random rotation HD (paper §6, RLQSGD).
+
+H is the normalized Walsh-Hadamard matrix, D a random ±1 diagonal generated
+from shared randomness.  ``rotate(x) = H @ (D * x)``; the inverse is
+``D * (H @ x)`` since H^-1 = H and D^-1 = D.
+
+For non-power-of-two d we pad with zeros to the next power of two (standard
+practice; unbiasedness and the ℓ∞/ℓ2 bound of Lemma 24 are preserved on the
+embedded subspace).
+
+The O(d log d) transform is implemented three ways:
+  * ``fwht_jnp``: pure-jnp reference (oracle for the Pallas kernel);
+  * ``repro.kernels.ops.fwht``: Pallas TPU kernel (VMEM-tiled butterflies);
+  * ``rotate(..., use_kernel=True)`` dispatches to the kernel.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n - 1).bit_length())
+
+
+def fwht_jnp(x: Array) -> Array:
+    """Normalized fast Walsh-Hadamard transform over the last axis.
+
+    Last axis length must be a power of two.  O(d log d) adds; orthonormal
+    (preserves l2 norm), involutive.
+    """
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"fwht needs power-of-two dim, got {d}"
+    orig_dtype = x.dtype
+    v = x.astype(jnp.float32)
+    h = 1
+    while h < d:
+        v = v.reshape(x.shape[:-1] + (d // (2 * h), 2, h))
+        a = v[..., 0, :]
+        b = v[..., 1, :]
+        v = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    v = v.reshape(x.shape[:-1] + (d,)) * jnp.float32(1.0 / np.sqrt(d))
+    return v.astype(orig_dtype)
+
+
+def rademacher_diag(key: Array, d: int) -> Array:
+    """Shared-randomness ±1 diagonal D (costs d bits to agree on; paper §6)."""
+    return jax.random.rademacher(key, (d,), jnp.float32)
+
+
+def _fwht(x: Array, use_kernel: bool) -> Array:
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.fwht(x)
+    return fwht_jnp(x)
+
+
+def rotate(x: Array, diag: Array, *, use_kernel: bool = False) -> Array:
+    """Apply HD to the last axis (zero-padding to a power of two)."""
+    d = x.shape[-1]
+    dp = next_pow2(d)
+    v = x.astype(jnp.float32) * diag[:d]
+    if dp != d:
+        v = jnp.pad(v, [(0, 0)] * (x.ndim - 1) + [(0, dp - d)])
+    return _fwht(v, use_kernel)
+
+
+def unrotate(x: Array, diag: Array, d: int, *, use_kernel: bool = False) -> Array:
+    """Apply (HD)^-1 = D H; returns the first d coordinates."""
+    v = _fwht(x, use_kernel)
+    return v[..., :d] * diag[:d]
+
+
+def rotation_keypair(key: Array, d: int) -> Array:
+    """Generate the diagonal once per run (shared across machines)."""
+    return rademacher_diag(key, next_pow2(d))

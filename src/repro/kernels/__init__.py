@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's hot spots (validated via interpret mode).
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ref.py (jnp
+oracle), ops.py (jit'd public wrappers with fallbacks).
+"""
+from repro.kernels import ops

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: flash attention forward (online softmax).
+
+The §Roofline analysis shows the memory term of every train/prefill cell is
+dominated by materialized (Sq, Sk) attention scores; this kernel keeps them
+in VMEM: per (batch*head, q-block) grid cell, it streams K/V blocks and
+maintains the running (max, sum, output) triple — O(Sq*D) HBM traffic
+instead of O(Sq*Sk).
+
+Forward-only (inference/prefill; the training path keeps the jnp attention
+whose backward autodiffs — a bwd kernel is the natural next perf iteration).
+Validated against ref.flash_attention_ref in interpret mode
+(tests/test_flash_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
+                  scale: float, causal: bool):
+    j = pl.program_id(1)                         # q-block index
+    q = q_ref[0].astype(jnp.float32) * scale     # (bq, d)
+    d = q.shape[-1]
+    nkb = sk // bk
+
+    def body(kb, carry):
+        m_i, l_i, acc = carry
+        k = k_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)   # (bk, d)
+        v = v_ref[0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T                                               # (bq, bk)
+        if causal:
+            qpos = j * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), -1e30, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+    # causal: skip key blocks entirely above the diagonal
+    upper = nkb if not causal else jnp.minimum(
+        nkb, (j + 1) * bq // bk + (1 if bq % bk or True else 0))
+    m_i, l_i, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK,
+                           interpret: bool = True) -> jax.Array:
+    """q: (BH, Sq, D); k/v: (BH, Sk, D).  Returns (BH, Sq, D).
+
+    Sq must be divisible by bq and Sk by bk (callers pad; repro.kernels.ops
+    handles it).
+    """
+    BH, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    scale = float(1.0 / np.sqrt(d))
+    grid = (BH, sq // bq)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, sk=sk, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, sk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused lattice decode (paper Alg. 2 / §9.1 hot path).
+
+Fuses: unpack -> anchor coordinates -> centered-mod nearest-color match ->
+lattice point, in one pass.  Reads the packed uint32 words (the wire payload)
+plus the anchor once, writes the decoded vector once.
+
+    k_a   = round(anchor/s - u)
+    k     = k_a + ((c - k_a + q/2) mod q) - q/2     [mod via AND, q = 2^bits']
+    z     = (k + u) * s
+
+An optional fused epilogue computes the running average used by the
+quantized reduce-scatter (dist/collectives.py):  out = (z + acc*cnt)/(cnt+1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COLS = 2048
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _decode_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int, bits: int,
+                   avg_cnt: Optional[int]):
+    s = s_ref[0, 0]
+    per = 32 // bits
+    w = w_ref[...]                                    # (bm, COLS//per) uint32
+    bm = w.shape[0]
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(bits))
+    c = ((w[:, :, None] >> shifts) & jnp.uint32(q - 1)).astype(jnp.int32)
+    c = c.reshape(bm, -1)                             # (bm, COLS) colors
+    anchor = a_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    t = anchor / s - u
+    k_a = jnp.round(t).astype(jnp.int32)
+    delta = jnp.bitwise_and(c - k_a + (q // 2), q - 1) - (q // 2)
+    z = ((k_a + delta).astype(jnp.float32) + u) * s
+    if avg_cnt is not None:
+        z = (z + anchor * avg_cnt) * (1.0 / (avg_cnt + 1))
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "bits", "n", "avg_cnt",
+                                             "block_rows", "interpret"))
+def lattice_decode_pallas(words: jax.Array, anchor: jax.Array, u: jax.Array,
+                          s: jax.Array, *, q: int, bits: int, n: int,
+                          avg_cnt: Optional[int] = None,
+                          block_rows: int = DEFAULT_BLOCK_ROWS,
+                          interpret: bool = True) -> jax.Array:
+    """Decode packed words against flat anchor (N,).  Returns z (N,) f32.
+
+    avg_cnt: if given, fuse the running-average epilogue
+             out = (z + anchor*avg_cnt)/(avg_cnt+1)  (ring reduce-scatter).
+    """
+    assert q & (q - 1) == 0 and bits in (2, 4, 8, 16)
+    per = 32 // bits
+    tile = block_rows * COLS
+    pad = (-n) % tile
+    af = jnp.pad(anchor.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
+    uf = jnp.pad(u.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
+    rows = af.shape[0]
+    wpad = rows * (COLS // per) - words.shape[0]
+    wf = jnp.pad(words, (0, wpad)).reshape(rows, COLS // per)
+    s2 = jnp.asarray(s, jnp.float32).reshape(1, 1)
+    bm = block_rows
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, q=q, bits=bits, avg_cnt=avg_cnt),
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, COLS // per), lambda i: (i, 0)),
+            pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
+        interpret=interpret,
+    )(wf, af, uf, s2)
+    return out.reshape(-1)[:n]

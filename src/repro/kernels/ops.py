@@ -1,0 +1,72 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On this CPU container kernels run in interpret mode (the Pallas body executes
+under the interpreter); on a real TPU backend they compile to Mosaic.  The
+``interpret`` decision is made once per call from the default backend, and
+every wrapper falls back to the jnp reference for shapes the kernels don't
+cover (non-power-of-two FWHT dims, q not a power of two, tiny inputs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lattice as L
+from repro.kernels import ref as _ref
+from repro.kernels.fwht import fwht_pallas, MAX_D
+from repro.kernels.lattice_encode import lattice_encode_pallas
+from repro.kernels.lattice_decode import lattice_decode_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Normalized Walsh-Hadamard over the last axis (kernel when possible)."""
+    d = x.shape[-1]
+    if not _pow2(d) or d < 4 or d > MAX_D:
+        return _ref.fwht_ref(x)
+    return fwht_pallas(x, interpret=_interpret())
+
+
+def lattice_encode(x: jax.Array, u: jax.Array, s, *, q: int) -> jax.Array:
+    """Fused encode of flat x -> packed uint32 words."""
+    bits = L.bits_for_q(q)
+    if not _pow2(q) or bits not in (2, 4, 8, 16) or x.size < 32:
+        return _ref.lattice_encode_ref(x, u, s, q=q, bits=bits)
+    return lattice_encode_pallas(x, u, jnp.asarray(s), q=q, bits=bits,
+                                 interpret=_interpret())
+
+
+def lattice_decode(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
+                   *, q: int, avg_cnt: Optional[int] = None) -> jax.Array:
+    """Fused decode (optionally with the running-average epilogue)."""
+    bits = L.bits_for_q(q)
+    n = anchor.shape[0]
+    if not _pow2(q) or bits not in (2, 4, 8, 16) or n < 32:
+        return _ref.lattice_decode_ref(words, anchor, u, s, q=q, bits=bits,
+                                       n=n, avg_cnt=avg_cnt)
+    return lattice_decode_pallas(words, anchor, u, jnp.asarray(s), q=q,
+                                 bits=bits, n=n, avg_cnt=avg_cnt,
+                                 interpret=_interpret())
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True) -> jax.Array:
+    """Flash attention fwd over (BH, S, D) tensors (pads to block multiples)."""
+    BH, sq, d = q.shape
+    sk = k.shape[1]
+    bq = min(256, sq)
+    bk = min(256, sk)
+    if sq % bq or sk % bk or sq < 16:
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=_interpret())

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These delegate to repro.core — the same code paths the DME algorithms and
+tests use — so a kernel<->ref allclose check certifies the kernel against
+the whole library's semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lattice as L
+from repro.core import rotation as R
+
+
+def fwht_ref(x: jax.Array) -> jax.Array:
+    """Normalized Walsh-Hadamard transform over the last axis."""
+    return R.fwht_jnp(x)
+
+
+def lattice_encode_ref(x: jax.Array, u: jax.Array, s, *, q: int,
+                       bits: int) -> jax.Array:
+    """Packed mod-q colors of round(x/s - u)."""
+    k = L.encode_coords(x, s, u)
+    colors = L.color_of(k, q)
+    return L.pack_colors(colors, bits)
+
+
+def lattice_decode_ref(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
+                       *, q: int, bits: int, n: int,
+                       avg_cnt: Optional[int] = None) -> jax.Array:
+    colors = L.unpack_colors(words, n, bits)
+    k = L.decode_coords(colors, anchor, s, u, q=q)
+    z = L.coords_to_point(k, s, u, jnp.float32)
+    if avg_cnt is not None:
+        z = (z + anchor.astype(jnp.float32) * avg_cnt) / (avg_cnt + 1)
+    return z
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """Plain-softmax oracle.  q: (BH, Sq, D); k/v: (BH, Sk, D)."""
+    import numpy as np
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,297 @@
+"""Recursive HLO cost accounting with loop trip-count expansion.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a while loop
+(jax.lax.scan over layers / microbatches / attention chunks) contributes a
+single body execution, so a 96-layer scanned transformer looks 96x cheaper
+than it is, and the collectives inside the scan body disappear from the
+bytes count.  This module re-derives, from ``compiled.as_text()``:
+
+  * dot_flops        — 2 * prod(out dims) * prod(contracted dims), every
+                       while body multiplied by its trip count (parsed from
+                       the loop-condition constant);
+  * collective_bytes — per-kind operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       trip-count-expanded;
+  * traffic_bytes    — an HBM-traffic proxy: inputs+outputs of fusion / dot /
+                       copy / scatter-gather / collective ops (the fusion-
+                       boundary model of memory traffic).
+
+All three feed benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+# NOTE: standalone layout/convert ops (reshape / transpose / convert / copy /
+# bitcast) are EXCLUDED: the TPU backend fuses them into producer/consumer
+# kernels, so counting them as separate HBM round-trips (as the CPU pipeline
+# executes them) would overstate the memory term for the TPU target.
+TRAFFIC_KINDS = ("fusion", "dot", "gather", "scatter", "convolution",
+                 "dynamic-slice", "dynamic-update-slice",
+                 "broadcast", "reduce", "select-and-scatter", "concatenate",
+                 "slice", "pad", "reverse", "sort", "iota") + COLL_KINDS
+
+_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\)\s*->.*)?\{\s*$")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s+"
+                  r"([a-z][\w\-]*)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+_TOAPPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_OPERANDS = re.compile(r"%?([\w][\w.\-]*)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _type_dims(type_str: str) -> list[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Costs:
+    dot_flops: float = 0.0
+    traffic: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    line: str
+
+
+def parse_computations(hlo: str):
+    comps: dict[str, list[_Op]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        # strip /*index=N*/ comments — they break attribute/type parsing on
+        # large tuple types
+        line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+        h = _HDR.match(line.strip())
+        if h and cur is None:
+            cur = h.group(2)
+            comps[cur] = []
+            if h.group(1):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        d = _DEF.match(line)
+        if d:
+            comps[cur].append(_Op(d.group(1), d.group(2), d.group(3), line))
+        else:
+            # parameters like "%p = s32[] parameter(0)" match _DEF; anything
+            # else (comments) is ignored
+            pass
+    return comps, entry
+
+
+def analyze(hlo: str, default_trip: int = 1) -> Costs:
+    comps, entry = parse_computations(hlo)
+    memo: dict[str, Costs] = {}
+    symtab: dict[str, dict[str, str]] = {
+        cname: {op.name: op.type_str for op in ops}
+        for cname, ops in comps.items()
+    }
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for op in comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST.findall(op.line)]
+        return max(consts) if consts else default_trip
+
+    def operand_names(op: _Op) -> list:
+        inner = op.line.split(f"{op.kind}(", 1)[-1]
+        inner = inner.split(")", 1)[0]
+        out = []
+        for tok in inner.split(","):
+            tok = tok.strip().lstrip("%")
+            # drop inline type prefixes like "f32[8]{0} name"
+            parts = tok.split()
+            if parts:
+                out.append(parts[-1].lstrip("%"))
+        return out
+
+    def eff_bytes(type_str: str, trip) -> float:
+        """Bytes of one access.  Inside a while body with trip count t, a
+        buffer whose LEADING dim equals t is a scan-stacked xs/ys buffer —
+        the iteration touches one slice, so charge 1/t of it."""
+        total = 0.0
+        for dt, dims in _SHAPE.findall(type_str):
+            n = 1
+            dd = [int(d) for d in dims.split(",") if d]
+            for d in dd:
+                n *= d
+            b = n * DTYPE_BYTES.get(dt, 4)
+            if trip and dd and dd[0] == trip and trip > 1:
+                b /= trip
+            total += b
+        return total
+
+    def operand_bytes(op: _Op, syms: dict[str, str], trip=None) -> float:
+        return float(sum(eff_bytes(syms[nm], trip) for nm in operand_names(op)
+                         if nm in syms))
+
+    def dot_flops(op: _Op, syms: dict[str, str]) -> float:
+        out_dims = _type_dims(op.type_str)
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        ops_ = operand_names(op)
+        if not ops_ or ops_[0] not in syms:
+            return 0.0
+        lhs_dims = _type_dims(syms[ops_[0]])
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+        contracted = 1
+        if cm and cm.group(1):
+            for idx in cm.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contracted *= lhs_dims[i]
+        return 2.0 * out_n * contracted
+
+    def cost_of(name: str, stack=(), trip=None) -> Costs:
+        mk = (name, trip)
+        if mk in memo:
+            return memo[mk]
+        if name in stack:
+            return Costs()
+        c = Costs()
+        syms = symtab.get(name, {})
+        for op in comps.get(name, []):
+            k = op.kind
+            if k == "dot":
+                c.dot_flops += dot_flops(op, syms)
+                c.traffic += (eff_bytes(op.type_str, trip)
+                              + operand_bytes(op, syms, trip))
+            elif k == "while":
+                bm, cm_ = _BODY.search(op.line), _COND.search(op.line)
+                if bm:
+                    t = trip_count(cm_.group(1)) if cm_ else default_trip
+                    c.add(cost_of(bm.group(1), stack + (name,), max(t, 1)),
+                          max(t, 1))
+            elif k == "fusion":
+                fm = _CALLS.search(op.line)
+                called = fm.group(1) if fm else None
+                if called:
+                    sub = cost_of(called, stack + (name,), trip)
+                    # inner ops live in registers/VMEM: count flops and
+                    # collectives from inside, but traffic only at the
+                    # fusion BOUNDARY (inputs+outputs)
+                    c.dot_flops += sub.dot_flops
+                    for kk, vv in sub.coll.items():
+                        c.coll[kk] = c.coll.get(kk, 0.0) + vv
+                out_b = eff_bytes(op.type_str, trip)
+                in_b = operand_bytes(op, syms, trip)
+                # fusions rooted in dynamic-update-slice write IN-PLACE into
+                # a donated buffer (scan ys-append / cache update): count the
+                # touched slice, not the whole carried buffer
+                root = None
+                for o2 in comps.get(called or "", []):
+                    if "ROOT" in o2.line:
+                        root = o2
+                        break
+                if root is not None and root.kind.startswith(
+                        "dynamic-update-slice"):
+                    c.traffic += 2.0 * max(in_b - out_b, 0.0)
+                elif root is not None and (root.kind.startswith("dynamic-slice")
+                                           or root.kind == "slice"):
+                    # gather-a-slice-from-a-big-buffer fusion: the big buffer
+                    # is indexed, not streamed
+                    c.traffic += 2.0 * out_b
+                else:
+                    c.traffic += out_b + in_b
+            elif k == "conditional":  # noqa: branch traffic approximate
+                for br in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"true_computation=%?([\w.\-]+)|"
+                                     r"false_computation=%?([\w.\-]+))",
+                                     op.line):
+                    for grp in br:
+                        for nm in _OPERANDS.findall("%" + grp if grp and
+                                                    not grp.startswith("%")
+                                                    else grp or ""):
+                            if nm in comps:
+                                c.add(cost_of(nm, stack + (name,)))
+            elif any(k.startswith(ck) for ck in COLL_KINDS):
+                base = next(ck for ck in COLL_KINDS if k.startswith(ck))
+                if k.endswith("-done"):
+                    continue               # counted at -start
+                # ring-model wire bytes per device:
+                #   all-gather: ~output bytes; all-reduce: ~2x input;
+                #   reduce-scatter / all-to-all / permute: ~input bytes
+                inb = operand_bytes(op, syms)
+                outb = _type_bytes(op.type_str)
+                wire = (outb if base == "all-gather"
+                        else 2 * inb if base == "all-reduce" else inb)
+                c.coll[base] = c.coll.get(base, 0.0) + wire
+                c.coll[base + "_count"] = c.coll.get(base + "_count", 0) + 1
+                c.traffic += outb + inb
+            elif k in ("call", "custom-call", "reduce", "sort", "map",
+                       "reduce-window"):
+                fm = _TOAPPLY.search(op.line) or _CALLS.search(op.line)
+                if fm and fm.group(1) in comps:
+                    if k == "call" or k == "custom-call":
+                        # real computation bodies (pre-opt closed_call /
+                        # shard_map): include everything
+                        c.add(cost_of(fm.group(1), stack + (name,), trip))
+                    else:
+                        # reduce/sort lambdas are scalar: flops/coll only
+                        sub = cost_of(fm.group(1), stack + (name,), trip)
+                        c.dot_flops += sub.dot_flops
+                        for kk, vv in sub.coll.items():
+                            c.coll[kk] = c.coll.get(kk, 0.0) + vv
+                if k != "call":
+                    c.traffic += (eff_bytes(op.type_str, trip)
+                                  + operand_bytes(op, syms, trip))
+            elif k.startswith("dynamic-update-slice"):
+                # in-place update: read+write of the touched slice only
+                names = operand_names(op)
+                upd = (eff_bytes(syms[names[1]], trip)
+                       if len(names) > 1 and names[1] in syms else 0)
+                c.traffic += 2 * upd
+            elif k.startswith("dynamic-slice") or k in ("slice", "broadcast",
+                                                        "iota"):
+                c.traffic += eff_bytes(op.type_str, trip)  # output only
+            elif any(k.startswith(tk) for tk in TRAFFIC_KINDS):
+                c.traffic += (eff_bytes(op.type_str, trip)
+                              + operand_bytes(op, syms, trip))
+        memo[name] = c
+        return c
+
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n])) if comps else ""
+    return cost_of(entry)

@@ -1,0 +1,34 @@
+"""Re-derive traffic_bytes in dry-run JSONs from the archived post-opt HLO
+(results/hlo/*.hlo.zst) without recompiling.  Run after analyzer fixes."""
+import glob
+import json
+import os
+import sys
+
+import zstandard as zstd
+
+from repro.launch.hlo_analysis import analyze
+
+
+def main(results="results/dryrun", hlo_dir="results/hlo"):
+    n = 0
+    for jp in sorted(glob.glob(os.path.join(results, "*.json"))):
+        rec = json.load(open(jp))
+        if rec.get("skipped"):
+            continue
+        name = os.path.basename(jp)[:-5]
+        hp = os.path.join(hlo_dir, name + ".hlo.zst")
+        if not os.path.exists(hp):
+            print(f"reanalyze: no HLO for {name}", file=sys.stderr)
+            continue
+        txt = zstd.ZstdDecompressor().decompress(open(hp, "rb").read(),
+                                                 max_output_size=1 << 31)
+        post = analyze(txt.decode())
+        rec["traffic_bytes"] = post.traffic
+        json.dump(rec, open(jp, "w"), indent=1)
+        n += 1
+    print(f"reanalyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

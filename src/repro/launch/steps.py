@@ -1,0 +1,302 @@
+"""Step builders + input_specs for every (arch x shape x mesh) cell.
+
+``input_specs``-style builders return ShapeDtypeStruct stand-ins (weak-type-
+correct, shardable, no device allocation) for every input of the lowered
+step — train batches, serve token batches, KV caches, parameter/optimizer
+state trees — plus the jitted step function ready for
+``jit(step).lower(*structs).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry, shapes as SH
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardCtx, storage_spec
+from repro.models import transformer as T
+from repro.models import encdec as ED
+from repro.models import serve as SV
+from repro.dist.collectives import QSyncConfig
+from repro.train import optim as O
+from repro.train import trainer as TR
+from repro.launch.mesh import mesh_axes
+
+
+def make_ctx(cfg: ModelConfig, mesh, *, grad_sync: str = "lq",
+             qcfg: Optional[QSyncConfig] = None,
+             seq_parallel: Optional[bool] = None) -> ShardCtx:
+    dp_axes, tp_axis = mesh_axes(mesh)
+    tp = mesh.shape[tp_axis]
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    if seq_parallel is None:
+        # SP everywhere except encoder-decoder (short decoder sequences)
+        seq_parallel = cfg.family != "encdec" and tp > 1
+    return ShardCtx(tp_axis=tp_axis, dp_axes=dp_axes, tp=tp, dp=dp,
+                    qcfg=qcfg or QSyncConfig(), grad_sync=grad_sync,
+                    seq_parallel=seq_parallel)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _is_meta(x):
+    return hasattr(x, "local_shape")
+
+
+def _dpa(ctx: ShardCtx):
+    return ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+
+def _arch_cfg(arch: str, smoke: bool) -> ModelConfig:
+    return registry.smoke_config(arch) if smoke else registry.config(arch)
+
+
+def _metas_shapes(cfg: ModelConfig, ctx: ShardCtx):
+    if cfg.family == "encdec":
+        return ED.encdec_metas(cfg, ctx), ED.encdec_param_shapes(cfg, ctx)
+    return T.all_metas(cfg, ctx), T.param_shapes(cfg, ctx)
+
+
+# ---------------------------------------------------------------------------
+# train cell
+# ---------------------------------------------------------------------------
+
+def train_cell(arch: str, shape_name: str, mesh, *, grad_sync: str = "lq",
+               qcfg: Optional[QSyncConfig] = None, microbatch: int = 0,
+               seq_parallel: Optional[bool] = None, smoke: bool = False):
+    """Returns (jitted_step, arg_structs, cfg, ctx)."""
+    cfg = _arch_cfg(arch, smoke)
+    sh = SH.SHAPES[shape_name]
+    assert sh.kind == "train"
+    ctx = make_ctx(cfg, mesh, grad_sync=grad_sync, qcfg=qcfg,
+                   seq_parallel=seq_parallel)
+    ov = registry.train_overrides(arch)
+    opt_cfg = O.OptConfig(name=ov.get("opt_name", "adamw"),
+                          state_dtype=ov.get("opt_state_dtype", "float32"))
+    mb = microbatch or ov.get("microbatch", 0)
+    tc = TR.TrainConfig(microbatch=0 if smoke else mb)
+
+    if cfg.family == "encdec":
+        step_fn = _make_encdec_train_step(cfg, ctx, mesh, opt_cfg, tc)
+    else:
+        step_fn, _, _ = TR.make_train_step(cfg, ctx, mesh, opt_cfg, tc)
+
+    metas, pshapes = _metas_shapes(cfg, ctx)
+    dt = jnp.dtype(opt_cfg.state_dtype)
+    mom = jax.tree.map(lambda s: _sds(s.shape, dt), pshapes)
+    opt = {"m": mom, "v": mom} if opt_cfg.name == "adamw" else {"m": mom}
+    if cfg.family == "encdec":
+        y = jax.eval_shape(lambda: ED.encdec_y_init(cfg, ctx))
+    else:
+        y = jax.eval_shape(lambda: T.y_init(cfg, ctx))
+    state = {"params": pshapes, "opt": opt, "y": y,
+             "step": _sds((), jnp.int32), "key": _sds((2,), jnp.uint32)}
+
+    B = sh.global_batch if not smoke else min(sh.global_batch, 8)
+    S = sh.seq_len if not smoke else 64
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "targets": _sds((B, S), jnp.int32),
+        "mask": _sds((B, S), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["img"] = _sds((B, cfg.img_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return step_fn, (state, batch), cfg, ctx
+
+
+def _make_encdec_train_step(cfg, ctx, mesh, opt_cfg, tc):
+    metas = ED.encdec_metas(cfg, ctx)
+    loss_fn = ED.make_encdec_loss_fn(cfg, ctx)
+    pspec = jax.tree.map(lambda m: storage_spec(m, ctx), metas, is_leaf=_is_meta)
+    opt_spec = ({"m": pspec, "v": pspec} if opt_cfg.name == "adamw"
+                else {"m": pspec})
+    state_spec = {"params": pspec, "opt": opt_spec, "y": P(), "step": P(),
+                  "key": P()}
+    dpa = _dpa(ctx)
+
+    def per_device(state, batch):
+        params, opt, y, step, key = (state["params"], state["opt"], state["y"],
+                                     state["step"], state["key"])
+        kstep = jax.random.fold_in(key, step)
+        tele0 = ED.encdec_tele_zeros(cfg, ctx)
+        (l, metrics), (gp, gt) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(params, tele0, batch,
+                                                   kstep, y)
+        sq = jnp.zeros((), jnp.float32)
+        for grp in gp:
+            for name, g in gp[grp].items():
+                s = jnp.sum(g.astype(jnp.float32) ** 2)
+                for ax in ctx.dp_axes:
+                    s = jax.lax.psum(s, ax)
+                if not metas[grp][name].tp_replicated and ctx.tp > 1:
+                    s = jax.lax.psum(s, ctx.tp_axis)
+                sq = sq + s
+        gnorm = jnp.sqrt(sq)
+        params2, opt2 = O.apply_update(params, gp, opt, step, opt_cfg, gnorm)
+        y2 = jax.tree.map(lambda yy, tt: TR._y_update(yy, tt, tc), y, gt)
+        loss_rep = metrics["loss"]
+        for ax in ctx.dp_axes:
+            loss_rep = jax.lax.psum(loss_rep, ax)
+        new_state = {"params": params2, "opt": opt2, "y": y2,
+                     "step": step + 1, "key": key}
+        return new_state, {"loss": loss_rep / ctx.dp, "gnorm": gnorm}
+
+    def step_fn(state, batch):
+        bspec = {k: P(dpa) for k in batch}
+        f = jax.shard_map(per_device, mesh=mesh,
+                          in_specs=(state_spec, bspec),
+                          out_specs=(state_spec, P()), check_vma=False)
+        return f(state, batch)
+
+    return jax.jit(step_fn)
+
+
+# ---------------------------------------------------------------------------
+# serve cells
+# ---------------------------------------------------------------------------
+
+def _cache_global(cfg, ctx, cstruct, B_global, replicate_batch):
+    # dtype per leaf from SV.cache_dtype (int8 k/v when quantized; the
+    # kv_quant flag is implied by the presence of *_scale leaves)
+    """Local cache shapes -> global structs (+specs): leading tp axis,
+    batch dim sharded over dp unless replicated."""
+    dpa = _dpa(ctx)
+    structs, specs = {}, {}
+    quant = "k_scale" in cstruct
+    for k, s in cstruct.items():
+        bpos = 0 if k.startswith("tail") else 1   # (L, B, ...) vs (B, ...)
+        gs = list(s)
+        if not replicate_batch:
+            gs[bpos] = B_global
+        structs[k] = _sds((ctx.tp, *gs), SV.cache_dtype(k, quant))
+        spec = [None] * (len(gs) + 1)
+        spec[0] = ctx.tp_axis
+        if not replicate_batch:
+            spec[bpos + 1] = dpa
+        specs[k] = P(*spec)
+    return structs, specs
+
+
+def decode_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+                kv_quant: bool = False):
+    """serve_step: one new token against a seq_len-deep cache."""
+    cfg = _arch_cfg(arch, smoke)
+    sh = SH.SHAPES[shape_name]
+    assert sh.kind in ("decode", "long_decode")
+    if not SH.applicable(cfg.family, shape_name):
+        raise ValueError(f"{arch} skips {shape_name} (full attention)")
+    if kv_quant and cfg.family in ("ssm", "hybrid", "encdec"):
+        kv_quant = False                 # no full-context KV cache to quantize
+    ctx = make_ctx(cfg, mesh, seq_parallel=False)
+    dpa = _dpa(ctx)
+
+    B = sh.global_batch if not smoke else min(sh.global_batch, 4)
+    S = sh.seq_len if not smoke else 64
+    replicate_batch = B < ctx.dp
+    B_loc = B if replicate_batch else B // ctx.dp
+
+    step = SV.make_serve_step(cfg, ctx, kv_quant=kv_quant)
+    cstruct = SV.cache_struct(cfg, ctx, B_loc, S, kv_quant=kv_quant)
+    cache_structs, cache_specs = _cache_global(cfg, ctx, cstruct, B,
+                                               replicate_batch)
+    bspec = P(None) if replicate_batch else P(dpa)
+
+    def serve(params, cache, tokens, pos, key):
+        cache = jax.tree.map(lambda v: v[0], cache)      # strip tp lead axis
+        nxt, nc = step(params, cache, tokens, pos, key)
+        return nxt, jax.tree.map(lambda v: v[None], nc)
+
+    metas, pshapes = _metas_shapes(cfg, ctx)
+    pshapes = jax.tree.map(lambda s: _sds(s.shape, jnp.bfloat16), pshapes)
+    pspec = jax.tree.map(lambda m: storage_spec(m, ctx), metas, is_leaf=_is_meta)
+
+    def step_fn(params, cache, tokens, pos, key):
+        f = jax.shard_map(serve, mesh=mesh,
+                          in_specs=(pspec, cache_specs, bspec, P(), P()),
+                          out_specs=(bspec, cache_specs), check_vma=False)
+        return f(params, cache, tokens, pos, key)
+
+    args = (pshapes, cache_structs, _sds((B, 1), jnp.int32),
+            _sds((), jnp.int32), _sds((2,), jnp.uint32))
+    return jax.jit(step_fn), args, cfg, ctx
+
+
+def prefill_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False):
+    cfg = _arch_cfg(arch, smoke)
+    sh = SH.SHAPES[shape_name]
+    assert sh.kind == "prefill"
+    ctx = make_ctx(cfg, mesh, seq_parallel=False)
+    dpa = _dpa(ctx)
+    B = sh.global_batch if not smoke else 4
+    S = sh.seq_len if not smoke else 64
+    replicate_batch = B < ctx.dp
+    bspec = P(None) if replicate_batch else P(dpa)
+
+    metas, pshapes = _metas_shapes(cfg, ctx)
+    pshapes = jax.tree.map(lambda s: _sds(s.shape, jnp.bfloat16), pshapes)
+    pspec = jax.tree.map(lambda m: storage_spec(m, ctx), metas, is_leaf=_is_meta)
+
+    if cfg.family == "encdec":
+        pf = SV.make_encdec_prefill(cfg, ctx)
+
+        def prefill(params, frames, tokens, key):
+            last, cache = pf(params, frames, tokens, key)
+            return last, jax.tree.map(lambda v: v[None], cache)
+
+        def step_fn(params, frames, tokens, key):
+            f = jax.shard_map(
+                prefill, mesh=mesh,
+                in_specs=(pspec, bspec, bspec, P()),
+                out_specs=(bspec, P(ctx.tp_axis)),   # prefix spec: all leaves
+                check_vma=False)
+            return f(params, frames, tokens, key)
+
+        args = (pshapes, _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32),
+                _sds((B, S), jnp.int32), _sds((2,), jnp.uint32))
+        return jax.jit(step_fn), args, cfg, ctx
+
+    pf = SV.make_prefill(cfg, ctx)
+    is_vlm = cfg.family == "vlm"
+
+    def prefill(params, tokens, key, img=None):
+        last, cache = pf(params, tokens, key, img) if is_vlm else pf(
+            params, tokens, key)
+        return last, jax.tree.map(lambda v: v[None], cache)
+
+    def step_fn(params, tokens, key, img=None):
+        in_specs = [pspec, bspec, P()]
+        if is_vlm:
+            in_specs.append(bspec)
+        f = jax.shard_map(prefill, mesh=mesh, in_specs=tuple(in_specs),
+                          out_specs=(bspec, P(ctx.tp_axis)),
+                          check_vma=False)
+        return f(params, tokens, key, img) if is_vlm else f(params, tokens, key)
+
+    if is_vlm:
+        args = (pshapes, _sds((B, S - cfg.img_tokens), jnp.int32),
+                _sds((2,), jnp.uint32),
+                _sds((B, cfg.img_tokens, cfg.d_model), jnp.float32))
+    else:
+        args = (pshapes, _sds((B, S), jnp.int32), _sds((2,), jnp.uint32))
+    return jax.jit(step_fn), args, cfg, ctx
+
+
+def build_cell(arch: str, shape_name: str, mesh, **kw):
+    kind = SH.SHAPES[shape_name].kind
+    if kind == "train":
+        return train_cell(arch, shape_name, mesh, **kw)
+    if kind == "prefill":
+        return prefill_cell(arch, shape_name, mesh,
+                            smoke=kw.get("smoke", False))
+    return decode_cell(arch, shape_name, mesh, smoke=kw.get("smoke", False),
+                       kv_quant=kw.get("kv_quant", False))

@@ -1,0 +1,93 @@
+"""Expert-parallel MoE MLP (top-k router, capacity-bounded, all_to_all).
+
+Experts are sharded over the ``model`` axis (E_loc = E/tp per rank).  Each tp
+rank routes a disjoint token slice (the sequence-parallel slice), dispatches
+via tiled ``all_to_all``, computes its local experts, and returns tokens with
+a second all_to_all.  The router weight is tp-replicated (its gradient is
+psum'd by the gather vjp).
+
+Dispatch layout:
+  disp  (E = tp*E_loc, C, D)  --a2a(split 0, concat 1)-->  (E_loc, tp*C, D)
+  out   (E_loc, tp*C, D)      --a2a(split 1, concat 0)-->  (E, C, D)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardCtx
+
+Array = jax.Array
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_mlp(x: Array, w: dict, cfg: ModelConfig, ctx: ShardCtx
+            ) -> tuple[Array, Array]:
+    """x: (T, D) this rank's token slice.  Returns (out (T,D), aux_loss ()).
+
+    w: {"router": (D, E), "w1": (E_loc, D, F), "w3": (E_loc, D, F) [swiglu],
+        "w2": (E_loc, F, D)}
+    """
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    e_loc = E // ctx.tp
+    C = capacity(T, cfg)
+
+    logits = x.astype(jnp.float32) @ w["router"].astype(jnp.float32)   # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                                # (T,K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch):  E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                                       # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # positions within each expert's capacity buffer
+    e_flat = idx.reshape(-1)                                           # (T*K,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=-1)  # (T*K,)
+    keep = (pos < C).astype(x.dtype)
+    dest = e_flat * C + jnp.minimum(pos, C - 1)
+
+    x_rep = jnp.repeat(x, K, axis=0)                                   # (T*K, D)
+    disp = jnp.zeros((E * C, D), x.dtype).at[dest].add(
+        x_rep * keep[:, None]).reshape(E, C, D)
+
+    if ctx.tp > 1:
+        recv = jax.lax.all_to_all(disp, ctx.tp_axis, split_axis=0,
+                                  concat_axis=1, tiled=True)           # (E_loc, tp*C, D)
+    else:
+        recv = disp
+
+    # expert FFN
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, w["w1"],
+                                   preferred_element_type=jnp.float32))
+        h = (h * jnp.einsum("ecd,edf->ecf", recv, w["w3"],
+                            preferred_element_type=jnp.float32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", recv, w["w1"],
+                                   preferred_element_type=jnp.float32)
+                        ).astype(x.dtype)
+    eo = jnp.einsum("ecf,efd->ecd", h, w["w2"])                        # (E_loc, tp*C, D)
+
+    if ctx.tp > 1:
+        back = jax.lax.all_to_all(eo, ctx.tp_axis, split_axis=1,
+                                  concat_axis=0, tiled=True)           # (E, C, D)
+    else:
+        back = eo
+
+    flat = back.reshape(E * C, D)
+    tok = jnp.take(flat, dest, axis=0) * (keep * gate.reshape(-1).astype(x.dtype))[:, None]
+    out = tok.reshape(T, K, D).sum(axis=1)
+    return out, aux

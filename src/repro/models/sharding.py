@@ -1,0 +1,299 @@
+"""Sharding context + parameter metadata for manually-sharded models.
+
+Every model in repro/models is written *manually sharded* inside
+``jax.shard_map`` (DESIGN §3): tensor-parallel over the ``model`` axis,
+data-parallel + FSDP over the DP axes (``("data",)`` or ``("pod","data")``).
+
+Parameter storage layout (ZeRO-3):
+  each logical leaf has a TP-local shape ``local_shape`` (already sliced over
+  the ``model`` axis when ``tp_dim is not None``); it is stored *flat*,
+  padded, and sharded over the DP axes:
+
+      global array:   (L?, T, P, shard_len)   (L only for scanned stacks)
+      in_spec:        P(None, "model", dp_axes, None)
+      local view:     (L?, 1, 1, shard_len)
+
+  Inside the layer body, ``gather_param`` runs the custom-vjp FSDP gather
+  (dist/fsdp.py): forward all-gathers bf16 weights over DP, backward
+  reduce-scatters gradients with the paper's lattice quantization.
+
+``tp_replicated`` leaves (KV projections when kv_heads < tp, norm scales,
+routers) hold identical values on every TP rank; their backward psums the
+gradient over ``model`` (optionally via the quantized butterfly) inside the
+gather's bwd before the DP reduce-scatter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.collectives import QSyncConfig, flat_size_padded
+from repro.dist import fsdp as F
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Static parallelism context threaded through every model function."""
+    tp_axis: str = "model"
+    dp_axes: tuple[str, ...] = ("data",)
+    tp: int = 1                       # size of the model axis
+    dp: int = 1                       # product of dp axis sizes
+    qcfg: QSyncConfig = QSyncConfig()
+    grad_sync: str = "lq"             # "lq" | "fp32"  (DP gradient reduce-scatter)
+    quantize_tp_grads: bool = False   # butterfly-quantize psum('model') of replicated grads
+    gather_dtype: str = "bfloat16"
+    seq_parallel: bool = False        # residual stream sharded over tp
+    remat: bool = True
+
+    @property
+    def world(self) -> int:
+        return self.tp * self.dp
+
+    def fsdp_config(self) -> F.FSDPConfig:
+        return F.FSDPConfig(axes=self.dp_axes, qcfg=self.qcfg,
+                            sync=self.grad_sync, gather_dtype=self.gather_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter metadata
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LeafMeta:
+    """Static description of one parameter leaf.
+
+    local_shape: TP-local logical shape (model-axis slicing already applied).
+    tp_dim:      which *global* dim was sliced over tp (None = replicated).
+    scanned:     True if stacked over layers (leading L dim in storage).
+    init:        initializer name ("normal", "zeros", "ones", "embed").
+    init_scale:  stddev multiplier for "normal".
+    """
+    local_shape: tuple[int, ...]
+    tp_dim: Optional[int] = None
+    scanned: bool = True
+    init: str = "normal"
+    init_scale: float = 1.0
+    tp_repl: int = 1      # replication factor: tp/tp_repl distinct shards
+                          # (heads that don't divide tp, e.g. yi-34b 56H/16tp)
+
+    @property
+    def tp_replicated(self) -> bool:
+        return self.tp_dim is None
+
+    def numel(self) -> int:
+        return int(np.prod(self.local_shape))
+
+
+def shard_len(meta: LeafMeta, ctx: ShardCtx) -> int:
+    """Flat per-device length (padded to dp*bucket granularity)."""
+    n = meta.numel()
+    bucket = effective_bucket(n, ctx)
+    return F.pad_to_shardable(n, ctx.dp, bucket) // ctx.dp
+
+
+def effective_bucket(n: int, ctx: ShardCtx) -> int:
+    """Bucket size for quantized RS, shrunk for small leaves."""
+    b = ctx.qcfg.bucket
+    while b > 32 and n < ctx.dp * b:
+        b //= 2
+    return b
+
+
+def storage_shape(meta: LeafMeta, ctx: ShardCtx, n_layers: int) -> tuple[int, ...]:
+    s = (ctx.tp, ctx.dp, shard_len(meta, ctx))
+    return ((n_layers,) + s) if meta.scanned else s
+
+
+def storage_spec(meta: LeafMeta, ctx: ShardCtx):
+    """PartitionSpec for the storage array."""
+    from jax.sharding import PartitionSpec as P
+    s = (ctx.tp_axis, ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0], None)
+    return P(*(((None,) + s) if meta.scanned else s))
+
+
+# ---------------------------------------------------------------------------
+# Initialization (host-side; used by smoke tests & the real trainer)
+# ---------------------------------------------------------------------------
+
+def init_leaf(key: Array, meta: LeafMeta, ctx: ShardCtx, n_layers: int,
+              dtype=jnp.float32) -> Array:
+    """Initialize the *global* storage array for one leaf.
+
+    TP slices get distinct values along the tp dim of the storage array
+    (they are different slices of the logical tensor); tp-replicated leaves
+    get identical values across the tp dim.
+    """
+    L = n_layers if meta.scanned else 1
+    sl = shard_len(meta, ctx)
+    n = meta.numel()
+
+    def one(key) -> Array:   # one (tp, flat) logical layer
+        rows = 1 if meta.tp_replicated else ctx.tp // meta.tp_repl
+        if meta.init == "zeros":
+            flat = jnp.zeros((rows, n), dtype)
+        elif meta.init == "ones":
+            flat = jnp.ones((rows, n), dtype)
+        elif meta.init == "a_log":
+            # mamba2 A_log / RG-LRU lambda: log of U[1, 16]
+            flat = jnp.log(jax.random.uniform(key, (rows, n), dtype, 1.0, 16.0))
+        elif meta.init == "dt_bias":
+            # softplus^-1 of U[1e-3, 1e-1]
+            dt = jax.random.uniform(key, (rows, n), dtype, 1e-3, 1e-1)
+            flat = dt + jnp.log(-jnp.expm1(-dt))
+        elif meta.init == "embed":
+            flat = jax.random.normal(key, (rows, n), dtype) * meta.init_scale * 0.02
+        else:
+            scale = meta.init_scale / math.sqrt(max(meta.local_shape[0], 1))
+            flat = jax.random.normal(key, (rows, n), dtype) * scale
+        if rows < ctx.tp:
+            flat = jnp.repeat(flat, ctx.tp // rows, axis=0)
+        pad = ctx.dp * sl - n
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        return flat.reshape(ctx.tp, ctx.dp, sl)
+
+    keys = jax.random.split(key, L)
+    out = jax.vmap(one)(keys)          # (L, tp, dp, sl)
+    return out if meta.scanned else out[0]
+
+
+# ---------------------------------------------------------------------------
+# Logical <-> storage converters (checkpointing / elastic re-sharding / tests)
+# ---------------------------------------------------------------------------
+
+def logical_shape(meta: LeafMeta, ctx: ShardCtx) -> tuple[int, ...]:
+    """Global logical tensor shape (undo the tp slicing)."""
+    if meta.tp_replicated:
+        return meta.local_shape
+    s = list(meta.local_shape)
+    s[meta.tp_dim] *= ctx.tp // meta.tp_repl
+    return tuple(s)
+
+
+def logical_to_storage(x, meta: LeafMeta, ctx: ShardCtx):
+    """One logical layer tensor -> (tp, dp, shard_len) storage layout."""
+    x = jnp.asarray(x, jnp.float32)
+    n = meta.numel()
+    sl = shard_len(meta, ctx)
+    if meta.tp_replicated:
+        flat = jnp.broadcast_to(x.reshape(1, n), (ctx.tp, n))
+    else:
+        shards = ctx.tp // meta.tp_repl
+        parts = jnp.split(x, shards, axis=meta.tp_dim)
+        flat = jnp.stack([p.reshape(-1) for p in parts])
+        if meta.tp_repl > 1:
+            flat = jnp.repeat(flat, meta.tp_repl, axis=0)
+    flat = jnp.pad(flat, ((0, 0), (0, ctx.dp * sl - n)))
+    return flat.reshape(ctx.tp, ctx.dp, sl)
+
+
+def storage_to_logical(st, meta: LeafMeta, ctx: ShardCtx):
+    """(tp, dp, shard_len) storage -> one logical layer tensor."""
+    n = meta.numel()
+    flat = st.reshape(ctx.tp, -1)[:, :n]
+    if meta.tp_replicated:
+        return flat[0].reshape(meta.local_shape)
+    shards = ctx.tp // meta.tp_repl
+    parts = [flat[t * meta.tp_repl].reshape(meta.local_shape)
+             for t in range(shards)]
+    return jnp.concatenate(parts, axis=meta.tp_dim)
+
+
+# ---------------------------------------------------------------------------
+# In-graph gather: storage -> usable weight (inside shard_map, per layer)
+# ---------------------------------------------------------------------------
+
+def make_gathers(ctx: ShardCtx):
+    """FSDP gather fns: (plain, full-tp-psum, groups-psum-factory)."""
+    g_plain = F.make_fsdp_gather(ctx.fsdp_config())
+
+    def g_tp(bundle):
+        # Replicated leaf: same forward; a custom-vjp identity injects the
+        # psum over the tp axis into the gradient before the DP
+        # reduce-scatter (true grad of a logically-shared tensor).
+        return _tp_psum_grad(g_plain(bundle), ctx, None)
+
+    def g_groups(repl: int):
+        groups = tuple(tuple(s * repl + j for j in range(repl))
+                       for s in range(ctx.tp // repl))
+
+        def g(bundle):
+            return _tp_psum_grad(g_plain(bundle), ctx, groups)
+        return g
+
+    return g_plain, g_tp, g_groups
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _tp_psum_grad(x, ctx: ShardCtx, groups):
+    return x
+
+
+def _tp_psum_grad_fwd(x, ctx, groups):
+    return x, None
+
+
+def _tp_psum_grad_bwd(ctx, groups, _, g):
+    gl = None if groups is None else [list(t) for t in groups]
+    return (jax.lax.psum(g, ctx.tp_axis, axis_index_groups=gl),)
+
+
+_tp_psum_grad.defvjp(_tp_psum_grad_fwd, _tp_psum_grad_bwd)
+
+
+def gather_param(storage: Array, meta: LeafMeta, ctx: ShardCtx,
+                 y: Array, key: Array, tele: Array,
+                 gathers, compute_dtype=jnp.bfloat16) -> Array:
+    """storage local view (1, 1, shard) -> full TP-local weight.
+
+    y: () f32 distance bound for this leaf; tele: (TELE_WIDTH,) zeros.
+    """
+    g_plain, g_tp, g_groups = gathers
+    w_shard = storage.reshape(-1)
+    bundle = {"w": w_shard, "y": y, "key": key, "tele": tele}
+    if meta.tp_replicated:
+        fn = g_tp
+    elif meta.tp_repl > 1 and ctx.tp > 1:
+        fn = g_groups(meta.tp_repl)
+    else:
+        fn = g_plain
+    w_full = fn(bundle)
+    n = meta.numel()
+    w = w_full[:n].reshape(meta.local_shape)
+    return w.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Common collective helpers used by the layers
+# ---------------------------------------------------------------------------
+
+def psum_tp(x: Array, ctx: ShardCtx) -> Array:
+    return jax.lax.psum(x, ctx.tp_axis) if ctx.tp > 1 else x
+
+
+def pmax_tp(x: Array, ctx: ShardCtx) -> Array:
+    return jax.lax.pmax(x, ctx.tp_axis) if ctx.tp > 1 else x
+
+
+def all_gather_tp(x: Array, ctx: ShardCtx, axis: int = 0) -> Array:
+    if ctx.tp == 1:
+        return x
+    return jax.lax.all_gather(x, ctx.tp_axis, axis=axis, tiled=True)
+
+
+def reduce_scatter_tp(x: Array, ctx: ShardCtx, axis: int = 0) -> Array:
+    if ctx.tp == 1:
+        return x
+    return jax.lax.psum_scatter(x, ctx.tp_axis, scatter_dimension=axis,
+                                tiled=True)
+
+
+def tp_index(ctx: ShardCtx) -> Array:
+    return jax.lax.axis_index(ctx.tp_axis) if ctx.tp > 1 else jnp.zeros((), jnp.int32)

@@ -1,0 +1,182 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked train/prefill + O(1) decode.
+
+Follows the minimal SSD algorithm (Mamba-2 paper, Listing 1), adapted to
+manual TP: heads and the inner dim are sharded over ``model``; the shared
+B/C projections (ngroups=1) are tp-replicated; the gated RMSNorm over the
+sharded inner dim psums its sum-of-squares over tp.
+
+Shapes (per rank): inner = expand*D / tp channels, H_loc = inner/headdim
+heads, state N = cfg.ssm_state, chunk Q = cfg.ssm_chunk.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardCtx, psum_tp
+
+Array = jax.Array
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., q) -> (..., q, q) lower-tri segment sums: S[i,j]=sum_{j<k<=i} a_k."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int) -> tuple[Array, Array]:
+    """SSD over a full sequence.
+
+    xh: (B, S, H, P)   per-head inputs (already includes dt weighting below)
+    dt: (B, S, H)      positive step sizes
+    A:  (H,)           negative decay rates (A = -exp(A_log))
+    Bm: (B, S, N)      shared input maps (ngroups=1)
+    Cm: (B, S, N)      shared output maps
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+
+    xc = xh.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = Bm.reshape(b, nc, q, n)
+    Cc = Cm.reshape(b, nc, q, n)
+
+    da = dtc * A[None, None, None, :]            # (b,nc,q,h)  log-decay per step
+    da_cs = jnp.cumsum(da, axis=2)               # within-chunk cumulative
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(da, 2, 3)))           # (b,nc,h,q,q)
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc,
+                   preferred_element_type=jnp.float32)      # (b,nc,q,q)
+    xdt = xc * dtc[..., None]                               # (b,nc,q,h,p)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", G, L, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # 2) chunk end-states
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)     # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_states, xdt,
+                        preferred_element_type=jnp.float32)  # (b,nc,h,p,n)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])               # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp                                       # (b,h,p,n),(b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                   # emit state *before* chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                # (b,nc,h,p,n)
+
+    # 4) inter-chunk output
+    state_decay_out = jnp.exp(da_cs)                        # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, prev_states,
+                       state_decay_out, preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    return y.astype(xh.dtype), final
+
+
+def ssd_decode_step(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                    state: Array) -> tuple[Array, Array]:
+    """One-token recurrent update.  x: (B,H,P), dt: (B,H), Bm/Cm: (B,N),
+    state: (B,H,P,N) -> (y (B,H,P), new_state)."""
+    dec = jnp.exp(dt * A[None, :])                          # (B,H)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", x, Bm, dt,
+                     preferred_element_type=jnp.float32)
+    new = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, Cm,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype), new
+
+
+def _dw_conv(x: Array, kernel: Array, cache: Optional[Array] = None):
+    """Depthwise causal conv over seq.  x: (B,S,C), kernel: (W,C).
+
+    With cache (B, W-1, C): single-step mode (S==1), returns updated cache.
+    """
+    w = kernel.shape[0]
+    if cache is not None:
+        buf = jnp.concatenate([cache, x], axis=1)           # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", buf, kernel)[:, None, :]
+        return y.astype(x.dtype), buf[:, 1:]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(w))
+    return y.astype(x.dtype), None
+
+
+def mamba2_block(x: Array, wts: dict, cfg: ModelConfig, ctx: ShardCtx,
+                 state: Optional[dict] = None):
+    """Full Mamba-2 mixer.  x: (B, S, D) -> (out partial (B,S,D), new_state).
+
+    wts: {"wz": (D, I_loc), "wx": (D, I_loc), "wbc": (D, 2N), "wdt": (D, Hl),
+          "conv_x": (W, I_loc), "conv_bc": (W, 2N), "A_log": (Hl,),
+          "D": (Hl,), "dt_bias": (Hl,), "norm": (I_loc,)}
+    state: {"ssm": (B,Hl,P,N), "conv_x": (B,W-1,I_loc), "conv_bc": (B,W-1,2N)}
+    """
+    B_, S, D = x.shape
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+    i_loc = wts["wx"].shape[1]
+    h_loc = i_loc // P
+
+    z = x @ wts["wz"]                                       # (B,S,I_loc)
+    xi = x @ wts["wx"]
+    bc = x @ wts["wbc"]                                     # (B,S,2N)
+    dt = jax.nn.softplus((x @ wts["wdt"]).astype(jnp.float32)
+                         + wts["dt_bias"].astype(jnp.float32))  # (B,S,Hl)
+    A = -jnp.exp(wts["A_log"].astype(jnp.float32))          # (Hl,)
+
+    decode = state is not None and S == 1
+    if decode:
+        xi, cx = _dw_conv(xi, wts["conv_x"], state["conv_x"])
+        bc, cb = _dw_conv(bc, wts["conv_bc"], state["conv_bc"])
+    else:
+        xi, _ = _dw_conv(xi, wts["conv_x"])
+        bc, _ = _dw_conv(bc, wts["conv_bc"])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+
+    xh = xi.reshape(B_, S, h_loc, P)
+    if decode:
+        y, new_ssm = ssd_decode_step(xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                     state["ssm"])
+        y = y[:, None]
+        new_state = {"ssm": new_ssm, "conv_x": cx, "conv_bc": cb}
+    else:
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+        new_state = {"ssm": final,
+                     "conv_x": None, "conv_bc": None}
+    y = y + xh * wts["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, i_loc)
+
+    # gated RMSNorm over the (sharded) inner dim: psum the sum-of-squares
+    yf = (y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)).astype(jnp.float32)
+    ss = psum_tp(jnp.sum(yf * yf, axis=-1, keepdims=True), ctx)
+    inner_total = i_loc * ctx.tp
+    yn = yf * jax.lax.rsqrt(ss / inner_total + cfg.norm_eps)
+    yn = (yn * wts["norm"].astype(jnp.float32)).astype(x.dtype)
+
+    out = yn @ wts["wo"]                                    # partial over tp
+    return out, new_state

@@ -1,0 +1,127 @@
+"""Mesh-independent, atomic checkpointing (no external deps).
+
+Format: one ``.npz`` of *logical* tensors (storage layout undone via
+models/sharding converters) + a msgpack sidecar with step/config/y-state.
+Atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` — a crash mid-write
+never corrupts the latest checkpoint.  ``keep`` bounds disk usage.
+
+Because tensors are stored *logically*, a restore may target a different
+mesh (tp/dp change) — elastic scaling across restarts (DESIGN §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    for k in sorted(tree):
+        v = tree[k]
+        name = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, name + "/"))
+        else:
+            out[name] = np.asarray(v)
+    return out
+
+
+def _unflatten(flat):
+    tree: dict = {}
+    for name, v in flat.items():
+        parts = name.split("/")
+        cur = tree
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return tree
+
+
+def save(ckpt_dir: str, step: int, logical_tree: dict, meta: dict,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(logical_tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb({"step": step, **meta}))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                       # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def load(ckpt_dir: str, step: Optional[int] = None) -> tuple[dict, dict]:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    return _unflatten(flat), meta
+
+
+# ---------------------------------------------------------------------------
+# storage <-> logical round trips for whole parameter trees
+# ---------------------------------------------------------------------------
+
+def params_to_logical(params: dict, metas: dict, ctx) -> dict:
+    """Storage tree {"layers": {...}, "top": {...}} -> logical numpy tree."""
+    from repro.models.sharding import storage_to_logical
+    out: dict = {}
+    for grp, leaves in params.items():
+        out[grp] = {}
+        for name, arr in leaves.items():
+            meta = metas[grp][name]
+            a = np.asarray(arr)
+            if meta.scanned:
+                out[grp][name] = np.stack(
+                    [np.asarray(storage_to_logical(a[l], meta, ctx))
+                     for l in range(a.shape[0])])
+            else:
+                out[grp][name] = np.asarray(storage_to_logical(a, meta, ctx))
+    return out
+
+
+def logical_to_params(logical: dict, metas: dict, ctx) -> dict:
+    """Logical tree -> storage layout for the (possibly different) ctx."""
+    from repro.models.sharding import logical_to_storage
+    out: dict = {}
+    for grp, leaves in logical.items():
+        out[grp] = {}
+        for name, arr in leaves.items():
+            meta = metas[grp][name]
+            if meta.scanned:
+                out[grp][name] = jnp.stack(
+                    [logical_to_storage(arr[l], meta, ctx)
+                     for l in range(arr.shape[0])])
+            else:
+                out[grp][name] = logical_to_storage(arr, meta, ctx)
+    return out

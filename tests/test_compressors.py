@@ -1,0 +1,53 @@
+"""Compressor zoo: roundtrip sanity + wire accounting for every baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressors import (make_compressor, CompressorCtx,
+                                    ALL_COMPRESSORS, ef_roundtrip, EFSign)
+from repro.core import rotation as R
+
+D = 512
+
+
+def _ctx():
+    diag = R.rotation_keypair(jax.random.PRNGKey(0), D)
+    return CompressorCtx(y=1.0, diag=diag)
+
+
+@pytest.mark.parametrize("name", ALL_COMPRESSORS)
+def test_roundtrip_and_wire_bytes(name):
+    comp = make_compressor(name)
+    x = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    z = comp.roundtrip(x, _ctx(), jax.random.PRNGKey(2))
+    assert z.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(z)))
+    wb = comp.wire_bytes(D)
+    assert 0 < wb
+    if name not in ("fp32",):
+        assert wb < D * 4, f"{name} should compress below fp32"
+
+
+@pytest.mark.parametrize("name", ["qsgd_l2", "hadamard", "terngrad"])
+def test_stochastic_unbiasedness(name):
+    comp = make_compressor(name)
+    x = jax.random.normal(jax.random.PRNGKey(3), (D,))
+    acc = jnp.zeros_like(x)
+    n = 600
+    for i in range(n):
+        acc = acc + comp.roundtrip(x, _ctx(), jax.random.PRNGKey(10 + i))
+    dev = float(jnp.max(jnp.abs(acc / n - x)))
+    assert dev < 0.3, f"{name} deviates {dev}"
+
+
+def test_error_feedback_reduces_bias():
+    comp = EFSign()
+    x = jax.random.normal(jax.random.PRNGKey(4), (D,)) * 0.1
+    err = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x)
+    for i in range(400):
+        xh, err = ef_roundtrip(comp, x, err, _ctx())
+        acc = acc + xh
+    # EF: long-run average of compressed signal converges to the signal
+    assert float(jnp.max(jnp.abs(acc / 400 - x))) < 0.08

@@ -1,0 +1,117 @@
+"""Paper algorithm tests: MeanEstimation / VarianceReduction (§4, Thms 2/16/17).
+
+The headline claim: output error depends on input *variance* (pairwise
+distance y), NOT input norm — verified by placing inputs far from the origin.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LatticeQ, RotatedLatticeQ, QSGD, CompressorCtx,
+                        mean_estimation_star, mean_estimation_tree,
+                        butterfly_mean, variance_reduction)
+from repro.core import rotation as R
+
+
+def _inputs(n=8, d=256, norm=1000.0, spread=0.1, seed=0):
+    mu = jax.random.normal(jax.random.PRNGKey(seed), (d,)) * norm
+    xs = mu + spread * jax.random.normal(jax.random.PRNGKey(seed + 1), (n, d))
+    y = float(2 * jnp.max(jnp.abs(xs - xs.mean(0))))
+    return xs, y
+
+
+def test_star_all_outputs_equal_and_unbiasedish():
+    xs, y = _inputs()
+    comp = LatticeQ(q=16)
+    res = mean_estimation_star(xs, y, comp, jax.random.PRNGKey(2),
+                               CompressorCtx(y=y))
+    assert bool(res.decode_ok)
+    err = float(jnp.max(jnp.abs(res.est[0] - xs.mean(0))))
+    s = 2 * y / 15
+    assert err < 2 * s, f"error {err} should be within ~2 lattice cells {s}"
+
+
+def test_error_independent_of_input_norm():
+    """The paper's core claim: error tracks y, not ||x||."""
+    errs = []
+    for norm in (1.0, 1e3, 1e6):
+        xs, y = _inputs(norm=norm)
+        comp = LatticeQ(q=16)
+        res = mean_estimation_star(xs, y, comp, jax.random.PRNGKey(2),
+                                   CompressorCtx(y=y))
+        errs.append(float(jnp.max(jnp.abs(res.est[0] - xs.mean(0)))))
+    assert max(errs) < 4 * min(max(errs[0], 1e-6), 1.0) + 0.2, errs
+    # norm grew 1e6x; error must not grow with it
+    assert errs[2] < 10 * (errs[0] + 1e-3), errs
+
+
+def test_variance_scales_inverse_q():
+    """Theorem 2/16: variance O(y^2/q) -> per-coord error ~ s = 2y/(q-1)."""
+    xs, y = _inputs(n=4, d=512)
+    out = {}
+    for q in (4, 16, 64):
+        comp = LatticeQ(q=q)
+        trials = []
+        for t in range(6):
+            res = mean_estimation_star(xs, y, comp, jax.random.PRNGKey(10 + t),
+                                       CompressorCtx(y=y))
+            trials.append(float(jnp.mean((res.est[0] - xs.mean(0)) ** 2)))
+        out[q] = np.mean(trials)
+    # quadrupling q (doubling bits) should cut MSE by ~16x; demand >4x
+    assert out[4] / out[16] > 4, out
+    assert out[16] / out[64] > 4, out
+
+
+def test_tree_matches_star_quality():
+    xs, y = _inputs(n=8)
+    res = mean_estimation_tree(xs, y, m=8, key=jax.random.PRNGKey(3))
+    assert bool(res.decode_ok)
+    err = float(jnp.linalg.norm(res.est[0] - xs.mean(0)))
+    assert err < 0.5
+
+
+def test_butterfly_identical_outputs():
+    xs, y = _inputs(n=8)
+    res = butterfly_mean(xs, y, LatticeQ(q=16), jax.random.PRNGKey(4),
+                         CompressorCtx(y=y))
+    assert bool(res.decode_ok), "all machines must hold the same output"
+
+
+def test_variance_reduction_reduces_variance():
+    """VR: averaging n noisy estimates + quantization still reduces variance
+    below a single input's variance (the paper's motivating property)."""
+    d, n, sigma = 256, 16, 1.0
+    nabla = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 100
+    mses_in, mses_out = [], []
+    for t in range(8):
+        xs = nabla + sigma / np.sqrt(d) * jax.random.normal(
+            jax.random.PRNGKey(100 + t), (n, d)) * np.sqrt(d)
+        res = variance_reduction(xs, sigma, LatticeQ(q=64),
+                                 jax.random.PRNGKey(200 + t), alpha=4.0)
+        mses_in.append(float(jnp.sum((xs[0] - nabla) ** 2)))
+        mses_out.append(float(jnp.sum((res.est[0] - nabla) ** 2)))
+    assert np.mean(mses_out) < 0.5 * np.mean(mses_in), (
+        np.mean(mses_in), np.mean(mses_out))
+
+
+def test_rlq_beats_norm_based_on_uncentered_inputs():
+    """Paper Exp 2 (Figures 3-4): LQ/RLQ variance < QSGD when inputs are far
+    from the origin, at comparable bit budgets."""
+    xs, y = _inputs(n=2, d=1024, norm=100.0, spread=0.05)
+    diag = R.rotation_keypair(jax.random.PRNGKey(7), 1024)
+    yr = float(2 * jnp.max(jnp.abs(R.rotate(xs - xs.mean(0), diag)))) + 1e-6
+
+    def mse(comp, ctx):
+        es = []
+        for t in range(5):
+            z = comp.roundtrip(xs[0], ctx, jax.random.PRNGKey(300 + t),
+                               anchor=xs[1])
+            es.append(float(jnp.sum((z - xs[0]) ** 2)))
+        return np.mean(es)
+
+    m_lq = mse(LatticeQ(q=8), CompressorCtx(y=y))
+    m_rlq = mse(RotatedLatticeQ(q=8), CompressorCtx(y=yr, diag=diag))
+    m_qsgd = mse(QSGD(qlevel=8), CompressorCtx())
+    assert m_lq < m_qsgd / 10, (m_lq, m_qsgd)
+    assert m_rlq < m_qsgd / 10, (m_rlq, m_qsgd)

@@ -1,0 +1,48 @@
+"""Error detection / RobustAgreement (paper §5, Theorem 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.error_detect import (DetectingEncoder, robust_agreement,
+                                     checksum_weights)
+
+
+def test_checksum_detects_wrapped_decode():
+    d, q, y = 128, 8, 1.0
+    key = jax.random.PRNGKey(0)
+    w = checksum_weights(key, d)
+    enc = DetectingEncoder(q=q)
+    x = jax.random.normal(key, (d,)) * 5
+    payload = enc.encode(x, y, w, key=jax.random.PRNGKey(1))
+    # near anchor: decode ok
+    z, ok = enc.decode(payload, x + 0.1 * y, y, w)
+    assert bool(ok)
+    # far anchor: wrapped decode must be FLAGGED, not silent
+    z2, ok2 = enc.decode(payload, x + 50 * y, y, w)
+    assert not bool(ok2)
+
+
+def test_robust_agreement_escalates_until_success():
+    d = 64
+    key = jax.random.PRNGKey(3)
+    xu = jax.random.normal(key, (d,)) * 10
+    xv = xu + jax.random.normal(jax.random.PRNGKey(4), (d,)) * 0.5
+    y_true = float(2 * jnp.max(jnp.abs(xu - xv)))
+    # correct estimate: one iteration
+    r1 = robust_agreement(xu, xv, y_true, 16, jax.random.PRNGKey(5))
+    assert r1["ok"] and r1["iters"] == 1
+    # 100x underestimate: must escalate yet still converge, with more bits
+    r2 = robust_agreement(xu, xv, y_true / 100, 16, jax.random.PRNGKey(6))
+    assert r2["ok"] and r2["iters"] > 1
+    assert r2["bits"] > r1["bits"]
+    # and the final estimate is accurate (fine lattice from the underestimate)
+    assert float(jnp.max(jnp.abs(r2["z"] - xu))) < y_true
+
+
+def test_expected_bits_match_theorem4_shape():
+    """bits ~ O(d log q) when the estimate is right; grows by ~d per doubling."""
+    d, q = 256, 16
+    xu = jnp.ones((d,))
+    xv = xu + 0.01
+    r = robust_agreement(xu, xv, 1.0, q, jax.random.PRNGKey(0))
+    assert r["bits"] <= d * 4 + 32 + 64

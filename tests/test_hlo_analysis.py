@@ -1,0 +1,38 @@
+"""Loop-trip-expanded HLO accounting (launch/hlo_analysis.py)."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _scan_flops(L, n=128):
+    def step(c, _):
+        return jnp.tanh(c @ c), None
+    def g(x):
+        return jax.lax.scan(step, x, None, length=L)[0]
+    comp = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32)).compile()
+    return analyze(comp.as_text()).dot_flops
+
+
+def test_scan_flops_scale_with_trip_count():
+    f2, f16 = _scan_flops(2), _scan_flops(16)
+    assert abs(f16 / f2 - 8.0) < 0.2
+
+
+def test_exact_matmul_flops():
+    n, L = 128, 4
+    assert _scan_flops(L, n) == 2 * n**3 * L
+
+
+def test_nested_scan():
+    def inner(c, _):
+        return c @ c, None
+    def outer(c, _):
+        return jax.lax.scan(inner, c, None, length=3)[0], None
+    def g(x):
+        return jax.lax.scan(outer, x, None, length=5)[0]
+    comp = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    flops = analyze(comp.as_text()).dot_flops
+    assert flops == 2 * 64**3 * 15

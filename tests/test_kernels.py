@@ -1,0 +1,100 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lattice as L
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("d", [4, 16, 128, 512, 2048, 8192, 16384])
+@pytest.mark.parametrize("rows", [1, 3, 8])
+def test_fwht_matches_ref(d, rows):
+    x = jax.random.normal(jax.random.PRNGKey(d + rows), (rows, d), jnp.float32)
+    got = ops.fwht(x)
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 1024)).astype(dtype)
+    got = ops.fwht(x)
+    assert got.dtype == dtype
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_fwht_orthonormal_involutive():
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4096))
+    y = ops.fwht(x)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+    back = ops.fwht(y)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("q", [4, 16, 256])
+@pytest.mark.parametrize("n", [64, 1000, 40000])
+def test_encode_matches_ref_exactly(q, n):
+    bits = L.bits_for_q(q)
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 50
+    u = jax.random.uniform(jax.random.PRNGKey(n + 1), (n,), minval=-.5,
+                           maxval=.5)
+    s = 0.173
+    got = ops.lattice_encode(x, u, s, q=q)
+    want = ref.lattice_encode_ref(x, u, s, q=q, bits=bits)
+    assert jnp.array_equal(got, want)
+
+
+@pytest.mark.parametrize("q", [4, 16, 256])
+@pytest.mark.parametrize("avg_cnt", [None, 3])
+def test_decode_matches_ref_exactly(q, avg_cnt):
+    n, s = 30000, 0.08
+    bits = L.bits_for_q(q)
+    x = jax.random.normal(jax.random.PRNGKey(7), (n,)) * 20
+    u = jax.random.uniform(jax.random.PRNGKey(8), (n,), minval=-.5, maxval=.5)
+    w = ops.lattice_encode(x, u, s, q=q)
+    # provable exact-decode margin: |x-anchor| <= (q/2 - 1) * s (rounding of
+    # both x and the anchor can each move the coordinate by 1/2 a cell)
+    margin = max((q / 2 - 1), 0.4) * s
+    anchor = x + jax.random.uniform(jax.random.PRNGKey(9), (n,), minval=-1,
+                                    maxval=1) * 0.9 * margin
+    got = ops.lattice_decode(w, anchor, u, s, q=q, avg_cnt=avg_cnt)
+    want = ref.lattice_decode_ref(w, anchor, u, s, q=q, bits=bits, n=n,
+                                  avg_cnt=avg_cnt)
+    if avg_cnt is None:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0, atol=0)
+    else:
+        # the fused running-average epilogue may differ by FMA-contraction
+        # ULPs from the two-step reference
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_encode_decode_roundtrip_recovers_lattice_point():
+    n, q, s = 10000, 16, 0.05
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,)) * 100
+    u = jax.random.uniform(jax.random.PRNGKey(4), (n,), minval=-.5, maxval=.5)
+    w = ops.lattice_encode(x, u, s, q=q)
+    z = ops.lattice_decode(w, x, u, s, q=q)       # anchor = x itself
+    k = L.encode_coords(x, s, u)
+    zt = L.coords_to_point(k, s, u)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zt), rtol=1e-6,
+                               atol=1e-6)
+    assert float(jnp.max(jnp.abs(z - x))) <= 0.5 * s + 1e-6
+
+
+def test_bfloat16_input_encode():
+    n, q, s = 4096, 16, 0.1
+    x = (jax.random.normal(jax.random.PRNGKey(5), (n,)) * 10).astype(jnp.bfloat16)
+    u = jax.random.uniform(jax.random.PRNGKey(6), (n,), minval=-.5, maxval=.5)
+    got = ops.lattice_encode(x, u, s, q=q)
+    want = ref.lattice_encode_ref(x, u, s, q=q, bits=4)
+    assert jnp.array_equal(got, want)

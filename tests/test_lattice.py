@@ -1,0 +1,97 @@
+"""Property tests for the core lattice quantizer (paper §3, Theorem 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lattice as L
+
+
+@given(st.integers(2, 65536), st.sampled_from([2, 3, 4, 5, 8, 9, 16, 64, 256]))
+def test_bits_for_q_packable(n, q):
+    b = L.bits_for_q(q)
+    assert b in L.PACK_BITS
+    assert (1 << b) >= q
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 3000), st.sampled_from([1, 2, 4, 8, 16]),
+       st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(n, bits, seed):
+    colors = jax.random.randint(jax.random.PRNGKey(seed), (n,), 0,
+                                1 << bits).astype(jnp.uint32)
+    words = L.pack_colors(colors, bits)
+    assert words.shape[-1] == L.packed_len(n, bits)
+    back = L.unpack_colors(words, n, bits)
+    assert jnp.array_equal(colors, back)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 1000), st.sampled_from([4, 8, 16, 64, 256]),
+       st.floats(0.01, 100.0))
+def test_decode_recovers_exact_lattice_point_within_margin(seed, q, y):
+    """Lemma 15 (cubic form): decode exact iff |x - anchor|_inf <= (q-1)s/2."""
+    d = 64
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (d,)) * y * 10      # large norm, paper regime
+    spec = L.LatticeSpec(q)
+    s = spec.side(y)
+    u = L.shared_offset(jax.random.fold_in(key, 1), (d,))
+    k = L.encode_coords(x, s, u)
+    colors = L.color_of(k, q)
+    # provable margin: rounding x and anchor each contribute half a cell
+    margin = max(q / 2 - 1, 0.4) * float(s)
+    anchor = x + jax.random.uniform(jax.random.fold_in(key, 2), (d,),
+                                    minval=-1, maxval=1) * 0.9 * margin
+    k2 = L.decode_coords(colors, anchor, s, u, q=q)
+    assert jnp.array_equal(k, k2), "decode must recover the exact point"
+
+
+def test_decode_fails_beyond_margin():
+    d, q, y = 32, 8, 1.0
+    spec = L.LatticeSpec(q)
+    s = float(spec.side(y))
+    x = jnp.zeros((d,))
+    u = jnp.zeros((d,))
+    k = L.encode_coords(x, s, u)
+    colors = L.color_of(k, q)
+    anchor = x + jnp.full((d,), q * s)          # far beyond the margin
+    k2 = L.decode_coords(colors, anchor, s, u, q=q)
+    assert not jnp.array_equal(k, k2)
+    z = L.coords_to_point(k2, s, u)
+    assert bool(L.decode_failure(z, x, y)) or jnp.max(jnp.abs(z - x)) > y
+
+
+def test_unbiasedness_with_shared_offset():
+    """E_u[(round(x/s - u) + u) * s] == x (dithered quantizer)."""
+    d, q, y = 8, 16, 2.0
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 30
+    spec = L.LatticeSpec(q)
+    s = spec.side(y)
+    acc = jnp.zeros((d,))
+    n = 4000
+    for i in range(n):
+        u = L.shared_offset(jax.random.PRNGKey(i + 1), (d,))
+        k = L.encode_coords(x, s, u)
+        acc = acc + L.coords_to_point(k, s, u)
+    dev = jnp.max(jnp.abs(acc / n - x))
+    # std of the mean ~ s/sqrt(12 n); allow 5 sigma
+    assert float(dev) < 5 * float(s) / np.sqrt(12 * n)
+
+
+def test_quantization_error_bounded_by_half_cell():
+    d, q, y = 512, 16, 1.0
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 100
+    spec = L.LatticeSpec(q)
+    s = float(spec.side(y))
+    u = L.shared_offset(jax.random.PRNGKey(1), (d,))
+    k = L.encode_coords(x, s, u)
+    z = L.coords_to_point(k, s, u)
+    assert float(jnp.max(jnp.abs(z - x))) <= 0.5 * s + 1e-5
+
+
+def test_wire_bytes_accounting():
+    assert L.wire_bytes(4096, 4) == 4096 // 8 * 4
+    assert L.wire_bytes(4096, 8) == 4096 // 4 * 4
+    assert L.wire_bytes(5, 4) == 4          # one word

@@ -1,0 +1,194 @@
+"""Multi-device integration tests (8 fake CPU devices via subprocess —
+XLA_FLAGS must be set before jax initializes, so these run out-of-process;
+the main pytest process keeps its single device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_quantized_collectives_correctness():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from functools import partial
+        from repro.dist.collectives import (QSyncConfig,
+            butterfly_allreduce_mean, allgather_allreduce_mean,
+            rh_reduce_scatter_mean)
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n = 8 * 4096
+        base = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 5.0
+        xs = base + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (8, n))
+        mean = xs.mean(0)
+        y = float(2 * jnp.max(jnp.abs(xs - mean)))
+        cfg = QSyncConfig(q=16, bucket=4096)
+        y_b = jnp.full((n // 4096,), y)
+        key = jax.random.PRNGKey(42)
+        for fn, tag in ((butterfly_allreduce_mean, "bfly"),
+                        (allgather_allreduce_mean, "star")):
+            @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=(P("data"), P("data")), check_vma=False)
+            def f(xl):
+                out, aux = fn(xl.reshape(-1), y_b, key, "data", cfg)
+                return out.reshape(1, -1), aux.fails.reshape(1)
+            out, fails = jax.jit(f)(xs)
+            assert bool(jnp.all(out == out[0])), tag + " outputs must be identical"
+            err = float(jnp.max(jnp.abs(out - mean[None])))
+            s = 2 * y / 15
+            assert err < 4 * s, (tag, err, s)
+            assert int(np.asarray(fails).sum()) == 0
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),),
+                 out_specs=P("data"), check_vma=False)
+        def frs(xl):
+            out, aux = rh_reduce_scatter_mean(xl.reshape(-1), y_b, key,
+                                              "data", cfg)
+            return out.reshape(1, -1)
+        shards = jax.jit(frs)(xs)
+        err = float(jnp.max(jnp.abs(shards.reshape(-1) - mean)))
+        assert err < 4 * 2 * y / 15, err
+        print("COLLECTIVES_OK")
+    """)
+    assert "COLLECTIVES_OK" in out
+
+
+@pytest.mark.slow
+def test_tp_dp_sp_loss_and_grad_equivalence():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from functools import partial
+        from repro.models.config import ModelConfig
+        from repro.models import transformer as T
+        from repro.models.sharding import (storage_spec, ShardCtx,
+            logical_to_storage, storage_to_logical, logical_shape)
+        from repro.dist.collectives import QSyncConfig
+        kw = dict(arch="t", family="dense", n_layers=2, d_model=32, n_heads=8,
+                  n_kv=4, head_dim=8, d_ff=64, vocab=96, act="swiglu")
+        def lp_make(key):
+            cfg = ModelConfig(**kw); c1 = ShardCtx(tp=1, dp=1)
+            metas = T.all_metas(cfg, c1)
+            out = {"layers": {}, "top": {}}; i = 0
+            for grp in ("layers", "top"):
+                L = 2 if grp == "layers" else 1
+                for name, meta in sorted(metas[grp].items()):
+                    k = jax.random.fold_in(key, i); i += 1
+                    shp = ((L,) + logical_shape(meta, c1)) if meta.scanned else logical_shape(meta, c1)
+                    out[grp][name] = jnp.ones(shp) if meta.init == "ones" else jax.random.normal(k, shp) * 0.05
+            return out
+        def run(tp, dp, sp, lp):
+            mesh = jax.make_mesh((dp, tp), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            cfg = ModelConfig(**kw)
+            ctx = ShardCtx(tp=tp, dp=dp, qcfg=QSyncConfig(q=256, bucket=32),
+                           grad_sync="fp32", seq_parallel=sp)
+            metas = T.all_metas(cfg, ctx)
+            params = {"layers": {k: jax.vmap(lambda x: logical_to_storage(x, m, ctx))(lp["layers"][k]) for k, m in metas["layers"].items()},
+                      "top": {k: logical_to_storage(lp["top"][k], m, ctx) for k, m in metas["top"].items()}}
+            pspec = {"layers": {k: storage_spec(m, ctx) for k, m in metas["layers"].items()},
+                     "top": {k: storage_spec(m, ctx) for k, m in metas["top"].items()}}
+            loss_fn = T.make_loss_fn(cfg, ctx)
+            y = T.y_init(cfg, ctx, 50.0)
+            batch = {"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 16), 0, 96),
+                     "targets": jax.random.randint(jax.random.PRNGKey(8), (4, 16), 0, 96),
+                     "mask": jnp.ones((4, 16))}
+            @partial(jax.shard_map, mesh=mesh,
+                     in_specs=(pspec, P(), {k: P("data") for k in batch}, P()),
+                     out_specs=(P(), pspec), check_vma=False)
+            def step(params, key, batch, y):
+                tele = T.tele_zeros(cfg, ctx)
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, tele, batch, key, y)
+                return jax.lax.psum(m["loss"], ("data",)) / ctx.dp, g
+            bp = {k: jax.device_put(v, NamedSharding(mesh, P("data"))) for k, v in batch.items()}
+            pp = jax.tree.map(lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), params, pspec)
+            loss, g = jax.jit(step)(pp, jax.random.PRNGKey(3), bp, y)
+            glog = {k: jax.vmap(lambda x: storage_to_logical(x, metas["layers"][k], ctx))(g["layers"][k]) for k in g["layers"]}
+            return float(loss), glog
+        l1, g1 = run(1, 1, False, lp_make(jax.random.PRNGKey(0)))
+        l2, g2 = run(4, 2, False, lp_make(jax.random.PRNGKey(0)))
+        l3, g3 = run(4, 2, True, lp_make(jax.random.PRNGKey(0)))
+        assert abs(l1 - l2) < 2e-2, (l1, l2)
+        assert abs(l1 - l3) < 2e-2, (l1, l3)
+        for k in g1:
+            a, b, c = map(np.asarray, (g1[k], g2[k], g3[k]))
+            scale = np.max(np.abs(a)) + 1e-9
+            assert np.max(np.abs(a - b)) / scale < 5e-2, k
+            assert np.max(np.abs(a - c)) / scale < 5e-2, k
+        print("TP_EQUIV_OK")
+    """)
+    assert "TP_EQUIV_OK" in out
+
+
+@pytest.mark.slow
+def test_decode_equivalence_tp4():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from functools import partial
+        from repro.models.config import ModelConfig
+        from repro.models.sharding import (ShardCtx, storage_spec,
+            logical_to_storage, logical_shape)
+        from repro.models import transformer as T
+        from repro.models import serve as SV
+        kw = dict(arch="t", family="dense", n_layers=2, d_model=32, n_heads=8,
+                  n_kv=2, head_dim=8, d_ff=64, vocab=96, act="swiglu")
+        def lp_make(key):
+            cfg = ModelConfig(**kw); c1 = ShardCtx(tp=1, dp=1)
+            metas = T.all_metas(cfg, c1)
+            out = {"layers": {}, "top": {}}; i = 0
+            for grp in ("layers", "top"):
+                L = 2 if grp == "layers" else 1
+                for name, meta in sorted(metas[grp].items()):
+                    k = jax.random.fold_in(key, i); i += 1
+                    shp = ((L,) + logical_shape(meta, c1)) if meta.scanned else logical_shape(meta, c1)
+                    out[grp][name] = jnp.ones(shp) if meta.init == "ones" else jax.random.normal(k, shp) * 0.05
+            return out
+        def run(tp, lp):
+            mesh = jax.make_mesh((1, tp), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            cfg = ModelConfig(**kw); ctx = ShardCtx(tp=tp, dp=1)
+            metas = T.all_metas(cfg, ctx)
+            params = {"layers": {k: jax.vmap(lambda x: logical_to_storage(x, m, ctx))(lp["layers"][k]) for k, m in metas["layers"].items()},
+                      "top": {k: logical_to_storage(lp["top"][k], m, ctx) for k, m in metas["top"].items()}}
+            pspec = {"layers": {k: storage_spec(m, ctx) for k, m in metas["layers"].items()},
+                     "top": {k: storage_spec(m, ctx) for k, m in metas["top"].items()}}
+            cache = SV.cache_zeros(cfg, ctx, 2, 16)
+            step = SV.make_serve_step(cfg, ctx)
+            cspec = jax.tree.map(lambda v: P("model"), cache)
+            cache_g = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (tp,) + v.shape), cache)
+            @partial(jax.shard_map, mesh=mesh, in_specs=(pspec, cspec, P(), P(), P()),
+                     out_specs=(P("model"), cspec), check_vma=False)
+            def f(params, cache, tokens, pos, key):
+                cache = jax.tree.map(lambda v: v[0], cache)
+                nxt, nc = step(params, cache, tokens, pos, key)
+                return nxt[None], jax.tree.map(lambda v: v[None], nc)
+            pp = jax.tree.map(lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), params, pspec)
+            toks = jnp.array([[5],[7]], jnp.int32)
+            outs = []
+            key = jax.random.PRNGKey(9)
+            for t in range(4):
+                nxt, cache_g = jax.jit(f)(pp, cache_g, toks, jnp.int32(t), key)
+                toks = nxt[0][:, None]
+                outs.append(np.asarray(nxt[0]))
+            return np.stack(outs)
+        o1, o4 = run(1, lp_make(jax.random.PRNGKey(0))), run(4, lp_make(jax.random.PRNGKey(0)))
+        assert np.array_equal(o1, o4), (o1, o4)
+        print("DECODE_EQUIV_OK")
+    """)
+    assert "DECODE_EQUIV_OK" in out

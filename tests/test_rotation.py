@@ -1,0 +1,43 @@
+"""Hadamard rotation tests (paper §6, Lemma 24 / Theorem 5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rotation as R
+
+
+def test_fwht_involutive_orthonormal():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 1024))
+    y = R.fwht_jnp(x)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(R.fwht_jnp(y)), np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rotate_unrotate_roundtrip_nonpow2():
+    d = 300   # padded to 512 internally
+    x = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    diag = R.rotation_keypair(jax.random.PRNGKey(2), d)
+    xr = R.rotate(x, diag)
+    assert xr.shape[-1] == 512
+    back = R.unrotate(xr, diag, d)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_lemma24_linf_concentration():
+    """||HDx||_inf = O(d^-1/2 ||x||_2 sqrt(log nd)) — test for a spike vector
+    (worst case for the unrotated l_inf)."""
+    d = 4096
+    x = jnp.zeros((d,)).at[7].set(100.0)        # single spike: linf = 100
+    bounds = []
+    for seed in range(20):
+        diag = R.rotation_keypair(jax.random.PRNGKey(seed), d)
+        xr = R.rotate(x, diag)
+        bounds.append(float(jnp.max(jnp.abs(xr))))
+    # after rotation the spike spreads: linf ~ 100/sqrt(d) * sqrt(2 log d)
+    expect = 100 / np.sqrt(d) * np.sqrt(2 * np.log(d * 20))
+    assert max(bounds) < 3 * expect, (max(bounds), expect)
+    assert max(bounds) < 10.0       # versus 100 unrotated

@@ -1,0 +1,42 @@
+"""Sublinear-communication scheme (paper §7): exact small-d implementation."""
+import numpy as np
+import pytest
+
+from repro.core.sublinear import (SublinearLattice, simulated_variance,
+                                  vqsgd_cross_polytope_variance)
+
+
+def test_error_bounded_by_3eps():
+    rng = np.random.default_rng(0)
+    sub = SublinearLattice(s=0.5, q=1.5, d=4)
+    for _ in range(60):
+        x = rng.normal(size=4) * 5
+        xv = x + rng.normal(size=4) * 0.05
+        p = sub.encode(x, rng)
+        z = sub.decode(p, xv)
+        assert np.linalg.norm(z - x) <= 3 * sub.eps + 1e-9
+
+
+def test_unbiased():
+    rng = np.random.default_rng(1)
+    sub = SublinearLattice(s=0.4, q=1.5, d=3)
+    x = np.array([0.3, -1.2, 2.7])
+    zs = [sub.decode(sub.encode(x, rng), x) for _ in range(4000)]
+    dev = np.abs(np.mean(zs, axis=0) - x).max()
+    assert dev < 5 * sub.s / np.sqrt(12 * 4000) * 3
+
+
+def test_bits_sublinear_in_regime():
+    sub = SublinearLattice(s=1.0, q=0.25, d=64)
+    assert sub.bits() < 64 * 2      # < 2 bits/coord
+
+
+def test_simulated_variance_monotonic_in_bits():
+    v1 = simulated_variance(256, 1.0, 0.5)
+    v2 = simulated_variance(256, 1.0, 1.0)
+    v3 = simulated_variance(256, 1.0, 2.0)
+    assert v1 > v2 > v3
+
+
+def test_vqsgd_comparison_scaling():
+    assert vqsgd_cross_polytope_variance(256, 1.0, 8) == pytest.approx(32.0)
