@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 pre-merge gate (see README.md / ROADMAP.md).
+#
+#   1. the fast test suite (everything not marked `slow`), fail-fast;
+#   2. a smoke run of the production quantized collectives on 8 emulated
+#      devices (examples/distributed_dme.py).
+#
+# The `slow` suite (tests/test_multidevice.py, tests/test_trainer.py) runs
+# the same way without `-m "not slow"`; it is required before releases but
+# too heavy for every push.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: fast suite =="
+python -m pytest -x -q -m "not slow"
+
+echo "== tier-1: distributed DME smoke (8 emulated devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python examples/distributed_dme.py
+
+echo "== tier-1 gate passed =="

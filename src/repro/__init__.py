@@ -1,0 +1,9 @@
+"""Reproduction of "New Bounds For Distributed Mean Estimation and Variance
+Reduction" (ICLR 2021) grown into a jax_pallas training/serving system.
+
+Importing ``repro`` installs small jax forward-compat aliases (see
+:mod:`repro._compat`) so the sources — written against the current
+``jax.shard_map`` / ``jax.sharding.AxisType`` API — also run on the pinned
+0.4.x jax in the CI image.
+"""
+from repro import _compat as _compat  # noqa: F401  (side-effect: jax shims)

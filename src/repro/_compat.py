@@ -1,0 +1,77 @@
+"""Compatibility shims for the pinned jax in the CI image.
+
+The codebase is written against the current public JAX API surface:
+
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+  * ``jax.sharding.AxisType`` (passed to ``jax.make_mesh(axis_types=...)``)
+
+Older jaxlib images (0.4.x) ship ``shard_map`` under ``jax.experimental``
+with the ``check_rep`` spelling and a ``make_mesh`` without ``axis_types``.
+Importing :mod:`repro` installs the forward-compatible aliases below so the
+same sources run on both.  Every shim is a no-op when the host jax already
+provides the API.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    _orig = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # axis_types only selects Auto vs Explicit sharding-in-types mode;
+        # pre-0.5 jax has Auto-only semantics, so dropping it is faithful.
+        return _orig(axis_shapes, axis_names, devices=devices)
+
+    make_mesh.__doc__ = _orig.__doc__
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        sig = inspect.signature(jax.shard_map)
+        if "check_vma" in sig.parameters:
+            return
+        _sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as _sm
+
+    sm_params = inspect.signature(_sm).parameters
+    check_kw = "check_vma" if "check_vma" in sm_params else "check_rep"
+
+    def shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, **kw):
+        check = check_vma if check_vma is not None else check_rep
+        if check is not None:
+            kw[check_kw] = check
+
+        def wrap(fn):
+            return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       **kw)
+
+        return wrap if f is None else wrap(f)
+
+    jax.shard_map = shard_map
+
+
+_install_axis_type()
+_install_make_mesh()
+_install_shard_map()

@@ -1,0 +1,11 @@
+"""Production distributed layer: quantized collectives + ZeRO-3 FSDP gather.
+
+``collectives``  — the paper's mean-estimation algorithms as shard_map
+                   collectives (Alg. 3 star / Alg. 4 tree analogues) with
+                   lattice quantization from :mod:`repro.core.lattice`.
+``fsdp``         — custom-vjp parameter gather: bf16 all-gather forward,
+                   lattice-quantized reduce-scatter backward, telemetry via
+                   the cotangent of a dummy ``tele`` input.
+"""
+from repro.dist import collectives
+from repro.dist import fsdp

@@ -1,0 +1,361 @@
+"""Quantized mean collectives inside ``jax.shard_map`` (paper §4, §9.1).
+
+This is the production counterpart of the reference algorithms in
+:mod:`repro.core.dme`, mapped onto SPMD collectives:
+
+* :func:`allgather_allreduce_mean` — **Algorithm 3 (star) analogue**.  In the
+  paper a random leader gathers everyone's colors, decodes against its own
+  input, averages and re-broadcasts.  On an accelerator mesh the "leader" is
+  every rank at once: each rank all-gathers the mod-q colors, decodes each
+  sender against its *own* vector as the anchor and averages the decoded
+  lattice points.  A successful decode recovers the sender's exact lattice
+  point (Lemma 15 / §9.1), so all ranks compute bit-identical means without a
+  second broadcast phase.
+
+* :func:`butterfly_allreduce_mean` — **Algorithm 4 (tree) analogue**:
+  recursive doubling.  In round ``r`` rank ``i`` exchanges quantized running
+  averages with rank ``i XOR 2^r`` and averages; after ``log2(n)`` rounds all
+  ranks hold the mean.  Because encoding is deterministic given the shared
+  dither ``u`` (paper §9.1), ranks holding equal values emit identical
+  colors, so outputs stay bit-identical — the paper's common-output
+  requirement — while the per-hop error accumulates like the tree's
+  ``O(eps log n)``.
+
+* :func:`rh_reduce_scatter_mean` — recursive-halving reduce-scatter of the
+  mean (the FSDP gradient path, :mod:`repro.dist.fsdp`).  Round ``r``
+  exchanges the half of the working segment the partner keeps; the receiver
+  decodes against its own half (inputs are within the distance bound by
+  assumption — the paper's "concentrated but possibly large norm" regime
+  where these input-norm-independent bounds beat norm-dependent schemes).
+
+All three operate per *bucket*: the flat vector is padded to a whole number
+of ``cfg.bucket``-sized buckets, each with its own distance bound
+``y_buckets[b]`` and lattice side ``s = 2*y/(q-1)``.  With
+``cfg.rotate=True`` each bucket is pre-rotated by the shared-randomness
+randomized Hadamard transform HD (paper §6, RLQSGD) — see
+:func:`_bucketize` / :func:`_unbucketize`.
+
+Decode-failure detection follows :func:`repro.core.lattice.decode_failure`
+(the §5 error-detection policy, realized as the distance surrogate; the
+checksum variant lives in :mod:`repro.core.error_detect`): failures are
+*counted* into ``aux.fails`` and escalation happens at step granularity in
+the trainer (y <- y * escalate, the SPMD form of RobustAgreement's
+``r <- r^2``).
+
+Wire accounting (:func:`wire_bytes_butterfly`, :func:`wire_bytes_allgather`)
+is built on :func:`repro.core.lattice.wire_bytes` — packed colors at
+``bits_for_q(q)`` bits per coordinate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lattice as L
+from repro.core import rotation as R
+
+Array = jax.Array
+
+# Fixed seed for the shared-randomness Hadamard diagonal: every rank derives
+# the same D without communication (one agreed constant stands in for the d
+# shared bits of §6).
+_ROTATION_SEED = 20210507
+
+
+class QSyncAux(NamedTuple):
+    """Telemetry emitted by every collective (consumed by dist/fsdp.py).
+
+    fails:    () f32 — number of detected decode failures (0 on success).
+    max_dist: () f32 — max observed |decoded - anchor|_inf (bucket space).
+    y_next:   () f32 — suggested distance bound for the next step
+                       (0 when nothing was measured, e.g. world size 1).
+    """
+    fails: Array
+    max_dist: Array
+    y_next: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QSyncConfig:
+    """Static config of the quantized sync path.
+
+    q:      number of mod-q color classes; wire cost bits_for_q(q) bits/coord
+            and lattice side s = 2*y/(q-1) for distance bound y.
+    bucket: coordinates per bucket (power of two); each bucket has its own
+            y / s and (optionally) its own Hadamard rotation block.
+    rotate: pre-rotate buckets with the shared-randomness HD transform
+            (paper §6) so adversarially-concentrated coordinates spread out.
+    """
+    q: int = 16
+    bucket: int = 4096
+    rotate: bool = False
+
+    def __post_init__(self):
+        if self.q < 2:
+            raise ValueError("q must be >= 2")
+        b = self.bucket
+        if b < 1 or (b & (b - 1)) != 0:
+            raise ValueError(f"bucket must be a power of two, got {b}")
+
+    @property
+    def bits(self) -> int:
+        return L.bits_for_q(self.q)
+
+    @property
+    def spec(self) -> L.LatticeSpec:
+        return L.LatticeSpec(self.q)
+
+
+def flat_size_padded(n: int, cfg: Union[QSyncConfig, int]) -> int:
+    """Smallest multiple of the bucket size >= n (flat wire length)."""
+    b = cfg.bucket if isinstance(cfg, QSyncConfig) else int(cfg)
+    return -(-n // b) * b
+
+
+def _bucket_diag(bucket: int) -> Array:
+    """Shared-randomness ±1 diagonal for the per-bucket HD rotation."""
+    return R.rotation_keypair(jax.random.PRNGKey(_ROTATION_SEED), bucket)
+
+
+def _bucketize(x: Array, cfg: QSyncConfig) -> Array:
+    """Flat (n,) -> (n_buckets, bucket) f32, zero-padded; HD-rotated per
+    bucket when cfg.rotate (block-diagonal, invertible by _unbucketize)."""
+    n = x.shape[0]
+    pad = flat_size_padded(n, cfg) - n
+    v = jnp.pad(x.astype(jnp.float32), (0, pad))
+    v = v.reshape(-1, cfg.bucket)
+    if cfg.rotate:
+        v = R.rotate(v, _bucket_diag(cfg.bucket))
+    return v
+
+
+def _unbucketize(b: Array, n: int, cfg: QSyncConfig) -> Array:
+    """Inverse of _bucketize: (n_buckets, bucket) -> flat (n,)."""
+    if cfg.rotate:
+        b = R.unrotate(b, _bucket_diag(cfg.bucket), cfg.bucket)
+    return b.reshape(-1)[:n]
+
+
+def _sides(y_buckets: Array, cfg: QSyncConfig) -> Array:
+    """(nb,) distance bounds -> (nb, 1) lattice sides s = 2y/(q-1)."""
+    return cfg.spec.side(y_buckets.astype(jnp.float32))[:, None]
+
+
+def _bucket_fails(z: Array, anchor: Array, y_col: Array):
+    """Vectorized lattice.decode_failure over buckets.
+
+    z, anchor: (..., nb, bucket); y_col: (nb, 1).  Returns (count, max_dist)
+    where count sums per-(sender, bucket) failure flags.
+    """
+    dist = jnp.abs(z - anchor)
+    failed = jnp.any(dist > 1.5 * y_col, axis=-1)
+    return jnp.sum(failed.astype(jnp.float32)), jnp.max(dist)
+
+
+def _encode(xb: Array, s: Array, u: Array) -> Array:
+    """Deterministic dithered encode: integer coords of every bucket."""
+    return L.encode_coords(xb, s, u)
+
+
+def _decode(colors: Array, anchor: Array, s: Array, u: Array,
+            cfg: QSyncConfig) -> Array:
+    """Nearest-point decode of mod-q colors against the local anchor."""
+    k = L.decode_coords(colors, anchor, s, u, q=cfg.q)
+    return L.coords_to_point(k, s, u)
+
+
+def _axis_size(axis_name) -> int:
+    # psum of a python int is computed statically from the mesh
+    return jax.lax.psum(1, axis_name)
+
+
+def _check_buckets(xb: Array, y_buckets: Array):
+    if y_buckets.shape[0] != xb.shape[0]:
+        raise ValueError(
+            f"y_buckets has {y_buckets.shape[0]} entries for {xb.shape[0]} "
+            f"buckets (vector padded to a whole number of buckets)")
+
+
+# ---------------------------------------------------------------------------
+# Star analogue (paper Algorithm 3): all-gather colors, decode locally
+# ---------------------------------------------------------------------------
+
+def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
+                             axis_name, cfg: QSyncConfig
+                             ) -> tuple[Array, QSyncAux]:
+    """Mean over `axis_name` of per-rank vectors, star-style.
+
+    Every rank sends mod-q colors once (all-gather) and decodes every sender
+    against its *own* vector; successful decodes recover the senders' exact
+    lattice points, so outputs are bit-identical across ranks.
+
+    Returns (mean (n,), QSyncAux).
+    """
+    n = x_local.shape[0]
+    xb = _bucketize(x_local, cfg)
+    _check_buckets(xb, y_buckets)
+    s = _sides(y_buckets, cfg)
+    u = L.shared_offset(key, xb.shape)
+
+    k_own = _encode(xb, s, u)
+    colors = L.color_of(k_own, cfg.q)
+    all_colors = jax.lax.all_gather(colors, axis_name)      # (world, nb, b)
+
+    z = _decode(all_colors, xb[None], s, u, cfg)            # (world, nb, b)
+    fails, max_dist = _bucket_fails(z, xb[None],
+                                    y_buckets.astype(jnp.float32)[:, None])
+    mean_b = jnp.mean(z, axis=0)
+
+    dev = jnp.max(jnp.abs(z - mean_b[None]))
+    aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * dev)
+    return _unbucketize(mean_b, n, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Tree analogue (paper Algorithm 4): recursive doubling
+# ---------------------------------------------------------------------------
+
+def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
+                             axis_name, cfg: QSyncConfig
+                             ) -> tuple[Array, QSyncAux]:
+    """Mean over `axis_name`, butterfly (recursive-doubling) topology.
+
+    log2(world) rounds; round r pairs rank i with i XOR 2^r.  Both partners
+    average the *quantized* points (own + partner's), so pairs — and after
+    all rounds, every rank — hold bit-identical values.  Per-round error is
+    at most s/2 per coordinate (dithered nearest rounding), accumulating to
+    O(s log world) like the paper's tree aggregation.
+
+    Returns (mean (n,), QSyncAux).
+    """
+    n = x_local.shape[0]
+    world = _axis_size(axis_name)
+    if world & (world - 1):
+        raise ValueError(f"butterfly needs a power-of-two world, got {world}")
+    cur = _bucketize(x_local, cfg)
+    _check_buckets(cur, y_buckets)
+    s = _sides(y_buckets, cfg)
+    y_col = y_buckets.astype(jnp.float32)[:, None]
+
+    fails = jnp.zeros((), jnp.float32)
+    max_dist = jnp.zeros((), jnp.float32)
+    rounds = int(np.log2(world)) if world > 1 else 0
+    for r in range(rounds):
+        u = L.shared_offset(jax.random.fold_in(key, r), cur.shape)
+        k_own = _encode(cur, s, u)
+        colors = L.color_of(k_own, cfg.q)
+        perm = [(i, i ^ (1 << r)) for i in range(world)]
+        c_partner = jax.lax.ppermute(colors, axis_name, perm)
+        k_partner = L.decode_coords(c_partner, cur, s, u, q=cfg.q)
+        f, d = _bucket_fails(L.coords_to_point(k_partner, s, u), cur, y_col)
+        fails = fails + f
+        max_dist = jnp.maximum(max_dist, d)
+        # average in integer coordinate space: int adds are exact and
+        # commutative, and the single float expression below is the same
+        # fusion on every rank — so partners produce bit-identical values
+        # (averaging the two float points instead lets XLA round the encode-
+        # and decode-side fusions differently by 1 ulp, breaking the paper's
+        # common-output requirement)
+        cur = (0.5 * (k_own + k_partner).astype(jnp.float32) + u) * s
+
+    aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * max_dist)
+    return _unbucketize(cur, n, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Recursive-halving reduce-scatter (the FSDP gradient path)
+# ---------------------------------------------------------------------------
+
+def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
+                           axis_name, cfg: QSyncConfig
+                           ) -> tuple[Array, QSyncAux]:
+    """Reduce-scatter of the mean via quantized recursive halving.
+
+    Round r pairs rank i with i XOR (world >> (r+1)); each sends (quantized)
+    the half of its working segment the partner keeps, decodes the received
+    half against its own (the anchor) and averages.  After log2(world)
+    rounds rank i holds bucket-aligned segment i of the mean:
+    shape (padded_n / world,).
+
+    Requires the padded bucket count to divide evenly by the world size
+    (guaranteed by fsdp.pad_to_shardable).
+    """
+    n = x_local.shape[0]
+    world = _axis_size(axis_name)
+    if world & (world - 1):
+        raise ValueError(f"recursive halving needs power-of-two world, "
+                         f"got {world}")
+    cur = _bucketize(x_local, cfg)
+    _check_buckets(cur, y_buckets)
+    nb = cur.shape[0]
+    if nb % world:
+        raise ValueError(f"{nb} buckets not divisible by world={world}; "
+                         f"pad with fsdp.pad_to_shardable first")
+    y_cur = y_buckets.astype(jnp.float32)
+    rank = jax.lax.axis_index(axis_name) if world > 1 else jnp.zeros((), jnp.int32)
+
+    fails = jnp.zeros((), jnp.float32)
+    max_dist = jnp.zeros((), jnp.float32)
+    rounds = int(np.log2(world)) if world > 1 else 0
+    for r in range(rounds):
+        dist = world >> (r + 1)
+        half = cur.shape[0] // 2
+        lo, hi = cur[:half], cur[half:]
+        y_lo, y_hi = y_cur[:half], y_cur[half:]
+        u_full = L.shared_offset(jax.random.fold_in(key, r), cur.shape)
+        u_lo, u_hi = u_full[:half], u_full[half:]
+        # bit==0: keep the low half, send the high half (and vice versa);
+        # the msb-first sweep leaves rank i with segment i of the vector.
+        bit = ((rank // dist) % 2).astype(jnp.bool_)
+        keep = jnp.where(bit, hi, lo)
+        send = jnp.where(bit, lo, hi)
+        y_keep = jnp.where(bit, y_hi, y_lo)
+        y_send = jnp.where(bit, y_lo, y_hi)
+        u_keep = jnp.where(bit, u_hi, u_lo)
+        u_send = jnp.where(bit, u_lo, u_hi)
+        s_keep = cfg.spec.side(y_keep)[:, None]
+        s_send = cfg.spec.side(y_send)[:, None]
+
+        k_send = _encode(send, s_send, u_send)
+        colors = L.color_of(k_send, cfg.q)
+        perm = [(i, i ^ dist) for i in range(world)]
+        c_recv = jax.lax.ppermute(colors, axis_name, perm)
+        # the partner encoded *its* copy of the coordinates we keep, with the
+        # same (u, s) — decode against our own half as the anchor
+        z = _decode(c_recv, keep, s_keep, u_keep, cfg)
+        f, d = _bucket_fails(z, keep, y_keep[:, None])
+        fails = fails + f
+        max_dist = jnp.maximum(max_dist, d)
+        cur = 0.5 * (keep + z)
+        y_cur = y_keep
+
+    if cfg.rotate:
+        cur = R.unrotate(cur, _bucket_diag(cfg.bucket), cfg.bucket)
+    out = cur.reshape(-1)
+    aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * max_dist)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting (ring model, bytes *sent per rank*)
+# ---------------------------------------------------------------------------
+
+def _payload_bytes(n: int, cfg: QSyncConfig) -> int:
+    """Packed-color bytes of one full-vector message (+4B/bucket for y)."""
+    padded = flat_size_padded(n, cfg)
+    return L.wire_bytes(padded, cfg.bits) + 4 * (padded // cfg.bucket)
+
+
+def wire_bytes_butterfly(n: int, world: int, cfg: QSyncConfig) -> int:
+    """Recursive doubling: log2(world) rounds, one full payload each."""
+    rounds = max(int(np.log2(world)), 0) if world > 1 else 0
+    return rounds * _payload_bytes(n, cfg)
+
+
+def wire_bytes_allgather(n: int, world: int, cfg: QSyncConfig) -> int:
+    """Ring all-gather of every rank's payload: (world-1) forwarded chunks."""
+    return max(world - 1, 0) * _payload_bytes(n, cfg)

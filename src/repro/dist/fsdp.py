@@ -1,0 +1,137 @@
+"""ZeRO-3 parameter gather with quantized gradient reduce-scatter.
+
+Storage layout (models/sharding.py): every parameter leaf lives *flat*,
+padded to ``dp * bucket`` granularity and sharded over the DP mesh axes.
+Inside the layer body :func:`make_fsdp_gather` rebuilds the full flat weight:
+
+  forward:   w_full = all_gather(cast(w_shard, gather_dtype))  over DP axes
+  backward:  g_shard = quantized reduce-scatter-mean of the DP cotangents
+             (``sync="lq"``: repro.dist.collectives.rh_reduce_scatter_mean,
+             the paper's lattice quantization; ``sync="fp32"``: exact
+             psum_scatter / dp)
+
+Telemetry rides the cotangent of a dummy ``tele`` input: the backward pass
+writes ``[max_dist, fails, y_next]`` (TELE_WIDTH columns) as the "gradient"
+of ``tele``, so ``jax.grad`` w.r.t. the tele pytree delivers per-leaf decode
+statistics to the trainer, which escalates the distance bound ``y`` on
+detected failures (the SPMD form of the paper's RobustAgreement retry).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.collectives import (QSyncConfig, flat_size_padded,
+                                    rh_reduce_scatter_mean)
+
+Array = jax.Array
+
+# tele rows: [max observed distance, decode failures, suggested next y]
+TELE_WIDTH = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class FSDPConfig:
+    """Static config of the FSDP gather (derived from ShardCtx)."""
+    axes: tuple[str, ...] = ("data",)
+    qcfg: QSyncConfig = QSyncConfig()
+    sync: str = "lq"                    # "lq" | "fp32"
+    gather_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.sync not in ("lq", "fp32"):
+            raise ValueError(f"sync must be 'lq' or 'fp32', got {self.sync!r}")
+
+
+def pad_to_shardable(n: int, dp: int, bucket: int) -> int:
+    """Smallest multiple of dp*bucket >= n (flat storage size of a leaf)."""
+    g = max(dp * bucket, 1)
+    return -(-max(n, 1) // g) * g
+
+
+def _dp_sizes(axes) -> list[int]:
+    return [jax.lax.psum(1, ax) for ax in axes]
+
+
+def _effective_bucket(cfg: QSyncConfig, m: int, dp: int) -> int:
+    """Largest power-of-two bucket <= cfg.bucket that tiles m over dp ranks.
+
+    Mirrors models/sharding.effective_bucket: small leaves are padded at a
+    shrunken-bucket granularity, so the gradient reduce-scatter must pick a
+    bucket size b with m % (dp*b) == 0.  Halving from cfg.bucket always
+    terminates because the storage padding used some cfg.bucket / 2^j.
+    """
+    b = cfg.bucket
+    while b > 1 and m % (dp * b):
+        b //= 2
+    return b
+
+
+def make_fsdp_gather(cfg: FSDPConfig):
+    """Returns gather(bundle) -> w_full.
+
+    bundle: {"w": (shard,) storage shard, "y": () f32 distance bound,
+             "key": PRNG key, "tele": (TELE_WIDTH,) zeros}.
+    w_full: (dp * shard,) in cfg.gather_dtype.
+    """
+    gdt = jnp.dtype(cfg.gather_dtype)
+
+    def _gather_fwd_value(w: Array) -> Array:
+        w = w.astype(gdt)
+        # innermost axis first so the concatenation order matches the
+        # (outer, ..., inner)-major flat storage layout
+        for ax in reversed(cfg.axes):
+            w = jax.lax.all_gather(w, ax, axis=0, tiled=True)
+        return w
+
+    @jax.custom_vjp
+    def gather(bundle):
+        return _gather_fwd_value(bundle["w"])
+
+    def fwd(bundle):
+        res = (bundle["w"], bundle["y"], bundle["key"])
+        return _gather_fwd_value(bundle["w"]), res
+
+    def bwd(res, g):
+        w_shard, y, key = res
+        g = g.astype(jnp.float32)
+        sizes = _dp_sizes(cfg.axes)
+        dp = int(np.prod(sizes))
+
+        if cfg.sync == "fp32":
+            gs = g
+            for ax in cfg.axes:          # outermost first: keep rank's segment
+                gs = jax.lax.psum_scatter(gs, ax, scatter_dimension=0,
+                                          tiled=True)
+            g_shard = gs / dp
+            tele = jnp.zeros((TELE_WIDTH,), jnp.float32)
+        else:
+            b = _effective_bucket(cfg.qcfg, g.shape[0], dp)
+            qc = dataclasses.replace(cfg.qcfg, bucket=b)
+            fails = jnp.zeros((), jnp.float32)
+            max_dist = jnp.zeros((), jnp.float32)
+            y_next = jnp.zeros((), jnp.float32)
+            g_shard = g
+            for i, ax in enumerate(cfg.axes):   # outermost first
+                nb = g_shard.shape[0] // b
+                y_b = jnp.full((nb,), y, jnp.float32)
+                g_shard, aux = rh_reduce_scatter_mean(
+                    g_shard, y_b, jax.random.fold_in(key, i), ax, qc)
+                fails = fails + aux.fails
+                max_dist = jnp.maximum(max_dist, aux.max_dist)
+                y_next = jnp.maximum(y_next, aux.y_next)
+            tele = jnp.stack([max_dist, fails, y_next])
+
+        ct = {
+            "w": g_shard.astype(w_shard.dtype),
+            "y": jnp.zeros_like(y),
+            "key": np.zeros(np.shape(key), jax.dtypes.float0),
+            "tele": tele,
+        }
+        return (ct,)
+
+    gather.defvjp(fwd, bwd)
+    return gather

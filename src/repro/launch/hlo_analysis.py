@@ -135,15 +135,45 @@ def analyze(hlo: str, default_trip: int = 1) -> Costs:
         return max(consts) if consts else default_trip
 
     def operand_names(op: _Op) -> list:
-        inner = op.line.split(f"{op.kind}(", 1)[-1]
-        inner = inner.split(")", 1)[0]
+        """Operand names of `op`, robust to current XLA HLO text.
+
+        Operands carry inline types with commas/braces/parens inside them —
+        ``dot(f32[8,8]{1,0} %Arg_0.1, f32[8,8]{1,0} %Arg_1.2)`` or tuple
+        types ``while((s32[], f32[8,8]{1,0}) %tuple)`` — so the argument
+        list must be extracted with bracket-aware scanning, not split(",").
+        """
+        start = op.line.find(f"{op.kind}(")
+        if start < 0:
+            return []
+        i = start + len(op.kind)           # at the opening "("
+        depth = 0
+        j = i
+        for j in range(i, len(op.line)):
+            ch = op.line[j]
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+                if depth == 0:
+                    break
+        inner = op.line[i + 1:j]
         out = []
-        for tok in inner.split(","):
-            tok = tok.strip().lstrip("%")
-            # drop inline type prefixes like "f32[8]{0} name"
-            parts = tok.split()
-            if parts:
-                out.append(parts[-1].lstrip("%"))
+        cur: list[str] = []
+        depth = 0
+        for ch in inner + ",":
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                tok = "".join(cur).strip()
+                cur = []
+                if tok:
+                    # drop the inline type prefix: the name is the last
+                    # whitespace-separated token, with its % sigil stripped
+                    out.append(tok.split()[-1].lstrip("%"))
+            else:
+                cur.append(ch)
         return out
 
     def eff_bytes(type_str: str, trip) -> float:

@@ -166,6 +166,14 @@ def init_leaf(key: Array, meta: LeafMeta, ctx: ShardCtx, n_layers: int,
 
 # ---------------------------------------------------------------------------
 # Logical <-> storage converters (checkpointing / elastic re-sharding / tests)
+#
+# Both converters are jit-compiled (meta/ctx static).  This is not merely a
+# speed choice: on jax 0.4.x, dispatching these reshape/split/concat chains
+# *eagerly* on an array that is already sharded over a multi-axis mesh (the
+# storage grads a shard_map step returns, spec P(None, tp, dp, None)) yields
+# values silently scaled by the model-axis size, while the same ops under jit
+# — or on a host copy — are exact.  Keeping the whole conversion inside one
+# jit makes the result independent of the input's placement.
 # ---------------------------------------------------------------------------
 
 def logical_shape(meta: LeafMeta, ctx: ShardCtx) -> tuple[int, ...]:
@@ -177,6 +185,7 @@ def logical_shape(meta: LeafMeta, ctx: ShardCtx) -> tuple[int, ...]:
     return tuple(s)
 
 
+@partial(jax.jit, static_argnums=(1, 2))
 def logical_to_storage(x, meta: LeafMeta, ctx: ShardCtx):
     """One logical layer tensor -> (tp, dp, shard_len) storage layout."""
     x = jnp.asarray(x, jnp.float32)
@@ -194,16 +203,28 @@ def logical_to_storage(x, meta: LeafMeta, ctx: ShardCtx):
     return flat.reshape(ctx.tp, ctx.dp, sl)
 
 
+@partial(jax.jit, static_argnums=(1, 2))
 def storage_to_logical(st, meta: LeafMeta, ctx: ShardCtx):
-    """(tp, dp, shard_len) storage -> one logical layer tensor."""
+    """(tp, dp, shard_len) storage -> one logical layer tensor.
+
+    The shard axis is merged into ``tp_dim`` with moveaxis+reshape rather
+    than per-shard integer indexing: indexing a model-sharded axis shard by
+    shard miscompiles on jax 0.4.x (values scaled by the axis size), while
+    the pure relayout formulation is handled exactly.
+    """
     n = meta.numel()
     flat = st.reshape(ctx.tp, -1)[:, :n]
     if meta.tp_replicated:
         return flat[0].reshape(meta.local_shape)
     shards = ctx.tp // meta.tp_repl
-    parts = [flat[t * meta.tp_repl].reshape(meta.local_shape)
-             for t in range(shards)]
-    return jnp.concatenate(parts, axis=meta.tp_dim)
+    if meta.tp_repl > 1:
+        flat = flat.reshape(shards, meta.tp_repl, n)[:, 0]
+    tp_dim = meta.tp_dim % len(meta.local_shape)
+    x = flat.reshape((shards,) + meta.local_shape)
+    x = jnp.moveaxis(x, 0, tp_dim)
+    shp = list(meta.local_shape)
+    shp[tp_dim] *= shards
+    return x.reshape(tuple(shp))
 
 
 # ---------------------------------------------------------------------------
@@ -272,10 +293,71 @@ def gather_param(storage: Array, meta: LeafMeta, ctx: ShardCtx,
 
 # ---------------------------------------------------------------------------
 # Common collective helpers used by the layers
+#
+# Every differentiated TP collective is wrapped in a custom_vjp that pins the
+# adjoint to the *same-axis* collective (transpose(psum) = psum, transpose
+# (all_gather) = reduce-scatter-sum, and vice versa).  The whole manual-
+# sharding scheme assumes exactly this rule — make_loss_fn scales the loss
+# by 1/tp to compensate — while shard_map's built-in transpose machinery
+# derives the adjoint from its replication tracking of the operands, which
+# has changed across jax versions (check_rep rewriting vs. literal
+# transposes).  Pinning the adjoint here makes the intended semantics
+# explicit and jax-version-independent.
 # ---------------------------------------------------------------------------
 
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _psum_pinned(x, axis_name):
+    return jax.lax.psum(x, axis_name)
+
+
+def _psum_pinned_fwd(x, axis_name):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _psum_pinned_bwd(axis_name, _, g):
+    return (jax.lax.psum(g, axis_name),)
+
+
+_psum_pinned.defvjp(_psum_pinned_fwd, _psum_pinned_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _all_gather_pinned(x, axis_name, axis):
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+
+def _all_gather_pinned_fwd(x, axis_name, axis):
+    return _all_gather_pinned(x, axis_name, axis), None
+
+
+def _all_gather_pinned_bwd(axis_name, axis, _, g):
+    return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=axis,
+                                 tiled=True),)
+
+
+_all_gather_pinned.defvjp(_all_gather_pinned_fwd, _all_gather_pinned_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _reduce_scatter_pinned(x, axis_name, axis):
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=axis,
+                                tiled=True)
+
+
+def _reduce_scatter_pinned_fwd(x, axis_name, axis):
+    return _reduce_scatter_pinned(x, axis_name, axis), None
+
+
+def _reduce_scatter_pinned_bwd(axis_name, axis, _, g):
+    return (jax.lax.all_gather(g, axis_name, axis=axis, tiled=True),)
+
+
+_reduce_scatter_pinned.defvjp(_reduce_scatter_pinned_fwd,
+                              _reduce_scatter_pinned_bwd)
+
+
 def psum_tp(x: Array, ctx: ShardCtx) -> Array:
-    return jax.lax.psum(x, ctx.tp_axis) if ctx.tp > 1 else x
+    return _psum_pinned(x, ctx.tp_axis) if ctx.tp > 1 else x
 
 
 def pmax_tp(x: Array, ctx: ShardCtx) -> Array:
@@ -285,14 +367,13 @@ def pmax_tp(x: Array, ctx: ShardCtx) -> Array:
 def all_gather_tp(x: Array, ctx: ShardCtx, axis: int = 0) -> Array:
     if ctx.tp == 1:
         return x
-    return jax.lax.all_gather(x, ctx.tp_axis, axis=axis, tiled=True)
+    return _all_gather_pinned(x, ctx.tp_axis, axis)
 
 
 def reduce_scatter_tp(x: Array, ctx: ShardCtx, axis: int = 0) -> Array:
     if ctx.tp == 1:
         return x
-    return jax.lax.psum_scatter(x, ctx.tp_axis, scatter_dimension=axis,
-                                tiled=True)
+    return _reduce_scatter_pinned(x, ctx.tp_axis, axis)
 
 
 def tp_index(ctx: ShardCtx) -> Array:

@@ -1,0 +1,165 @@
+"""Fast single-device tests for repro.dist (bucketing, padding, wire
+accounting, and the world-size-1 degenerate collectives)."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import lattice as L
+from repro.dist.collectives import (QSyncConfig, _bucketize, _unbucketize,
+                                    allgather_allreduce_mean,
+                                    butterfly_allreduce_mean,
+                                    flat_size_padded, rh_reduce_scatter_mean,
+                                    wire_bytes_allgather,
+                                    wire_bytes_butterfly)
+from repro.dist.fsdp import (FSDPConfig, TELE_WIDTH, make_fsdp_gather,
+                             pad_to_shardable)
+
+
+@pytest.mark.parametrize("rotate", [False, True])
+@pytest.mark.parametrize("n", [1024, 1000, 255, 4096, 1])
+def test_bucketize_roundtrip(rotate, n):
+    cfg = QSyncConfig(q=16, bucket=256, rotate=rotate)
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    b = _bucketize(x, cfg)
+    assert b.shape == (flat_size_padded(n, cfg) // cfg.bucket, cfg.bucket)
+    back = _unbucketize(b, n, cfg)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_bucketize_pads_with_zeros_unrotated():
+    cfg = QSyncConfig(q=16, bucket=64, rotate=False)
+    x = jnp.arange(70, dtype=jnp.float32)
+    b = _bucketize(x, cfg)
+    assert b.shape == (2, 64)
+    np.testing.assert_array_equal(np.asarray(b.reshape(-1)[70:]),
+                                  np.zeros(128 - 70, np.float32))
+
+
+def test_flat_size_padded_edges():
+    cfg = QSyncConfig(q=16, bucket=256)
+    assert flat_size_padded(256, cfg) == 256
+    assert flat_size_padded(257, cfg) == 512
+    assert flat_size_padded(1, cfg) == 256
+    # also accepts a raw bucket size
+    assert flat_size_padded(100, 32) == 128
+
+
+def test_pad_to_shardable_edges():
+    # n < dp*bucket pads up to one bucket per rank
+    assert pad_to_shardable(10, 8, 64) == 8 * 64
+    assert pad_to_shardable(8 * 64, 8, 64) == 8 * 64
+    assert pad_to_shardable(8 * 64 + 1, 8, 64) == 2 * 8 * 64
+    # degenerate sizes never return 0
+    assert pad_to_shardable(0, 1, 1) == 1
+    assert pad_to_shardable(1, 1, 1) == 1
+
+
+def test_wire_bytes_consistent_with_lattice():
+    cfg = QSyncConfig(q=16, bucket=4096)          # 4 bits/coord
+    n = 1 << 16
+    padded = flat_size_padded(n, cfg)
+    payload = L.wire_bytes(padded, cfg.bits) + 4 * (padded // cfg.bucket)
+    assert wire_bytes_butterfly(n, 8, cfg) == 3 * payload
+    assert wire_bytes_allgather(n, 8, cfg) == 7 * payload
+    assert wire_bytes_butterfly(n, 1, cfg) == 0
+    assert wire_bytes_allgather(n, 1, cfg) == 0
+    # q=256 doubles the per-coordinate bits
+    cfg8 = QSyncConfig(q=256, bucket=4096)
+    assert (wire_bytes_butterfly(n, 8, cfg8) >
+            1.9 * wire_bytes_butterfly(n, 8, cfg))
+
+
+def test_qsync_config_validation():
+    with pytest.raises(ValueError):
+        QSyncConfig(q=1)
+    with pytest.raises(ValueError):
+        QSyncConfig(bucket=48)            # not a power of two
+    assert QSyncConfig(q=16).bits == 4
+    assert QSyncConfig(q=256).bits == 8
+
+
+def _world1(fn, x, y_b, cfg):
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
+             check_vma=False)
+    def f(xl):
+        out, aux = fn(xl, y_b, jax.random.PRNGKey(7), "data", cfg)
+        return out, aux.fails
+
+    return jax.jit(f)(x)
+
+
+@pytest.mark.parametrize("fn", [allgather_allreduce_mean,
+                                butterfly_allreduce_mean,
+                                rh_reduce_scatter_mean])
+def test_world1_collectives_are_near_identity(fn):
+    """world==1: the 'mean' is the vector itself; butterfly/rh skip all
+    rounds, the star path round-trips one lattice encode (error <= s/2)."""
+    cfg = QSyncConfig(q=16, bucket=256)
+    n = 512
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    y = 1.0
+    y_b = jnp.full((n // cfg.bucket,), y)
+    out, fails = _world1(fn, x, y_b, cfg)
+    s = 2 * y / (cfg.q - 1)
+    assert out.shape == (n,)
+    assert float(jnp.max(jnp.abs(out - x))) <= 0.5 * s + 1e-6
+    assert float(fails) == 0.0
+
+
+def test_fsdp_gather_forward_and_grad_world1():
+    """dp=1 gather: forward is a bf16 cast, backward 'lq' is exact (no
+    quantization rounds), and telemetry arrives as the tele cotangent."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = FSDPConfig(axes=("data",), qcfg=QSyncConfig(q=16, bucket=64),
+                     sync="lq")
+    gather = make_fsdp_gather(cfg)
+    w = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    coef = jax.random.normal(jax.random.PRNGKey(1), (128,))
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
+             out_specs=(P(), P(), P()), check_vma=False)
+    def f(w, tele):
+        def loss(w, tele):
+            bundle = {"w": w, "y": jnp.float32(1.0),
+                      "key": jax.random.PRNGKey(3), "tele": tele}
+            full = gather(bundle)
+            return jnp.sum(full.astype(jnp.float32) * coef)
+
+        l, (gw, gt) = jax.value_and_grad(loss, argnums=(0, 1))(w, tele)
+        return l, gw, gt
+
+    tele0 = jnp.zeros((TELE_WIDTH,), jnp.float32)
+    l, gw, gt = jax.jit(f)(w, tele0)
+    np.testing.assert_allclose(np.asarray(l),
+                               float(jnp.sum(w.astype(jnp.bfloat16)
+                                             .astype(jnp.float32) * coef)),
+                               rtol=1e-6)
+    # dp=1 lq reduce-scatter has zero rounds: gradient is exact
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(coef), rtol=1e-2,
+                               atol=1e-3)
+    assert gt.shape == (TELE_WIDTH,)
+    assert float(gt[1]) == 0.0            # no decode failures
+
+
+def test_effective_bucket_matches_sharding_rule():
+    """fsdp picks a reduce-scatter bucket that tiles whatever padding
+    models/sharding.effective_bucket chose for small leaves."""
+    from repro.dist.fsdp import _effective_bucket
+    from repro.models.sharding import ShardCtx, effective_bucket
+    for n in (7, 32, 100, 1000, 5000):
+        for dp in (1, 2, 8):
+            qcfg = QSyncConfig(q=16, bucket=512)
+            ctx = ShardCtx(dp=dp, qcfg=qcfg)
+            b_store = effective_bucket(n, ctx)
+            m = pad_to_shardable(n, dp, b_store)
+            b_rs = _effective_bucket(qcfg, m, dp)
+            assert m % (dp * b_rs) == 0, (n, dp, b_store, b_rs, m)
