@@ -1,33 +1,64 @@
-"""Run every paper-table benchmark.  Prints ``name,us_per_call,derived``."""
+"""Run paper-table benchmarks.  Prints ``name,us_per_call,derived`` CSV rows
+plus one machine-readable ``BENCH_JSON {...}`` summary line (parsed by
+scripts/bench_ci.py for the CI regression gate), and exits nonzero when any
+module fails.
+
+    PYTHONPATH=src python benchmarks/run.py [--modules bench_kernels,bench_dme]
+"""
+import argparse
+import json
 import sys
 import traceback
 
+MODULES = [
+    "bench_norms", "bench_variance", "bench_convergence", "bench_sublinear",
+    "bench_multimachine", "bench_localsgd", "bench_nn",
+    "bench_power_iteration", "bench_lower_bound", "bench_dme",
+    "bench_kernels",
+]
 
-def main() -> None:
-    from benchmarks import (bench_norms, bench_variance, bench_convergence,
-                            bench_sublinear, bench_multimachine,
-                            bench_localsgd, bench_nn, bench_power_iteration,
-                            bench_lower_bound, bench_dme, bench_kernels)
-    mods = [bench_norms, bench_variance, bench_convergence, bench_sublinear,
-            bench_multimachine, bench_localsgd, bench_nn,
-            bench_power_iteration, bench_lower_bound, bench_dme,
-            bench_kernels]
-    print("name,us_per_call,derived")
+
+def run_modules(names: "list[str]") -> dict:
+    """Run the named benchmark modules; returns the BENCH_JSON summary."""
+    import importlib
+
+    from benchmarks import common
+
     failed = []
-    for m in mods:
+    results = {}
+    print("name,us_per_call,derived")
+    for name in names:
+        before = len(common.ROWS)
         try:
-            m.main()
+            importlib.import_module(f"benchmarks.{name}").main()
         except Exception:
-            failed.append(m.__name__)
+            failed.append(name)
             traceback.print_exc()
-    # roofline table (requires dry-run results; skipped gracefully otherwise)
-    try:
-        from benchmarks import roofline
-        roofline.main()
-    except Exception:
-        traceback.print_exc()
-    if failed:
-        print(f"FAILED: {failed}", file=sys.stderr)
+        for row in common.ROWS[before:]:
+            rname, us, derived = row.split(",", 2)
+            results[rname] = {"module": name, "us_per_call": float(us),
+                              "derived": derived}
+    return {"ok": not failed, "failed": failed, "results": results}
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--modules", default=",".join(MODULES),
+                   help="comma-separated benchmark module names")
+    args = p.parse_args(argv)
+    names = [m for m in args.modules.split(",") if m]
+    summary = run_modules(names)
+    if set(names) == set(MODULES):
+        # roofline table (requires dry-run results; skipped gracefully
+        # otherwise; not part of the machine-readable summary)
+        try:
+            from benchmarks import roofline
+            roofline.main()
+        except Exception:
+            traceback.print_exc()
+    print("BENCH_JSON " + json.dumps(summary))
+    if summary["failed"]:
+        print(f"FAILED: {summary['failed']}", file=sys.stderr)
         sys.exit(1)
 
 

@@ -1,6 +1,12 @@
 """Distributed DME on 8 (emulated) devices: the production quantized
 collectives inside shard_map — star (all-gather) vs butterfly topology.
 
+Each topology runs twice: packed=True (the production wire path — fused
+Pallas encode/decode moving bits_for_q(q)-bit colors in uint32 words plus
+the per-bucket sides sidecar) and packed=False (unpacked jnp colors, the
+oracle).  The two must agree *bitwise* — this script is part of the tier-1
+CI gate (scripts/ci.sh) and fails loudly if they drift.
+
     PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python examples/distributed_dme.py
 """
@@ -8,6 +14,7 @@ import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -29,18 +36,29 @@ cfg = QSyncConfig(q=16, bucket=4096)
 y_b = jnp.full((n // cfg.bucket,), y)
 key = jax.random.PRNGKey(42)
 
-for fn, wire_fn, tag in ((butterfly_allreduce_mean, wire_bytes_butterfly,
-                          "butterfly (tree-analogue)"),
-                         (allgather_allreduce_mean, wire_bytes_allgather,
-                          "all-gather (star-analogue)")):
+
+def run(fn, cfg):
     @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),),
              out_specs=P("data"), check_vma=False)
     def f(xl):
         out, aux = fn(xl.reshape(-1), y_b, key, "data", cfg)
         return out.reshape(1, -1)
-    out = np.asarray(jax.jit(f)(xs))
+    return np.asarray(jax.jit(f)(xs))
+
+
+for fn, wire_fn, n_msgs, tag in (
+        (butterfly_allreduce_mean, wire_bytes_butterfly, 3,
+         "butterfly (tree-analogue)"),
+        (allgather_allreduce_mean, wire_bytes_allgather, 7,
+         "all-gather (star-analogue)")):
+    out = run(fn, cfg)                                       # packed wire
+    out_ref = run(fn, dataclasses.replace(cfg, packed=False))
+    if not np.array_equal(out, out_ref):
+        raise SystemExit(f"{tag}: packed wire path diverged from the "
+                         f"unpacked jnp oracle")
     err = np.max(np.abs(out - np.asarray(mean)[None]))
     wire = wire_fn(n, 8, cfg)
-    print(f"{tag:28s}: identical={np.all(out == out[0])} "
-          f"max_err={err:.5f} wire={wire/1024:.0f}KiB vs fp32 {n*4/1024:.0f}KiB "
-          f"({n*4/wire:.1f}x compression)")
+    fp32 = n_msgs * n * 4        # the same topology moving f32 vectors
+    print(f"{tag:28s}: identical={np.all(out == out[0])} packed==jnp=True "
+          f"max_err={err:.5f} wire={wire/1024:.0f}KiB vs fp32 "
+          f"{fp32/1024:.0f}KiB ({fp32/wire:.1f}x compression)")

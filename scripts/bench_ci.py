@@ -1,0 +1,207 @@
+#!/usr/bin/env python
+"""CI benchmark gate: run benchmarks, record a dated baseline, fail on
+regression.
+
+Runs ``benchmarks/run.py`` (the ``bench_kernels`` + ``bench_dme`` gate set by
+default, ``--all`` for every module), parses its ``BENCH_JSON`` summary line,
+writes ``BENCH_<YYYY-MM-DD>.json`` at the repo root (us_per_call +
+wire_compression + derived metrics per benchmark), and compares the guarded
+entries against the most recent committed ``BENCH_*.json``:
+
+  * ``kernel_lattice_*``: fails if us_per_call regresses more than
+    REGRESSION (20%) plus a small absolute slack (interpret-mode CPU timings
+    jitter), or if the derived wire_compression drops.  The wall-clock gate
+    only applies when the baseline was recorded on the same machine class
+    (arch + cpu count) — absolute timings are not comparable across
+    hardware; the compression/MSE gates always apply;
+  * ``bench_dme`` rows: fails if any ``*mse*`` metric grows more than
+    REGRESSION — the accuracy side of the communication/variance trade-off.
+
+Wired into scripts/ci.sh behind ``CI_BENCH=1``.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import glob
+import json
+import os
+import platform
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GATE_MODULES = "bench_dme,bench_kernels"
+REGRESSION = 0.20          # >20% worse than baseline fails
+US_SLACK = 10_000.0        # absolute us slack: interpret-mode CPU timings
+                           # jitter by ~10ms under co-located load
+GUARD_PREFIX = "kernel_lattice_"
+
+
+def parse_derived(derived: str) -> dict:
+    """'n=1048576;wire_compression=8x;star_mse=1.2e-3' -> float metrics."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        m = re.fullmatch(r"(-?[\d.eE+-]+)x?", v.strip())
+        if m:
+            try:
+                out[k.strip()] = float(m.group(1))
+            except ValueError:
+                pass
+    return out
+
+
+def run_benchmarks(modules: "str | None") -> dict:
+    env = dict(os.environ)
+    # ROOT for `import benchmarks`, src/ for `import repro`
+    env["PYTHONPATH"] = os.pathsep.join(
+        [ROOT, os.path.join(ROOT, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, os.path.join(ROOT, "benchmarks", "run.py")]
+    if modules:
+        cmd += ["--modules", modules]
+    r = subprocess.run(cmd, capture_output=True, text=True, cwd=ROOT, env=env)
+    sys.stdout.write(r.stdout)
+    sys.stderr.write(r.stderr)
+    summary = None
+    for line in r.stdout.splitlines():
+        if line.startswith("BENCH_JSON "):
+            summary = json.loads(line[len("BENCH_JSON "):])
+    if summary is None:
+        print("bench_ci: no BENCH_JSON line from benchmarks/run.py",
+              file=sys.stderr)
+        sys.exit(1)
+    if r.returncode != 0 or not summary["ok"]:
+        print(f"bench_ci: benchmark modules failed: {summary['failed']}",
+              file=sys.stderr)
+        sys.exit(1)
+    return summary
+
+
+def to_entries(summary: dict) -> dict:
+    entries = {}
+    for name, row in summary["results"].items():
+        metrics = parse_derived(row["derived"])
+        entries[name] = {
+            "module": row["module"],
+            "us_per_call": row["us_per_call"],
+            "wire_compression": metrics.get("wire_compression"),
+            "metrics": metrics,
+        }
+    return entries
+
+
+def machine_id() -> str:
+    return f"{platform.machine()}-{os.cpu_count()}cpu"
+
+
+def latest_baseline() -> "tuple[str, dict] | tuple[None, None]":
+    """Most recent *committed* BENCH_*.json (so a same-day rerun, or an
+    uncommitted file carrying a sub-threshold regression, never becomes the
+    reference the gate ratchets against).  Falls back to the newest file on
+    disk outside a git checkout."""
+    try:
+        tracked = subprocess.run(
+            ["git", "ls-files", "BENCH_*.json"], cwd=ROOT,
+            capture_output=True, text=True, check=True).stdout.split()
+        paths = sorted(os.path.join(ROOT, p) for p in tracked)
+    except (subprocess.CalledProcessError, OSError):
+        paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not paths:
+        return None, None
+    # compare against the committed *content*, not the working-tree file a
+    # previous same-day run may have overwritten
+    rel = os.path.relpath(paths[-1], ROOT)
+    try:
+        blob = subprocess.run(["git", "show", f"HEAD:{rel}"], cwd=ROOT,
+                              capture_output=True, text=True, check=True
+                              ).stdout
+        return paths[-1], json.loads(blob)
+    except (subprocess.CalledProcessError, OSError, json.JSONDecodeError):
+        with open(paths[-1]) as f:
+            return paths[-1], json.load(f)
+
+
+def compare(entries: dict, base: dict, same_machine: bool = True
+            ) -> "list[str]":
+    """Regression problems vs the baseline.  Wall-clock (us_per_call) is
+    only gated when the baseline came from the same machine class —
+    absolute interpret-mode timings are not comparable across hardware;
+    wire_compression and the bench_dme MSEs are gated unconditionally."""
+    problems = []
+    base_entries = base.get("entries", {})
+    for name, e in entries.items():
+        b = base_entries.get(name)
+        if b is None:
+            continue
+        if name.startswith(GUARD_PREFIX):
+            if (same_machine and b["us_per_call"] > 0 and
+                    e["us_per_call"] > b["us_per_call"] * (1 + REGRESSION)
+                    + US_SLACK):
+                problems.append(
+                    f"{name}: {e['us_per_call']:.1f}us vs baseline "
+                    f"{b['us_per_call']:.1f}us (> +{REGRESSION:.0%})")
+            bw, ew = b.get("wire_compression"), e.get("wire_compression")
+            if bw and ew and ew < bw:
+                problems.append(f"{name}: wire_compression {ew}x dropped "
+                                f"below baseline {bw}x")
+        if e["module"] == "bench_dme":
+            for k, v in e["metrics"].items():
+                if "mse" not in k:
+                    continue
+                bv = b.get("metrics", {}).get(k)
+                if bv is not None and v > bv * (1 + REGRESSION) + 1e-12:
+                    problems.append(f"{name}.{k}: {v:.3e} vs baseline "
+                                    f"{bv:.3e} (> +{REGRESSION:.0%})")
+    return problems
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--all", action="store_true",
+                   help="run every benchmark module, not just the gate set")
+    p.add_argument("--no-write", action="store_true",
+                   help="compare only; do not write a new BENCH_<date>.json")
+    args = p.parse_args(argv)
+
+    summary = run_benchmarks(None if args.all else GATE_MODULES)
+    entries = to_entries(summary)
+
+    base_path, base = latest_baseline()
+    same_machine = bool(base) and base.get("machine", machine_id()) == \
+        machine_id()
+    problems = compare(entries, base, same_machine) if base else []
+
+    if not args.no_write:
+        today = datetime.date.today().isoformat()
+        out_path = os.path.join(ROOT, f"BENCH_{today}.json")
+        with open(out_path, "w") as f:
+            json.dump({"date": today, "machine": machine_id(),
+                       "modules": sorted(
+                           {e["module"] for e in entries.values()}),
+                       "entries": entries}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"bench_ci: wrote {os.path.relpath(out_path, ROOT)} "
+              f"({len(entries)} entries)")
+
+    if base_path:
+        print(f"bench_ci: baseline {os.path.relpath(base_path, ROOT)}"
+              + ("" if same_machine else
+                 " (different machine class: wall-clock gate skipped, "
+                 "compression/MSE gates enforced)"))
+    else:
+        print("bench_ci: no committed baseline yet; gate passes vacuously")
+    if problems:
+        print("bench_ci: REGRESSIONS DETECTED", file=sys.stderr)
+        for pr in problems:
+            print(f"  - {pr}", file=sys.stderr)
+        sys.exit(1)
+    print("bench_ci: gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,27 @@
 #!/usr/bin/env bash
-# Tier-1 pre-merge gate (see README.md / ROADMAP.md).
+# Tier-1 pre-merge gate (see README.md / ROADMAP.md; run by
+# .github/workflows/ci.yml on every push/PR):
 #
-#   1. the fast test suite (everything not marked `slow`), fail-fast;
-#   2. a smoke run of the production quantized collectives on 8 emulated
-#      devices (examples/distributed_dme.py).
+#   1. lint (scripts/lint.sh: ruff check, format advisory);
+#   2. the fast test suite (everything not marked `slow`), fail-fast —
+#      includes the 8-device packed-vs-unpacked wire parity subprocess test;
+#   3. a smoke run of the production quantized collectives on 8 emulated
+#      devices (examples/distributed_dme.py) — asserts the packed Pallas
+#      wire path is bit-identical to the jnp oracle;
+#   4. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
+#      kernel_lattice_* timings + bench_dme accuracy vs the last committed
+#      BENCH_*.json baseline).
 #
 # The `slow` suite (tests/test_multidevice.py, tests/test_trainer.py) runs
-# the same way without `-m "not slow"`; it is required before releases but
-# too heavy for every push.
+# the same way without `-m "not slow"`; it is required before releases and
+# runs nightly in CI, but is too heavy for every push.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: lint =="
+./scripts/lint.sh
 
 echo "== tier-1: fast suite =="
 python -m pytest -x -q -m "not slow"
@@ -19,5 +29,10 @@ python -m pytest -x -q -m "not slow"
 echo "== tier-1: distributed DME smoke (8 emulated devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python examples/distributed_dme.py
+
+if [[ "${CI_BENCH:-0}" == "1" ]]; then
+    echo "== tier-1: benchmark regression gate =="
+    python scripts/bench_ci.py
+fi
 
 echo "== tier-1 gate passed =="

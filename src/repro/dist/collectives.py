@@ -26,7 +26,8 @@ This is the production counterpart of the reference algorithms in
   exchanges the half of the working segment the partner keeps; the receiver
   decodes against its own half (inputs are within the distance bound by
   assumption — the paper's "concentrated but possibly large norm" regime
-  where these input-norm-independent bounds beat norm-dependent schemes).
+  where these input-norm-independent bounds beat norm-dependent schemes) and
+  averages own + received *quantized coordinates*, butterfly-style.
 
 All three operate per *bucket*: the flat vector is padded to a whole number
 of ``cfg.bucket``-sized buckets, each with its own distance bound
@@ -35,6 +36,23 @@ of ``cfg.bucket``-sized buckets, each with its own distance bound
 randomized Hadamard transform HD (paper §6, RLQSGD) — see
 :func:`_bucketize` / :func:`_unbucketize`.
 
+Wire format (``cfg.packed=True``, the default): what crosses the
+``all_gather``/``ppermute`` boundary is the *packed* payload produced by the
+fused Pallas kernels (:mod:`repro.kernels.lattice_encode` /
+``lattice_decode``) —
+
+  * ``words``: uint32 words holding ``bits_for_q(q)``-bit colors, 32/bits
+    per word, little-endian lanes, ``ceil(n/per)`` words for n coordinates
+    (the kernels tile the flat vector as (rows, 2048) in VMEM);
+  * ``sides``: one f32 lattice side per bucket (the per-bucket distance
+    bound's sidecar) — the receiver decodes with the *received* sides.
+
+That is ``d*log2(q)`` bits per machine plus 4 bytes per bucket — the
+paper's §3.2 wire cost, 8x smaller than f32 at q=16 — instead of the
+materialized 32-bit color buffers the ``packed=False`` jnp fallback moves.
+Both paths produce bit-identical means (asserted in
+tests/test_dist_collectives.py).
+
 Decode-failure detection follows :func:`repro.core.lattice.decode_failure`
 (the §5 error-detection policy, realized as the distance surrogate; the
 checksum variant lives in :mod:`repro.core.error_detect`): failures are
@@ -42,9 +60,11 @@ checksum variant lives in :mod:`repro.core.error_detect`): failures are
 the trainer (y <- y * escalate, the SPMD form of RobustAgreement's
 ``r <- r^2``).
 
-Wire accounting (:func:`wire_bytes_butterfly`, :func:`wire_bytes_allgather`)
-is built on :func:`repro.core.lattice.wire_bytes` — packed colors at
-``bits_for_q(q)`` bits per coordinate.
+Wire accounting (:func:`wire_bytes_butterfly`, :func:`wire_bytes_allgather`,
+:func:`wire_bytes_rh`) is built on :func:`repro.core.lattice.wire_bytes` —
+packed colors at ``bits_for_q(q)`` bits per coordinate plus the per-bucket
+sides sidecar, and matches the actual packed payload byte-for-byte
+(asserted in tests).
 """
 from __future__ import annotations
 
@@ -57,6 +77,7 @@ import numpy as np
 
 from repro.core import lattice as L
 from repro.core import rotation as R
+from repro.kernels import ops as K
 
 Array = jax.Array
 
@@ -89,10 +110,16 @@ class QSyncConfig:
             y / s and (optionally) its own Hadamard rotation block.
     rotate: pre-rotate buckets with the shared-randomness HD transform
             (paper §6) so adversarially-concentrated coordinates spread out.
+    packed: carry packed uint32 words (bits_for_q(q) bits/coord, fused
+            Pallas encode/decode) plus the per-bucket sides sidecar on the
+            wire.  False falls back to unpacked 32-bit color buffers through
+            the pure-jnp lattice ops (same bits semantically, 8x the bytes
+            at q=16; kept as the oracle path).
     """
     q: int = 16
     bucket: int = 4096
     rotate: bool = False
+    packed: bool = True
 
     def __post_init__(self):
         if self.q < 2:
@@ -123,26 +150,37 @@ def _bucket_diag(bucket: int) -> Array:
 
 def _bucketize(x: Array, cfg: QSyncConfig) -> Array:
     """Flat (n,) -> (n_buckets, bucket) f32, zero-padded; HD-rotated per
-    bucket when cfg.rotate (block-diagonal, invertible by _unbucketize)."""
+    bucket when cfg.rotate (block-diagonal, invertible by _unbucketize).
+    The packed path rotates through the Pallas FWHT kernel."""
     n = x.shape[0]
     pad = flat_size_padded(n, cfg) - n
     v = jnp.pad(x.astype(jnp.float32), (0, pad))
     v = v.reshape(-1, cfg.bucket)
     if cfg.rotate:
-        v = R.rotate(v, _bucket_diag(cfg.bucket))
+        v = R.rotate(v, _bucket_diag(cfg.bucket), use_kernel=cfg.packed)
     return v
 
 
 def _unbucketize(b: Array, n: int, cfg: QSyncConfig) -> Array:
     """Inverse of _bucketize: (n_buckets, bucket) -> flat (n,)."""
     if cfg.rotate:
-        b = R.unrotate(b, _bucket_diag(cfg.bucket), cfg.bucket)
+        b = R.unrotate(b, _bucket_diag(cfg.bucket), cfg.bucket,
+                       use_kernel=cfg.packed)
     return b.reshape(-1)[:n]
 
 
 def _sides(y_buckets: Array, cfg: QSyncConfig) -> Array:
-    """(nb,) distance bounds -> (nb, 1) lattice sides s = 2y/(q-1)."""
-    return cfg.spec.side(y_buckets.astype(jnp.float32))[:, None]
+    """(nb,) distance bounds -> (nb, 1) lattice sides s = 2y/(q-1).
+
+    The sides are pinned behind an optimization barrier: when y_buckets is a
+    compile-time constant XLA rewrites ``x / s`` into a reciprocal multiply
+    that is *not* exactly rounded (and does so per fusion context), flipping
+    round()s at halfway points — which would let the packed Pallas wire path
+    and the unpacked jnp path decode to different lattice points.  A runtime
+    divisor always compiles to a true IEEE division in both.
+    """
+    s = cfg.spec.side(y_buckets.astype(jnp.float32))[:, None]
+    return jax.lax.optimization_barrier(s)
 
 
 def _bucket_fails(z: Array, anchor: Array, y_col: Array):
@@ -161,11 +199,42 @@ def _encode(xb: Array, s: Array, u: Array) -> Array:
     return L.encode_coords(xb, s, u)
 
 
-def _decode(colors: Array, anchor: Array, s: Array, u: Array,
-            cfg: QSyncConfig) -> Array:
-    """Nearest-point decode of mod-q colors against the local anchor."""
-    k = L.decode_coords(colors, anchor, s, u, q=cfg.q)
-    return L.coords_to_point(k, s, u)
+# ---------------------------------------------------------------------------
+# Packed wire path (fused Pallas kernels; repro.kernels.ops)
+# ---------------------------------------------------------------------------
+
+def _sides_per_coord(sides: Array, bucket: int) -> Array:
+    """(nb,) per-bucket sides -> (nb*bucket,) per-coordinate sides."""
+    return jnp.repeat(sides.astype(jnp.float32), bucket)
+
+
+def _encode_packed(xb: Array, sides: Array, u: Array, cfg: QSyncConfig,
+                   return_coords: bool = False):
+    """Fused encode of bucketized xb -> packed uint32 wire words.
+
+    xb, u: (nb, bucket); sides: (nb,).  Returns words (packed_len(n, bits),)
+    — plus the int32 coords (nb, bucket) when return_coords.
+    """
+    s_flat = _sides_per_coord(sides, xb.shape[-1])
+    out = K.lattice_encode(xb.reshape(-1), u.reshape(-1), s_flat, q=cfg.q,
+                           return_coords=return_coords)
+    if return_coords:
+        return out[0], out[1].reshape(xb.shape)
+    return out
+
+
+def _decode_packed(words: Array, anchor: Array, sides: Array, u: Array,
+                   cfg: QSyncConfig, mode: str = "point") -> Array:
+    """Fused decode of wire words against the local anchor.
+
+    anchor, u: (nb, bucket); sides: (nb,) — the *received* sidecar.
+    Returns the decoded points (mode="point") or int32 coords
+    (mode="coords"), shaped like anchor.
+    """
+    s_flat = _sides_per_coord(sides, anchor.shape[-1])
+    out = K.lattice_decode(words, anchor.reshape(-1), u.reshape(-1), s_flat,
+                           q=cfg.q, mode=mode)
+    return out.reshape(anchor.shape)
 
 
 def _axis_size(axis_name) -> int:
@@ -191,7 +260,8 @@ def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
 
     Every rank sends mod-q colors once (all-gather) and decodes every sender
     against its *own* vector; successful decodes recover the senders' exact
-    lattice points, so outputs are bit-identical across ranks.
+    lattice points, so outputs are bit-identical across ranks.  With
+    cfg.packed the gathered payload is the packed words + sides sidecar.
 
     Returns (mean (n,), QSyncAux).
     """
@@ -201,14 +271,34 @@ def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
     s = _sides(y_buckets, cfg)
     u = L.shared_offset(key, xb.shape)
 
-    k_own = _encode(xb, s, u)
-    colors = L.color_of(k_own, cfg.q)
-    all_colors = jax.lax.all_gather(colors, axis_name)      # (world, nb, b)
+    world = _axis_size(axis_name)
+    if cfg.packed:
+        sides = s[:, 0]
+        words = _encode_packed(xb, sides, u, cfg)
+        all_words = jax.lax.all_gather(words, axis_name)    # (world, nw)
+        all_sides = jax.lax.all_gather(sides, axis_name)    # (world, nb)
+        k = jnp.stack([_decode_packed(all_words[i], xb, all_sides[i], u, cfg,
+                                      mode="coords")
+                       for i in range(world)])              # (world, nb, b)
+    else:
+        k_own = _encode(xb, s, u)
+        colors = L.color_of(k_own, cfg.q)
+        all_colors = jax.lax.all_gather(colors, axis_name)  # (world, nb, b)
+        k = L.decode_coords(all_colors, xb[None], s, u, q=cfg.q)
 
-    z = _decode(all_colors, xb[None], s, u, cfg)            # (world, nb, b)
+    # pin the (exact) integer coords: the producers differ between the packed
+    # kernel and jnp wire paths, and XLA's fusion/reduce-order/FMA choices
+    # downstream of each would otherwise drift by 1 ulp — everything below the
+    # barrier is an identical subgraph in both, so outputs stay bit-identical
+    k = jax.lax.optimization_barrier(k)
+    z = L.coords_to_point(k, s, u)                          # (world, nb, b)
     fails, max_dist = _bucket_fails(z, xb[None],
                                     y_buckets.astype(jnp.float32)[:, None])
-    mean_b = jnp.mean(z, axis=0)
+    # average in integer coordinate space (as the butterfly does): the int
+    # sum over senders is exact and order-free, so the mean is bit-identical
+    # however XLA reduces, and every rank computes the same value
+    ksum = jnp.sum(k, axis=0)
+    mean_b = (ksum.astype(jnp.float32) / world + u) * s
 
     dev = jnp.max(jnp.abs(z - mean_b[None]))
     aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * dev)
@@ -228,7 +318,10 @@ def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
     average the *quantized* points (own + partner's), so pairs — and after
     all rounds, every rank — hold bit-identical values.  Per-round error is
     at most s/2 per coordinate (dithered nearest rounding), accumulating to
-    O(s log world) like the paper's tree aggregation.
+    O(s log world) like the paper's tree aggregation.  With cfg.packed each
+    hop carries packed words + the sides sidecar; the fused encode also
+    returns the local coords so the exact integer-space average needs no
+    second pass over the vector.
 
     Returns (mean (n,), QSyncAux).
     """
@@ -246,11 +339,23 @@ def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
     rounds = int(np.log2(world)) if world > 1 else 0
     for r in range(rounds):
         u = L.shared_offset(jax.random.fold_in(key, r), cur.shape)
-        k_own = _encode(cur, s, u)
-        colors = L.color_of(k_own, cfg.q)
         perm = [(i, i ^ (1 << r)) for i in range(world)]
-        c_partner = jax.lax.ppermute(colors, axis_name, perm)
-        k_partner = L.decode_coords(c_partner, cur, s, u, q=cfg.q)
+        if cfg.packed:
+            sides = s[:, 0]
+            words, k_own = _encode_packed(cur, sides, u, cfg,
+                                          return_coords=True)
+            w_partner = jax.lax.ppermute(words, axis_name, perm)
+            sides_partner = jax.lax.ppermute(sides, axis_name, perm)
+            k_partner = _decode_packed(w_partner, cur, sides_partner, u, cfg,
+                                       mode="coords")
+        else:
+            k_own = _encode(cur, s, u)
+            colors = L.color_of(k_own, cfg.q)
+            c_partner = jax.lax.ppermute(colors, axis_name, perm)
+            k_partner = L.decode_coords(c_partner, cur, s, u, q=cfg.q)
+        # pin the (exact) integer coords so the float math below compiles
+        # from identical subgraphs whichever wire path produced them
+        k_own, k_partner = jax.lax.optimization_barrier((k_own, k_partner))
         f, d = _bucket_fails(L.coords_to_point(k_partner, s, u), cur, y_col)
         fails = fails + f
         max_dist = jnp.maximum(max_dist, d)
@@ -261,6 +366,10 @@ def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
         # and decode-side fusions differently by 1 ulp, breaking the paper's
         # common-output requirement)
         cur = (0.5 * (k_own + k_partner).astype(jnp.float32) + u) * s
+        # pin the round boundary: XLA otherwise re-fuses this expression into
+        # the next round's wire-path-specific consumers with different
+        # roundings, so packed and unpacked runs would drift
+        cur = jax.lax.optimization_barrier(cur)
 
     aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * max_dist)
     return _unbucketize(cur, n, cfg), aux
@@ -277,9 +386,12 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
 
     Round r pairs rank i with i XOR (world >> (r+1)); each sends (quantized)
     the half of its working segment the partner keeps, decodes the received
-    half against its own (the anchor) and averages.  After log2(world)
-    rounds rank i holds bucket-aligned segment i of the mean:
-    shape (padded_n / world,).
+    half against its own (the anchor), and averages own + received lattice
+    coordinates in exact integer space (see the in-loop comment; the same
+    quantized-average and common-output discipline as the butterfly).  After
+    log2(world) rounds rank i holds bucket-aligned segment i of the mean:
+    shape (padded_n / world,).  With cfg.packed the sent half is packed
+    words + its sides sidecar (the payload halves every round).
 
     Requires the padded bucket count to divide evenly by the world size
     (guaranteed by fsdp.pad_to_shardable).
@@ -295,7 +407,9 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
     if nb % world:
         raise ValueError(f"{nb} buckets not divisible by world={world}; "
                          f"pad with fsdp.pad_to_shardable first")
-    y_cur = y_buckets.astype(jnp.float32)
+    # pinned for the same reason as _sides: constant-derived lattice sides
+    # otherwise compile into context-dependent non-exact reciprocal multiplies
+    y_cur = jax.lax.optimization_barrier(y_buckets.astype(jnp.float32))
     rank = jax.lax.axis_index(axis_name) if world > 1 else jnp.zeros((), jnp.int32)
 
     fails = jnp.zeros((), jnp.float32)
@@ -320,21 +434,49 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
         s_keep = cfg.spec.side(y_keep)[:, None]
         s_send = cfg.spec.side(y_send)[:, None]
 
-        k_send = _encode(send, s_send, u_send)
-        colors = L.color_of(k_send, cfg.q)
         perm = [(i, i ^ dist) for i in range(world)]
-        c_recv = jax.lax.ppermute(colors, axis_name, perm)
-        # the partner encoded *its* copy of the coordinates we keep, with the
-        # same (u, s) — decode against our own half as the anchor
-        z = _decode(c_recv, keep, s_keep, u_keep, cfg)
+        if cfg.packed:
+            sides_send = s_send[:, 0]
+            words = _encode_packed(send, sides_send, u_send, cfg)
+            w_recv = jax.lax.ppermute(words, axis_name, perm)
+            sides_recv = jax.lax.ppermute(sides_send, axis_name, perm)
+            # the partner encoded *its* copy of the coordinates we keep; the
+            # received sidecar equals our s_keep (same replicated y_buckets)
+            k_recv = _decode_packed(w_recv, keep, sides_recv, u_keep, cfg,
+                                    mode="coords")
+        else:
+            k_send = _encode(send, s_send, u_send)
+            colors = L.color_of(k_send, cfg.q)
+            c_recv = jax.lax.ppermute(colors, axis_name, perm)
+            # the partner encoded *its* copy of the coordinates we keep, with
+            # the same (u, s) — decode against our own half as the anchor
+            k_recv = L.decode_coords(c_recv, keep, s_keep, u_keep, q=cfg.q)
+        # the wire-path boundary hands over *integer* coords only (like the
+        # butterfly): int values cannot FMA-contract into float consumers, so
+        # the shared float math below compiles identically for the packed and
+        # unpacked paths and the reduce-scatter stays bit-identical
+        k_recv = jax.lax.optimization_barrier(k_recv)
+        z = L.coords_to_point(k_recv, s_keep, u_keep)
         f, d = _bucket_fails(z, keep, y_keep[:, None])
         fails = fails + f
         max_dist = jnp.maximum(max_dist, d)
-        cur = 0.5 * (keep + z)
+        # average in integer coordinate space, exactly as the butterfly does:
+        # quantize our own half onto the same (u, s) lattice and average the
+        # *coordinates*.  A float average 0.5*(keep + z) is not
+        # compilation-stable — XLA CPU FMA-contracts/reassociates the mul-add
+        # chain per fusion context (even across optimization_barrier), which
+        # made the packed and unpacked wire paths drift by 1 ulp; the int sum
+        # is exact and the remaining (0.5*k + u) * s has no contractible
+        # add-of-product, so both paths stay bit-identical.  The extra s/2
+        # dithered rounding on our own half is the paper's Algorithm 4
+        # error model (unbiased, O(s log n) accumulated).
+        k_own = L.encode_coords(keep, s_keep, u_keep)
+        cur = (0.5 * (k_own + k_recv).astype(jnp.float32) + u_keep) * s_keep
         y_cur = y_keep
 
     if cfg.rotate:
-        cur = R.unrotate(cur, _bucket_diag(cfg.bucket), cfg.bucket)
+        cur = R.unrotate(cur, _bucket_diag(cfg.bucket), cfg.bucket,
+                         use_kernel=cfg.packed)
     out = cur.reshape(-1)
     aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * max_dist)
     return out, aux
@@ -345,8 +487,15 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
 # ---------------------------------------------------------------------------
 
 def _payload_bytes(n: int, cfg: QSyncConfig) -> int:
-    """Packed-color bytes of one full-vector message (+4B/bucket for y)."""
+    """Bytes of one full-vector message.
+
+    packed=True: packed-color words + 4B/bucket sides sidecar — the *actual*
+    collective payload (words.nbytes + sides.nbytes), asserted in tests.
+    packed=False: the unpacked uint32 color buffer the jnp fallback moves
+    (no sidecar; sides stay local)."""
     padded = flat_size_padded(n, cfg)
+    if not cfg.packed:
+        return 4 * padded
     return L.wire_bytes(padded, cfg.bits) + 4 * (padded // cfg.bucket)
 
 
@@ -359,3 +508,21 @@ def wire_bytes_butterfly(n: int, world: int, cfg: QSyncConfig) -> int:
 def wire_bytes_allgather(n: int, world: int, cfg: QSyncConfig) -> int:
     """Ring all-gather of every rank's payload: (world-1) forwarded chunks."""
     return max(world - 1, 0) * _payload_bytes(n, cfg)
+
+
+def wire_bytes_rh(n: int, world: int, cfg: QSyncConfig) -> int:
+    """Recursive halving: round r sends the (padded/2^{r+1})-coordinate half
+    of the working segment (packed: words + its sides sidecar; unpacked:
+    the uint32 color buffer); the payload halves every round, summing to
+    ~one full payload."""
+    padded = flat_size_padded(n, cfg)
+    nb = padded // cfg.bucket
+    rounds = max(int(np.log2(world)), 0) if world > 1 else 0
+    total = 0
+    for r in range(rounds):
+        seg = padded >> (r + 1)
+        if cfg.packed:
+            total += L.wire_bytes(seg, cfg.bits) + 4 * (nb >> (r + 1))
+        else:
+            total += 4 * seg
+    return total

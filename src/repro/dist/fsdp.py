@@ -8,7 +8,11 @@ Inside the layer body :func:`make_fsdp_gather` rebuilds the full flat weight:
   backward:  g_shard = quantized reduce-scatter-mean of the DP cotangents
              (``sync="lq"``: repro.dist.collectives.rh_reduce_scatter_mean,
              the paper's lattice quantization; ``sync="fp32"``: exact
-             psum_scatter / dp)
+             psum_scatter / dp).  With ``qcfg.packed`` (default) every
+             recursive-halving hop moves the fused-Pallas packed payload
+             (bits_for_q(q) bits per coordinate + the per-bucket sides
+             sidecar) instead of 32-bit color buffers; see
+             :func:`wire_bytes_bwd` for the per-leaf accounting.
 
 Telemetry rides the cotangent of a dummy ``tele`` input: the backward pass
 writes ``[max_dist, fails, y_next]`` (TELE_WIDTH columns) as the "gradient"
@@ -25,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.collectives import (QSyncConfig, flat_size_padded,
-                                    rh_reduce_scatter_mean)
+                                    rh_reduce_scatter_mean, wire_bytes_rh)
 
 Array = jax.Array
 
@@ -68,6 +72,33 @@ def _effective_bucket(cfg: QSyncConfig, m: int, dp: int) -> int:
     while b > 1 and m % (dp * b):
         b //= 2
     return b
+
+
+def wire_bytes_bwd(m: int, sizes: "list[int]", cfg: FSDPConfig) -> int:
+    """Bytes *sent per rank* by one gradient sync of a gathered leaf.
+
+    m: gathered flat length (dp * shard); sizes: DP mesh axis sizes in the
+    order of cfg.axes (the bwd reduce-scatters over them outermost first,
+    the working segment shrinking by each axis size).
+
+    sync="lq": recursive-halving rounds carry the packed payload
+    (wire_bytes_rh: bits_for_q(q) bits/coord + the per-bucket sides
+    sidecar).  sync="fp32": ring psum_scatter moving (ws-1)/ws of the
+    segment as f32 per axis.
+    """
+    dp = int(np.prod(sizes))
+    total, cur = 0, m
+    if cfg.sync == "fp32":
+        for ws in sizes:
+            total += 4 * (cur - cur // ws)
+            cur //= ws
+        return total
+    b = _effective_bucket(cfg.qcfg, m, dp)
+    qc = dataclasses.replace(cfg.qcfg, bucket=b)
+    for ws in sizes:
+        total += wire_bytes_rh(cur, ws, qc)
+        cur //= ws
+    return total
 
 
 def make_fsdp_gather(cfg: FSDPConfig):

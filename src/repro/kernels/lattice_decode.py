@@ -8,8 +8,18 @@ plus the anchor once, writes the decoded vector once.
     k     = k_a + ((c - k_a + q/2) mod q) - q/2     [mod via AND, q = 2^bits']
     z     = (k + u) * s
 
-An optional fused epilogue computes the running average used by the
-quantized reduce-scatter (dist/collectives.py):  out = (z + acc*cnt)/(cnt+1).
+The side ``s`` is a scalar or a per-coordinate (N,) array (the broadcast of
+the collectives' per-bucket sides sidecar that rides the wire next to the
+packed words).
+
+Output modes:
+  * mode="point"  — the decoded lattice point z (f32), optionally with the
+    running-average epilogue ``out = (z + anchor*avg_cnt)/(avg_cnt+1)`` used
+    by the ring reduce-scatter;
+  * mode="coords" — the int32 coordinates k.  The butterfly collective
+    averages own+partner coordinates in exact integer space (bit-identical
+    outputs across ranks, the paper's common-output requirement), so it
+    needs k rather than z.
 """
 from __future__ import annotations
 
@@ -25,8 +35,8 @@ DEFAULT_BLOCK_ROWS = 8
 
 
 def _decode_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int, bits: int,
-                   avg_cnt: Optional[int]):
-    s = s_ref[0, 0]
+                   avg_cnt: Optional[int], scalar_s: bool, coords: bool):
+    s = s_ref[0, 0] if scalar_s else s_ref[...]
     per = 32 // bits
     w = w_ref[...]                                    # (bm, COLS//per) uint32
     bm = w.shape[0]
@@ -38,25 +48,33 @@ def _decode_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int, bits: int,
     t = anchor / s - u
     k_a = jnp.round(t).astype(jnp.int32)
     delta = jnp.bitwise_and(c - k_a + (q // 2), q - 1) - (q // 2)
-    z = ((k_a + delta).astype(jnp.float32) + u) * s
+    k = k_a + delta
+    if coords:
+        o_ref[...] = k
+        return
+    z = (k.astype(jnp.float32) + u) * s
     if avg_cnt is not None:
         z = (z + anchor * avg_cnt) * (1.0 / (avg_cnt + 1))
     o_ref[...] = z.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("q", "bits", "n", "avg_cnt",
-                                             "block_rows", "interpret"))
+                                             "mode", "block_rows",
+                                             "interpret"))
 def lattice_decode_pallas(words: jax.Array, anchor: jax.Array, u: jax.Array,
                           s: jax.Array, *, q: int, bits: int, n: int,
-                          avg_cnt: Optional[int] = None,
+                          avg_cnt: Optional[int] = None, mode: str = "point",
                           block_rows: int = DEFAULT_BLOCK_ROWS,
                           interpret: bool = True) -> jax.Array:
-    """Decode packed words against flat anchor (N,).  Returns z (N,) f32.
+    """Decode packed words against flat anchor (N,).
 
-    avg_cnt: if given, fuse the running-average epilogue
-             out = (z + anchor*avg_cnt)/(avg_cnt+1)  (ring reduce-scatter).
+    mode="point": returns z (N,) f32; avg_cnt, if given, fuses the
+    running-average epilogue out = (z + anchor*avg_cnt)/(avg_cnt+1).
+    mode="coords": returns the int32 coordinates k (N,).
     """
     assert q & (q - 1) == 0 and bits in (2, 4, 8, 16)
+    assert mode in ("point", "coords")
+    assert avg_cnt is None or mode == "point"
     per = 32 // bits
     tile = block_rows * COLS
     pad = (-n) % tile
@@ -65,19 +83,28 @@ def lattice_decode_pallas(words: jax.Array, anchor: jax.Array, u: jax.Array,
     rows = af.shape[0]
     wpad = rows * (COLS // per) - words.shape[0]
     wf = jnp.pad(words, (0, wpad)).reshape(rows, COLS // per)
-    s2 = jnp.asarray(s, jnp.float32).reshape(1, 1)
+    scalar_s = jnp.ndim(s) == 0
+    if scalar_s:
+        sf = jnp.asarray(s, jnp.float32).reshape(1, 1)
+        s_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    else:
+        sf = jnp.pad(s.astype(jnp.float32), (0, pad),
+                     constant_values=1.0).reshape(-1, COLS)
+        s_spec = pl.BlockSpec((block_rows, COLS), lambda i: (i, 0))
     bm = block_rows
+    out_dtype = jnp.int32 if mode == "coords" else jnp.float32
     out = pl.pallas_call(
-        functools.partial(_decode_kernel, q=q, bits=bits, avg_cnt=avg_cnt),
+        functools.partial(_decode_kernel, q=q, bits=bits, avg_cnt=avg_cnt,
+                          scalar_s=scalar_s, coords=(mode == "coords")),
         grid=(rows // bm,),
         in_specs=[
             pl.BlockSpec((bm, COLS // per), lambda i: (i, 0)),
             pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
             pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            s_spec,
         ],
         out_specs=pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rows, COLS), out_dtype),
         interpret=interpret,
-    )(wf, af, uf, s2)
+    )(wf, af, uf, sf)
     return out.reshape(-1)[:n]

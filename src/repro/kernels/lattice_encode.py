@@ -10,6 +10,16 @@ processes (BM, COLS) in VMEM and writes (BM, COLS/per) packed words, where
 per = 32/bits colors per word.  COLS=2048 keeps the packed lanes >= 128 for
 every supported bit-width (2,4,8,16).
 
+The lattice side ``s`` is either a scalar (one bound for the whole vector)
+or a per-coordinate (N,) array — the broadcast of per-*bucket* sides used by
+the quantized collectives (repro.dist.collectives), whose buckets each carry
+their own distance bound y and side s = 2y/(q-1).
+
+With ``return_coords=True`` the kernel additionally writes the int32 lattice
+coordinates ``k = round(x/s - u)`` — the butterfly collective needs both the
+wire words (to send) and the local coordinates (to average in exact integer
+space) from a single fused pass over x.
+
 q must be a power of two (the paper's experiments use q in {8, 16, 64});
 mod-q of the two's-complement coordinate is a bitwise AND with q-1.
 """
@@ -19,15 +29,15 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 COLS = 2048
 DEFAULT_BLOCK_ROWS = 8
 
 
-def _encode_kernel(x_ref, u_ref, s_ref, o_ref, *, q: int, bits: int):
-    s = s_ref[0, 0]
+def _encode_kernel(x_ref, u_ref, s_ref, *o_refs, q: int, bits: int,
+                   scalar_s: bool, with_coords: bool):
+    s = s_ref[0, 0] if scalar_s else s_ref[...]
     t = x_ref[...].astype(jnp.float32) / s - u_ref[...]
     k = jnp.round(t).astype(jnp.int32)
     c = jnp.bitwise_and(k, q - 1).astype(jnp.uint32)      # mod q (q = 2^bits')
@@ -36,19 +46,23 @@ def _encode_kernel(x_ref, u_ref, s_ref, o_ref, *, q: int, bits: int):
     c = c.reshape(bm, ccols // per, per)
     shifts = (jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(bits))
     # fields are disjoint -> sum == bitwise OR, and sum reduces cleanly on TPU
-    o_ref[...] = jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)
+    o_refs[0][...] = jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)
+    if with_coords:
+        o_refs[1][...] = k
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("q", "bits", "block_rows", "interpret"))
+                   static_argnames=("q", "bits", "return_coords",
+                                    "block_rows", "interpret"))
 def lattice_encode_pallas(x: jax.Array, u: jax.Array, s: jax.Array,
-                          *, q: int, bits: int,
+                          *, q: int, bits: int, return_coords: bool = False,
                           block_rows: int = DEFAULT_BLOCK_ROWS,
-                          interpret: bool = True) -> jax.Array:
-    """Encode flat x (N,) with dither u (N,) and side s (scalar).
+                          interpret: bool = True):
+    """Encode flat x (N,) with dither u (N,) and side s (scalar or (N,)).
 
-    Returns packed uint32 words of length ceil(N/per) where per=32/bits.
-    N is padded internally to a (rows, COLS) view; callers slice via
+    Returns packed uint32 words of length ceil(N/per) where per=32/bits —
+    plus the int32 coordinates (N,) when ``return_coords``.  N is padded
+    internally to a (rows, COLS) view; callers slice via
     repro.core.lattice.packed_len(N, bits).
     """
     assert q & (q - 1) == 0 and 2 <= q <= (1 << bits), (q, bits)
@@ -59,21 +73,38 @@ def lattice_encode_pallas(x: jax.Array, u: jax.Array, s: jax.Array,
     pad = (-n) % tile
     xf = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
     uf = jnp.pad(u.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
-    s2 = jnp.asarray(s, jnp.float32).reshape(1, 1)
+    scalar_s = jnp.ndim(s) == 0
+    if scalar_s:
+        sf = jnp.asarray(s, jnp.float32).reshape(1, 1)
+        s_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    else:
+        # pad sides with ones so the padded tail encodes deterministic zeros
+        sf = jnp.pad(s.astype(jnp.float32), (0, pad),
+                     constant_values=1.0).reshape(-1, COLS)
+        s_spec = pl.BlockSpec((block_rows, COLS), lambda i: (i, 0))
     rows = xf.shape[0]
     bm = block_rows
     grid = (rows // bm,)
+    out_shape = [jax.ShapeDtypeStruct((rows, COLS // per), jnp.uint32)]
+    out_specs = [pl.BlockSpec((bm, COLS // per), lambda i: (i, 0))]
+    if return_coords:
+        out_shape.append(jax.ShapeDtypeStruct((rows, COLS), jnp.int32))
+        out_specs.append(pl.BlockSpec((bm, COLS), lambda i: (i, 0)))
     out = pl.pallas_call(
-        functools.partial(_encode_kernel, q=q, bits=bits),
+        functools.partial(_encode_kernel, q=q, bits=bits, scalar_s=scalar_s,
+                          with_coords=return_coords),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
             pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            s_spec,
         ],
-        out_specs=pl.BlockSpec((bm, COLS // per), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, COLS // per), jnp.uint32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(xf, uf, s2)
+    )(xf, uf, sf)
     n_words = (n + per - 1) // per
-    return out.reshape(-1)[:n_words]
+    words = out[0].reshape(-1)[:n_words]
+    if return_coords:
+        return words, out[1].reshape(-1)[:n]
+    return words

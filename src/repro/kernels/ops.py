@@ -37,25 +37,33 @@ def fwht(x: jax.Array) -> jax.Array:
     return fwht_pallas(x, interpret=_interpret())
 
 
-def lattice_encode(x: jax.Array, u: jax.Array, s, *, q: int) -> jax.Array:
-    """Fused encode of flat x -> packed uint32 words."""
+def lattice_encode(x: jax.Array, u: jax.Array, s, *, q: int,
+                   return_coords: bool = False):
+    """Fused encode of flat x -> packed uint32 words (+ coords if asked).
+
+    s is a scalar side or a per-coordinate (N,) array (per-bucket sides
+    broadcast by the collectives)."""
     bits = L.bits_for_q(q)
     if not _pow2(q) or bits not in (2, 4, 8, 16) or x.size < 32:
-        return _ref.lattice_encode_ref(x, u, s, q=q, bits=bits)
+        return _ref.lattice_encode_ref(x, u, s, q=q, bits=bits,
+                                       return_coords=return_coords)
     return lattice_encode_pallas(x, u, jnp.asarray(s), q=q, bits=bits,
+                                 return_coords=return_coords,
                                  interpret=_interpret())
 
 
 def lattice_decode(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
-                   *, q: int, avg_cnt: Optional[int] = None) -> jax.Array:
-    """Fused decode (optionally with the running-average epilogue)."""
+                   *, q: int, avg_cnt: Optional[int] = None,
+                   mode: str = "point") -> jax.Array:
+    """Fused decode: mode="point" (z, optional running-average epilogue)
+    or mode="coords" (int32 lattice coordinates)."""
     bits = L.bits_for_q(q)
     n = anchor.shape[0]
     if not _pow2(q) or bits not in (2, 4, 8, 16) or n < 32:
         return _ref.lattice_decode_ref(words, anchor, u, s, q=q, bits=bits,
-                                       n=n, avg_cnt=avg_cnt)
+                                       n=n, avg_cnt=avg_cnt, mode=mode)
     return lattice_decode_pallas(words, anchor, u, jnp.asarray(s), q=q,
-                                 bits=bits, n=n, avg_cnt=avg_cnt,
+                                 bits=bits, n=n, avg_cnt=avg_cnt, mode=mode,
                                  interpret=_interpret())
 
 

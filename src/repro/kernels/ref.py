@@ -21,18 +21,22 @@ def fwht_ref(x: jax.Array) -> jax.Array:
 
 
 def lattice_encode_ref(x: jax.Array, u: jax.Array, s, *, q: int,
-                       bits: int) -> jax.Array:
-    """Packed mod-q colors of round(x/s - u)."""
+                       bits: int, return_coords: bool = False):
+    """Packed mod-q colors of round(x/s - u); s is scalar or per-coordinate."""
     k = L.encode_coords(x, s, u)
     colors = L.color_of(k, q)
-    return L.pack_colors(colors, bits)
+    words = L.pack_colors(colors, bits)
+    return (words, k) if return_coords else words
 
 
 def lattice_decode_ref(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
                        *, q: int, bits: int, n: int,
-                       avg_cnt: Optional[int] = None) -> jax.Array:
+                       avg_cnt: Optional[int] = None,
+                       mode: str = "point") -> jax.Array:
     colors = L.unpack_colors(words, n, bits)
     k = L.decode_coords(colors, anchor, s, u, q=q)
+    if mode == "coords":
+        return k
     z = L.coords_to_point(k, s, u, jnp.float32)
     if avg_cnt is not None:
         z = (z + anchor.astype(jnp.float32) * avg_cnt) / (avg_cnt + 1)

@@ -28,8 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.dist import fsdp as F
 from repro.models.config import ModelConfig
-from repro.models.sharding import ShardCtx, storage_spec
+from repro.models.sharding import ShardCtx, shard_len, storage_spec
 from repro.models import transformer as T
 from repro.train import optim as O
 from repro.train import data as D
@@ -185,6 +186,25 @@ class Trainer:
             cfg, ctx, mesh, opt_cfg, tc)
         self.metas = T.all_metas(cfg, ctx)
         self.history: list[dict] = []
+        self.wire_bytes_step = self._wire_bytes_step()
+        print(f"[train] grad sync wire: "
+              f"{self.wire_bytes_step / 2**20:.2f} MiB/step per rank "
+              f"({self.ctx.fsdp_config().sync}, "
+              f"packed={self.ctx.qcfg.packed})", flush=True)
+
+    def _wire_bytes_step(self) -> int:
+        """Static per-rank wire bytes of one step's DP gradient sync
+        (packed lattice payload accounting; fsdp.wire_bytes_bwd)."""
+        fcfg = self.ctx.fsdp_config()
+        sizes = [int(self.mesh.shape[ax]) for ax in self.ctx.dp_axes]
+        per_group = {
+            grp: sum(F.wire_bytes_bwd(shard_len(m, self.ctx) * self.ctx.dp,
+                                      sizes, fcfg)
+                     for m in self.metas[grp].values())
+            for grp in ("layers", "top")}
+        n_mb = max(self.tc.microbatch, 1)
+        layers = T.n_scan_steps(self.cfg) * per_group["layers"]
+        return n_mb * (layers + per_group["top"])
 
     def _batch(self, step: int) -> dict:
         b = D.batch_at(self.data_cfg, step)
@@ -239,6 +259,7 @@ class Trainer:
                     m = {k: float(v) for k, v in metrics.items()}
                     m["step"] = step
                     m["dt"] = time.perf_counter() - t0
+                    m["wire_mb"] = self.wire_bytes_step / 2**20
                     self.history.append(m)
                     print(f"[train] step={step} loss={m['loss']:.4f} "
                           f"gnorm={m['gnorm']:.3f} fails={m['fails']:.0f} "

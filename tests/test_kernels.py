@@ -91,6 +91,56 @@ def test_encode_decode_roundtrip_recovers_lattice_point():
     assert float(jnp.max(jnp.abs(z - x))) <= 0.5 * s + 1e-6
 
 
+@pytest.mark.parametrize("n", [1000, 12, 40960])
+def test_encode_per_coordinate_sides_matches_ref(n):
+    """Per-bucket sides broadcast to per-coordinate (the collectives' wire
+    layout) — packed words, coords and decode must match the jnp oracle
+    exactly, including non-tile-aligned n (ones-padded sides)."""
+    q, bits, bucket = 16, 4, 4
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 20
+    u = jax.random.uniform(jax.random.PRNGKey(n + 1), (n,), minval=-.5,
+                           maxval=.5)
+    nb = -(-n // bucket)
+    sb = 0.01 + 0.05 * jax.random.uniform(jax.random.PRNGKey(n + 2), (nb,))
+    s = jnp.repeat(sb, bucket)[:n]
+    w, k = ops.lattice_encode(x, u, s, q=q, return_coords=True)
+    w_ref, k_ref = ref.lattice_encode_ref(x, u, s, q=q, bits=bits,
+                                          return_coords=True)
+    assert jnp.array_equal(w, w_ref)
+    assert jnp.array_equal(k, k_ref)
+    assert w.shape[0] == L.packed_len(n, bits)
+    z = ops.lattice_decode(w, x, u, s, q=q)
+    z_ref = ref.lattice_decode_ref(w, x, u, s, q=q, bits=bits, n=n)
+    assert jnp.array_equal(z, z_ref)
+
+
+def test_decode_coords_mode_matches_ref():
+    n, q, s = 20000, 16, 0.07
+    x = jax.random.normal(jax.random.PRNGKey(11), (n,)) * 30
+    u = jax.random.uniform(jax.random.PRNGKey(12), (n,), minval=-.5, maxval=.5)
+    w = ops.lattice_encode(x, u, s, q=q)
+    anchor = x + 0.3 * s
+    k = ops.lattice_decode(w, anchor, u, s, q=q, mode="coords")
+    k_ref = ref.lattice_decode_ref(w, anchor, u, s, q=q, bits=4, n=n,
+                                   mode="coords")
+    assert k.dtype == jnp.int32
+    assert jnp.array_equal(k, k_ref)
+    # anchor = x: the coords are exactly the encoder's
+    k_self = ops.lattice_decode(w, x, u, s, q=q, mode="coords")
+    assert jnp.array_equal(k_self, L.encode_coords(x, s, u))
+
+
+def test_encode_return_coords_consistent_with_words():
+    n, q = 5000, 16
+    x = jax.random.normal(jax.random.PRNGKey(13), (n,)) * 10
+    u = jax.random.uniform(jax.random.PRNGKey(14), (n,), minval=-.5, maxval=.5)
+    w_only = ops.lattice_encode(x, u, 0.05, q=q)
+    w, k = ops.lattice_encode(x, u, 0.05, q=q, return_coords=True)
+    assert jnp.array_equal(w, w_only)
+    assert jnp.array_equal(L.color_of(k, q),
+                           L.unpack_colors(w, n, 4))
+
+
 def test_bfloat16_input_encode():
     n, q, s = 4096, 16, 0.1
     x = (jax.random.normal(jax.random.PRNGKey(5), (n,)) * 10).astype(jnp.bfloat16)
