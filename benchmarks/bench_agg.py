@@ -1,0 +1,65 @@
+"""Aggregation-service benchmarks: receive-path throughput, round latency vs
+client count, and wire bytes per client (the repro.agg protocol over the
+packed lattice wire format; interpret-mode kernel timings on CPU)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.agg import wire
+from repro.agg.server import AggServer
+from repro.agg.sim import fleet_payloads
+from repro.dist.collectives import QSyncConfig
+
+D = 4096
+CLIENT_COUNTS = (64, 256, 512)
+
+
+def _make_round(n_clients: int, seed: int = 0):
+    spec = wire.RoundSpec(round_id=seed + 1, d=D,
+                          cfg=QSyncConfig(q=16, bucket=512), y0=0.5,
+                          seed=seed)
+    rng = np.random.RandomState(seed)
+    base = rng.randn(D).astype(np.float32)
+    xs = base[None] + 0.02 * rng.randn(n_clients, D).astype(np.float32)
+    return spec, base, fleet_payloads(spec, xs)
+
+
+def _time_round(spec, base, payloads, iters: int = 3) -> "tuple[float, float]":
+    """(us per full round, us per receive call); first round warms the jit
+    caches for this client count."""
+    rx_us, round_us = [], []
+    for it in range(iters + 1):
+        server = AggServer(spec, base)
+        t0 = time.perf_counter()
+        for p in payloads:
+            server.receive(p)
+        t1 = time.perf_counter()
+        server.drain()
+        server.finalize()
+        t2 = time.perf_counter()
+        if it == 0:
+            continue
+        rx_us.append((t1 - t0) / len(payloads) * 1e6)
+        round_us.append((t2 - t0) * 1e6)
+    return float(np.median(round_us)), float(np.median(rx_us))
+
+
+def main():
+    spec0, _, _ = _make_round(8)
+    bpc = wire.payload_bytes(spec0)
+    fp32 = 4 * D
+    for n in CLIENT_COUNTS:
+        spec, base, payloads = _make_round(n)
+        us_round, us_rx = _time_round(spec, base, payloads)
+        pps = n / (us_round / 1e6)
+        emit(f"agg_round_c{n}", us_round,
+             f"d={D};payloads_per_s={pps:.0f};bytes_per_client={bpc};"
+             f"wire_compression={fp32 / bpc:.1f}x")
+        if n == CLIENT_COUNTS[-1]:
+            emit(f"agg_receive_c{n}", us_rx,
+                 f"d={D};receive_only_per_payload")
+
+
+if __name__ == "__main__":
+    main()

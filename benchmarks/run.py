@@ -14,7 +14,7 @@ MODULES = [
     "bench_norms", "bench_variance", "bench_convergence", "bench_sublinear",
     "bench_multimachine", "bench_localsgd", "bench_nn",
     "bench_power_iteration", "bench_lower_bound", "bench_dme",
-    "bench_kernels",
+    "bench_kernels", "bench_agg",
 ]
 
 

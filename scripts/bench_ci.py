@@ -2,18 +2,21 @@
 """CI benchmark gate: run benchmarks, record a dated baseline, fail on
 regression.
 
-Runs ``benchmarks/run.py`` (the ``bench_kernels`` + ``bench_dme`` gate set by
-default, ``--all`` for every module), parses its ``BENCH_JSON`` summary line,
-writes ``BENCH_<YYYY-MM-DD>.json`` at the repo root (us_per_call +
-wire_compression + derived metrics per benchmark), and compares the guarded
-entries against the most recent committed ``BENCH_*.json``:
+Runs ``benchmarks/run.py`` (the ``bench_kernels`` + ``bench_dme`` +
+``bench_agg`` gate set by default, ``--all`` for every module), parses its
+``BENCH_JSON`` summary line, writes ``BENCH_<YYYY-MM-DD>.json`` at the repo
+root (us_per_call + wire_compression + derived metrics per benchmark), and
+compares the guarded entries against the most recent committed
+``BENCH_*.json``:
 
-  * ``kernel_lattice_*``: fails if us_per_call regresses more than
-    REGRESSION (20%) plus a small absolute slack (interpret-mode CPU timings
-    jitter), or if the derived wire_compression drops.  The wall-clock gate
-    only applies when the baseline was recorded on the same machine class
-    (arch + cpu count) — absolute timings are not comparable across
-    hardware; the compression/MSE gates always apply;
+  * ``kernel_lattice_*`` and ``agg_*`` (the aggregation-service round /
+    receive paths): fails if us_per_call regresses more than REGRESSION
+    (20%) plus a small absolute slack (interpret-mode CPU timings jitter),
+    if the derived wire_compression drops, or if bytes_per_client grows.
+    The wall-clock gate only applies when the baseline was recorded on the
+    same machine class (arch + cpu count) — absolute timings are not
+    comparable across hardware; the compression/MSE/bytes gates always
+    apply;
   * ``bench_dme`` rows: fails if any ``*mse*`` metric grows more than
     REGRESSION — the accuracy side of the communication/variance trade-off.
 
@@ -32,11 +35,13 @@ import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-GATE_MODULES = "bench_dme,bench_kernels"
+GATE_MODULES = "bench_dme,bench_kernels,bench_agg"
 REGRESSION = 0.20          # >20% worse than baseline fails
 US_SLACK = 10_000.0        # absolute us slack: interpret-mode CPU timings
                            # jitter by ~10ms under co-located load
-GUARD_PREFIX = "kernel_lattice_"
+# wall-clock + wire-compression guarded rows: the fused lattice kernels and
+# the aggregation-service round/receive paths (repro.agg throughput)
+GUARD_PREFIXES = ("kernel_lattice_", "agg_")
 
 
 def parse_derived(derived: str) -> dict:
@@ -138,7 +143,7 @@ def compare(entries: dict, base: dict, same_machine: bool = True
         b = base_entries.get(name)
         if b is None:
             continue
-        if name.startswith(GUARD_PREFIX):
+        if name.startswith(GUARD_PREFIXES):
             if (same_machine and b["us_per_call"] > 0 and
                     e["us_per_call"] > b["us_per_call"] * (1 + REGRESSION)
                     + US_SLACK):
@@ -149,6 +154,11 @@ def compare(entries: dict, base: dict, same_machine: bool = True
             if bw and ew and ew < bw:
                 problems.append(f"{name}: wire_compression {ew}x dropped "
                                 f"below baseline {bw}x")
+            bb = b.get("metrics", {}).get("bytes_per_client")
+            eb = e.get("metrics", {}).get("bytes_per_client")
+            if bb and eb and eb > bb:
+                problems.append(f"{name}: bytes_per_client {eb:.0f} grew "
+                                f"past baseline {bb:.0f}")
         if e["module"] == "bench_dme":
             for k, v in e["metrics"].items():
                 if "mse" not in k:

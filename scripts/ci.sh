@@ -8,9 +8,13 @@
 #   3. a smoke run of the production quantized collectives on 8 emulated
 #      devices (examples/distributed_dme.py) — asserts the packed Pallas
 #      wire path is bit-identical to the jnp oracle;
-#   4. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
-#      kernel_lattice_* timings + bench_dme accuracy vs the last committed
-#      BENCH_*.json baseline).
+#   4. a smoke run of the federated aggregation service
+#      (examples/federated_dme.py) — a 256-client round over the repro.agg
+#      byte protocol with drops/duplicates/corruption/escalation, asserting
+#      arrival-order bit-determinism;
+#   5. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
+#      kernel_lattice_* timings + bench_dme accuracy + agg_* service
+#      throughput vs the last committed BENCH_*.json baseline).
 #
 # The `slow` suite (tests/test_multidevice.py, tests/test_trainer.py) runs
 # the same way without `-m "not slow"`; it is required before releases and
@@ -29,6 +33,9 @@ python -m pytest -x -q -m "not slow"
 echo "== tier-1: distributed DME smoke (8 emulated devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python examples/distributed_dme.py
+
+echo "== tier-1: federated aggregation smoke (repro.agg protocol) =="
+python examples/federated_dme.py
 
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
     echo "== tier-1: benchmark regression gate =="

@@ -1,0 +1,40 @@
+"""repro.agg — streaming federated-DME aggregation on the packed lattice wire.
+
+The canonical DME deployment (Suresh et al. 2017): many clients ship
+compressed vectors to a coordinator that estimates their mean.  This package
+lifts the repo's packed lattice wire format (repro.kernels lattice encode/
+decode, repro.dist.collectives payload layout) from shard_map collectives to
+an actual request/response protocol over real ``bytes``:
+
+* :mod:`repro.agg.wire`   — versioned byte-level codec (header + packed
+  uint32 words + f32 sides sidecar + coordinate checksum + CRC);
+* :mod:`repro.agg.client` — encodes a local vector against a round's shared
+  randomness and handles escalation retries;
+* :mod:`repro.agg.server` — streaming accumulator: buffers arriving
+  payloads, drains them through ONE batched Pallas decode, sums in integer
+  coordinate space (bit-deterministic under any arrival order), and NACKs
+  undecodable clients with an escalated bound (RobustAgreement r <- r^2,
+  lattice granularity fixed so retried coordinates stay summable);
+* :mod:`repro.agg.sim`    — in-process harness driving hundreds of simulated
+  clients through a server with stragglers, drops, duplicates, corruption
+  and out-of-bound adversarial inputs.
+"""
+from repro.agg.wire import (RoundSpec, Payload, Response, WireError,
+                            TruncatedPayloadError, BadMagicError,
+                            VersionMismatchError, CorruptPayloadError,
+                            HeaderMismatchError, encode_payload,
+                            decode_payload, encode_response, decode_response,
+                            q_at_attempt, y_at_attempt, payload_bytes,
+                            STATUS_QUEUED, STATUS_NACK, STATUS_REJECT,
+                            STATUS_ACK)
+from repro.agg.client import AggClient
+from repro.agg.server import AggServer, RoundStats
+
+__all__ = [
+    "RoundSpec", "Payload", "Response", "WireError",
+    "TruncatedPayloadError", "BadMagicError", "VersionMismatchError",
+    "CorruptPayloadError", "HeaderMismatchError", "encode_payload",
+    "decode_payload", "encode_response", "decode_response", "q_at_attempt",
+    "y_at_attempt", "payload_bytes", "AggClient", "AggServer", "RoundStats",
+    "STATUS_QUEUED", "STATUS_NACK", "STATUS_REJECT", "STATUS_ACK",
+]

@@ -1,0 +1,88 @@
+"""Client side of the aggregation protocol: encode + escalation retries.
+
+A client holds one local vector for one round.  Encoding runs the same
+fused Pallas path as the shard_map collectives (repro.kernels.ops
+lattice_encode): bucketize (+ optional §6 HD rotation), dither with the
+round's shared offset, round to integer lattice coordinates, pack the mod-q
+colors into uint32 words.  The integer coordinates ``k = round(x/s0 - u)``
+are *independent of the attempt level* — escalation only widens the color
+space (q <- q^2, granularity s0 fixed), so a retry re-packs the same
+coordinates at more bits per coordinate and the §5 checksum h(k) never
+changes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agg import rounds, wire
+from repro.core import error_detect as ED
+from repro.core import lattice as L
+from repro.kernels import ops as K
+
+
+class AggClient:
+    """One client's state for one aggregation round."""
+
+    def __init__(self, spec: wire.RoundSpec, client_id: int, x):
+        if np.shape(x) != (spec.d,):
+            raise ValueError(f"x has shape {np.shape(x)}, spec.d={spec.d}")
+        self.spec = spec
+        self.client_id = client_id
+        self.attempt = 0
+        self.acked = False
+        self.gave_up = False
+        self._xflat = rounds.bucketize(jnp.asarray(x), spec).reshape(-1)
+        self._u = rounds.dither(spec).reshape(-1)
+        self._sides = rounds.sides(spec)
+        # per-coordinate sides for the fused kernel (one s0 per bucket)
+        self._s_coord = jnp.repeat(self._sides, spec.cfg.bucket)
+        self._check: Optional[int] = None
+
+    def payload(self, attempt: Optional[int] = None) -> bytes:
+        """Serialize this client's message at an escalation level."""
+        if attempt is None:
+            attempt = self.attempt
+        q = wire.q_at_attempt(self.spec.cfg.q, attempt)
+        if self._check is None:
+            words, k = K.lattice_encode(self._xflat, self._u, self._s_coord,
+                                        q=q, return_coords=True)
+            self._check = int(ED.coord_checksum(
+                k, rounds.checksum_weights(self.spec)))
+        else:
+            words = K.lattice_encode(self._xflat, self._u, self._s_coord, q=q)
+        nw = L.packed_len(self.spec.padded, L.bits_for_q(q))
+        words = np.asarray(words[:nw])
+        return wire.encode_payload(self.spec, self.client_id, attempt, q,
+                                   words, np.asarray(self._sides),
+                                   self._check)
+
+    def handle_response(self, data: bytes) -> Optional[bytes]:
+        """Process a server response; returns the retry payload on NACK.
+
+        Returns None when no further send is needed (ACK/QUEUED, terminal
+        REJECT, or escalation exhausted — ``gave_up`` is set in the latter
+        two cases).
+        """
+        r = wire.decode_response(data)
+        if r.client_id != self.client_id or r.round_id != self.spec.round_id:
+            return None
+        if r.status in (wire.STATUS_ACK, wire.STATUS_QUEUED):
+            self.acked = r.status == wire.STATUS_ACK
+            return None
+        if r.status == wire.STATUS_REJECT:
+            self.gave_up = True
+            return None
+        # NACK: escalate to the server-directed attempt (RobustAgreement:
+        # the color space squares, the granularity stays s0)
+        if self.acked or self.gave_up:
+            return None                    # late NACK after a verdict
+        if r.attempt_next >= self.spec.max_attempts:
+            self.gave_up = True
+            return None
+        if r.attempt_next <= self.attempt:
+            return None                    # duplicate/stale NACK: the retry
+        self.attempt = r.attempt_next      # it asks for is already in flight
+        return self.payload(self.attempt)

@@ -1,0 +1,72 @@
+"""Shared per-round randomness + bucket-space helpers (client & server).
+
+Everything a round's participants must agree on is derived deterministically
+from the :class:`repro.agg.wire.RoundSpec`: the dither ``u`` (one draw per
+round from ``seed``/``round_id``), the §5 checksum weights, and the §6
+Hadamard rotation diagonal (``rot_seed``).  The defaults make the bucket
+pipeline bit-identical to :mod:`repro.dist.collectives` — the acceptance
+test pins the server's round mean to ``allgather_allreduce_mean``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.agg import wire as W
+from repro.core import error_detect as ED
+from repro.core import lattice as L
+from repro.core import rotation as R
+
+Array = jax.Array
+
+
+def round_key(spec: W.RoundSpec) -> Array:
+    """The round's shared-randomness key (dither + checksum weights)."""
+    return jax.random.fold_in(jax.random.PRNGKey(spec.seed), spec.round_id)
+
+
+def dither(spec: W.RoundSpec) -> Array:
+    """Shared lattice offset u ~ U[-1/2, 1/2), shaped (nb, bucket)."""
+    return L.shared_offset(round_key(spec), (spec.nb, spec.cfg.bucket))
+
+
+def checksum_weights(spec: W.RoundSpec) -> Array:
+    """Shared odd uint32 weights of the §5 coordinate checksum, (padded,)."""
+    return ED.checksum_weights(jax.random.fold_in(round_key(spec), 1),
+                               spec.padded)
+
+
+def rotation_diag(spec: W.RoundSpec) -> Array:
+    """Shared ±1 Hadamard diagonal for the per-bucket HD rotation."""
+    return R.rotation_keypair(jax.random.PRNGKey(spec.rot_seed),
+                              spec.cfg.bucket)
+
+
+def bucketize(x: Array, spec: W.RoundSpec) -> Array:
+    """Flat (d,) -> (nb, bucket) f32, zero-padded, HD-rotated if configured.
+
+    Mirrors repro.dist.collectives._bucketize (same rotation kernel path),
+    parameterized by the round's rot_seed.
+    """
+    pad = spec.padded - x.shape[0]
+    v = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, spec.cfg.bucket)
+    if spec.cfg.rotate:
+        v = R.rotate(v, rotation_diag(spec), use_kernel=spec.cfg.packed)
+    return v
+
+
+def unbucketize(b: Array, spec: W.RoundSpec) -> Array:
+    """Inverse of :func:`bucketize`: (nb, bucket) -> flat (d,)."""
+    if spec.cfg.rotate:
+        b = R.unrotate(b, rotation_diag(spec), spec.cfg.bucket,
+                       use_kernel=spec.cfg.packed)
+    return b.reshape(-1)[: spec.d]
+
+
+def sides(spec: W.RoundSpec) -> Array:
+    """(nb,) f32 sides sidecar — the round's fixed granularity s0 per bucket,
+    pinned behind an optimization barrier exactly like the collectives'
+    _sides (a compile-time-constant divisor is rewritten into a non-exactly-
+    rounded reciprocal multiply, which would break bit-parity)."""
+    s = jnp.full((spec.nb,), spec.side, jnp.float32)
+    return jax.lax.optimization_barrier(s)

@@ -1,0 +1,256 @@
+"""Server side: streaming integer-space accumulator + batched drain.
+
+Arrival path (:meth:`AggServer.receive`): parse/validate the payload bytes
+(framing errors and spec mismatches are counted and REJECTed — including
+truncated, corrupt, and version-mismatched messages), dedupe by client id,
+and buffer the *packed words* — the 8x-compressed form — until a drain.
+
+Drain path (:meth:`AggServer.drain`): all pending payloads of one color
+space q are decoded against the server's anchor in ONE batched Pallas
+launch (repro.kernels.ops.lattice_decode_batched), their §5 coordinate
+checksums verified vectorized, and the accepted senders' integer lattice
+coordinates summed into the round accumulator.  Integer addition is exact
+and commutative, so the accumulated sum — and therefore the round mean — is
+bit-identical under any arrival order, any receive/drain interleaving, and
+any drain batching.
+
+Decode failures (checksum mismatch: the §5 detection event) are NACKed with
+the next escalation level — RobustAgreement's r <- r^2 with the lattice
+granularity pinned at the round's s0, so a retried client's coordinates
+land on the same lattice and stay summable.  When the color space is
+already at the 2^16 packing cap (or max_attempts is reached) the client is
+REJECTed and excluded from the round.
+
+Finalize: mean = ((ksum / count) + u) * s0, unbucketized — the same integer-
+space averaging expression as ``allgather_allreduce_mean``, against which
+the acceptance test pins bit-identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agg import rounds, wire
+from repro.core import error_detect as ED
+from repro.kernels import ops as K
+from repro.kernels.lattice_decode import DEFAULT_BLOCK_SENDERS
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class RoundStats:
+    """Per-round service telemetry."""
+    received: int = 0
+    queued: int = 0
+    accepted: int = 0
+    duplicates: int = 0
+    rejected_wire: int = 0       # framing: truncated / corrupt / bad version
+    rejected_spec: int = 0       # well-formed but wrong round/config
+    decode_failures: int = 0     # §5 checksum detections across all drains
+    nacks_sent: int = 0
+    gave_up: int = 0             # clients dropped after escalation exhausted
+    drains: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    max_dist: float = 0.0        # max |decoded - anchor|_inf over accepts
+
+
+def _reject(spec: wire.RoundSpec, client_id: int) -> wire.Response:
+    return wire.Response(status=wire.STATUS_REJECT, round_id=spec.round_id,
+                         client_id=client_id, attempt_next=0, q_next=0,
+                         y_next=0.0)
+
+
+@partial(jax.jit, static_argnames=("q", "bucket"))
+def _drain_math(words: Array, sides: Array, checks: Array, valid: Array,
+                anchor: Array, u: Array, weights: Array, *, q: int,
+                bucket: int):
+    """Decode S payloads, verify checksums, sum accepted integer coords.
+
+    words: (S, nw) uint32; sides: (S, nb) f32 sidecars; checks: (S,) uint32;
+    valid: (S,) bool (False for the block-size padding rows the server adds
+    so drain sizes hit a bounded set of compiled shapes); anchor/u/weights:
+    (n,).  Returns (ok (S,), ksum_delta (n,) int32, max_dist () f32 over
+    accepted senders).
+    """
+    s_sender = jnp.repeat(sides, bucket, axis=-1)          # (S, n)
+    k = K.lattice_decode_batched(words, anchor, u, s_sender, q=q,
+                                 mode="coords")            # (S, n) int32
+    # pin the integer coords (like the collectives): everything below is
+    # exact integer math or order-free, keeping the drain bit-deterministic
+    k = jax.lax.optimization_barrier(k)
+    ok = (ED.coord_checksum(k, weights, axis=-1) == checks) & valid
+    ksum_delta = jnp.sum(jnp.where(ok[:, None], k, 0), axis=0,
+                         dtype=jnp.int32)
+    z = (k.astype(jnp.float32) + u[None]) * s_sender
+    dist = jnp.abs(z - anchor[None])
+    max_dist = jnp.max(jnp.where(ok[:, None], dist, 0.0))
+    return ok, ksum_delta, max_dist
+
+
+@jax.jit
+def _mean_math(ksum: Array, count: Array, u: Array, s_col: Array) -> Array:
+    """(nb, bucket) integer sum -> round mean in bucket space.
+
+    Identical float structure to allgather_allreduce_mean's epilogue:
+    pinned integer sum, one divide (a *runtime* count always compiles to a
+    true IEEE division), add dither, scale by the pinned sides.
+    """
+    ksum = jax.lax.optimization_barrier(ksum)
+    return (ksum.astype(jnp.float32) / count.astype(jnp.float32) + u) * s_col
+
+
+class AggServer:
+    """One aggregation round's coordinator."""
+
+    def __init__(self, spec: wire.RoundSpec, anchor):
+        if np.shape(anchor) != (spec.d,):
+            raise ValueError(
+                f"anchor has shape {np.shape(anchor)}, spec.d={spec.d}")
+        self.spec = spec
+        self._anchor_flat = rounds.bucketize(jnp.asarray(anchor),
+                                             spec).reshape(-1)
+        self._u = rounds.dither(spec)                     # (nb, bucket)
+        self._weights = rounds.checksum_weights(spec)     # (padded,)
+        self._sides = rounds.sides(spec)                  # (nb,)
+        self._pending: dict[int, wire.Payload] = {}
+        self._accepted: set[int] = set()
+        self._gave_up: set[int] = set()
+        self._ksum = jnp.zeros((spec.nb, spec.cfg.bucket), jnp.int32)
+        self._count = 0
+        self.stats = RoundStats()
+
+    # ------------------------------------------------------------------ RX
+    def receive(self, data: bytes) -> bytes:
+        """Handle one arriving message; returns the response bytes."""
+        self.stats.received += 1
+        self.stats.bytes_in += len(data)
+        try:
+            p = wire.decode_payload(data)
+        except wire.WireError:
+            self.stats.rejected_wire += 1
+            return self._respond(_reject(self.spec, 0xFFFFFFFF))
+        try:
+            wire.check_against_spec(p, self.spec)
+        except wire.HeaderMismatchError:
+            self.stats.rejected_spec += 1
+            return self._respond(_reject(self.spec, p.client_id))
+        if p.client_id in self._gave_up:
+            return self._respond(_reject(self.spec, p.client_id))
+        if p.client_id in self._accepted:
+            # duplicate delivery of an already-accumulated client: ACK
+            # idempotently, never double-count
+            self.stats.duplicates += 1
+            return self._respond(self._ack(p.client_id))
+        prev = self._pending.get(p.client_id)
+        if prev is not None and prev.attempt >= p.attempt:
+            self.stats.duplicates += 1
+        else:
+            self._pending[p.client_id] = p
+            self.stats.queued += 1
+        return self._respond(wire.Response(
+            status=wire.STATUS_QUEUED, round_id=self.spec.round_id,
+            client_id=p.client_id, attempt_next=p.attempt, q_next=p.q,
+            y_next=wire.y_at_attempt(self.spec, p.attempt)))
+
+    def _ack(self, client_id: int) -> wire.Response:
+        return wire.Response(status=wire.STATUS_ACK,
+                             round_id=self.spec.round_id,
+                             client_id=client_id, attempt_next=0, q_next=0,
+                             y_next=0.0)
+
+    def _respond(self, r: wire.Response) -> bytes:
+        out = wire.encode_response(r)
+        self.stats.bytes_out += len(out)
+        return out
+
+    # --------------------------------------------------------------- DRAIN
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def accepted_clients(self) -> frozenset:
+        return frozenset(self._accepted)
+
+    def drain(self) -> list[bytes]:
+        """Decode everything pending; returns ACK/NACK/REJECT responses.
+
+        One batched kernel launch per distinct color space q among the
+        pending payloads (a round at a single escalation level — the common
+        case — drains in exactly one launch).
+        """
+        if not self._pending:
+            return []
+        self.stats.drains += 1
+        by_q: dict[int, list[wire.Payload]] = {}
+        for p in self._pending.values():
+            by_q.setdefault(p.q, []).append(p)
+        self._pending.clear()
+        responses = []
+        for q, plist in sorted(by_q.items()):
+            plist.sort(key=lambda p: p.client_id)
+            # pad the sender axis to the kernel's block size so drain sizes
+            # map onto a bounded set of compiled shapes (padding rows carry
+            # valid=False and never enter the sum)
+            S = len(plist)
+            pad = (-S) % DEFAULT_BLOCK_SENDERS
+            words = jnp.asarray(np.pad(
+                np.stack([p.words for p in plist]), ((0, pad), (0, 0))))
+            sides = jnp.asarray(np.pad(
+                np.stack([p.sides for p in plist]), ((0, pad), (0, 0)),
+                constant_values=1.0))
+            checks = jnp.asarray(np.pad(
+                np.array([p.check for p in plist], np.uint32), (0, pad)))
+            valid = jnp.asarray(np.arange(S + pad) < S)
+            ok, ksum_delta, max_dist = _drain_math(
+                words, sides, checks, valid, self._anchor_flat,
+                self._u.reshape(-1), self._weights, q=q,
+                bucket=self.spec.cfg.bucket)
+            ok = np.asarray(ok)[:S]
+            self._ksum = self._ksum + ksum_delta.reshape(self._ksum.shape)
+            n_ok = int(ok.sum())
+            self._count += n_ok
+            self.stats.accepted += n_ok
+            self.stats.max_dist = max(self.stats.max_dist, float(max_dist))
+            for p, good in zip(plist, ok):
+                if good:
+                    self._accepted.add(p.client_id)
+                    responses.append(self._respond(self._ack(p.client_id)))
+                    continue
+                self.stats.decode_failures += 1
+                nxt = p.attempt + 1
+                if p.q >= wire.Q_CAP or nxt >= self.spec.max_attempts:
+                    self._gave_up.add(p.client_id)
+                    self.stats.gave_up += 1
+                    responses.append(
+                        self._respond(_reject(self.spec, p.client_id)))
+                    continue
+                self.stats.nacks_sent += 1
+                responses.append(self._respond(wire.Response(
+                    status=wire.STATUS_NACK, round_id=self.spec.round_id,
+                    client_id=p.client_id, attempt_next=nxt,
+                    q_next=wire.q_at_attempt(self.spec.cfg.q, nxt),
+                    y_next=wire.y_at_attempt(self.spec, nxt))))
+        return responses
+
+    # ------------------------------------------------------------ FINALIZE
+    def finalize(self) -> tuple[np.ndarray, RoundStats]:
+        """Drain anything still pending and return (mean (d,), stats).
+
+        The mean is over the accepted senders; with zero accepts it is the
+        all-zeros vector.  Bit-identical for any arrival order of the same
+        accepted payload set.
+        """
+        self.drain()
+        if self._count == 0:
+            return np.zeros((self.spec.d,), np.float32), self.stats
+        mean_b = _mean_math(self._ksum, jnp.int32(self._count), self._u,
+                            self._sides[:, None])
+        return np.asarray(rounds.unbucketize(mean_b, self.spec)), self.stats

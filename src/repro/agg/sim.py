@@ -1,0 +1,206 @@
+"""In-process federated-DME simulation: many clients, one server, failures.
+
+Drives hundreds-to-thousands of simulated clients through an
+:class:`repro.agg.server.AggServer` over the real byte protocol, with the
+failure modes a deployment sees:
+
+* **stragglers** — a fraction of payloads arrive only after the first
+  drain (the server's integer-space accumulator makes the result invariant
+  to this);
+* **dropped clients** — never deliver; the round mean is over the arrived
+  subset;
+* **duplicate deliveries** — retransmits of already-accepted payloads are
+  ACKed idempotently and never double-counted;
+* **corrupt / truncated frames** — byte-level damage, REJECTed by the wire
+  codec's CRC/length checks;
+* **out-of-bound adversarial inputs** — vectors violating the round's
+  distance bound; detected by the §5 coordinate checksum
+  (repro.core.error_detect) and recovered through the r <- r^2 escalation
+  handshake, or dropped when even the q-cap margin cannot cover them.
+
+The attempt-0 fleet is encoded in ONE fused kernel launch
+(:func:`fleet_payloads` stacks all clients into a single flat vector), so a
+512-client round is fast enough for the CI suite; retries go through the
+per-client :class:`AggClient` path (bit-identical payloads — asserted in
+tests/test_agg.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agg import rounds, wire
+from repro.agg.client import AggClient
+from repro.agg.server import AggServer, RoundStats
+from repro.core import error_detect as ED
+from repro.core import lattice as L
+from repro.core import rotation as R
+from repro.dist.collectives import QSyncConfig
+from repro.kernels import ops as K
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    clients: int = 512
+    d: int = 1 << 12
+    q: int = 16
+    bucket: int = 512
+    rotate: bool = False
+    y0: float = 0.5
+    spread: float = 0.02       # client noise scale around the base vector
+    base_scale: float = 5.0
+    drop: float = 0.02         # fraction of clients never delivered
+    duplicate: float = 0.05    # fraction delivered twice
+    straggle: float = 0.25     # fraction arriving after the first drain
+    corrupt: int = 2           # extra deliveries with a flipped byte
+    truncate: int = 1          # extra deliveries cut short
+    adversarial: int = 4       # out-of-bound inputs recoverable by escalation
+    extreme: int = 1           # beyond the q-cap margin: must be dropped
+    max_attempts: int = 4
+    seed: int = 0
+    round_id: int = 1
+
+    def spec(self) -> wire.RoundSpec:
+        return wire.RoundSpec(
+            round_id=self.round_id, d=self.d,
+            cfg=QSyncConfig(q=self.q, bucket=self.bucket, rotate=self.rotate),
+            y0=self.y0, seed=self.seed, max_attempts=self.max_attempts)
+
+
+@dataclasses.dataclass
+class SimReport:
+    stats: RoundStats
+    mean: np.ndarray
+    expected: np.ndarray          # exact mean over the accepted clients
+    max_err: float
+    accepted_clients: frozenset
+    escalated_clients: frozenset  # accepted only after >= 1 NACK
+    dropped_clients: frozenset    # never delivered or escalation-exhausted
+    drains: int
+    bytes_per_client: float       # attempt-0 payload size incl. header
+
+
+def fleet_payloads(spec: wire.RoundSpec, xs: np.ndarray) -> list[bytes]:
+    """Encode all S clients' attempt-0 payloads in one fused kernel launch.
+
+    Stacks the bucketized fleet into a single flat vector (per-client word
+    segments stay uint32-aligned because padded d is a multiple of the
+    bucket size), encodes once, and splits words/checksums per client.
+    """
+    S = xs.shape[0]
+    pad = spec.padded - spec.d
+    v = jnp.pad(jnp.asarray(xs, jnp.float32), ((0, 0), (0, pad)))
+    v = v.reshape(S * spec.nb, spec.cfg.bucket)
+    if spec.cfg.rotate:
+        v = R.rotate(v, rounds.rotation_diag(spec),
+                     use_kernel=spec.cfg.packed)
+    sides = rounds.sides(spec)
+    s_coord = jnp.repeat(sides, spec.cfg.bucket)
+    u = rounds.dither(spec).reshape(-1)
+    flat = v.reshape(-1)
+    words, k = K.lattice_encode(flat, jnp.tile(u, S), jnp.tile(s_coord, S),
+                                q=spec.cfg.q, return_coords=True)
+    nw = L.packed_len(spec.padded, spec.cfg.bits)
+    words = np.asarray(words).reshape(S, nw)
+    weights = rounds.checksum_weights(spec)
+    checks = np.asarray(ED.coord_checksum(k.reshape(S, spec.padded),
+                                          weights, axis=-1))
+    sides_np = np.asarray(sides)
+    return [wire.encode_payload(spec, i, 0, spec.cfg.q, words[i], sides_np,
+                                int(checks[i])) for i in range(S)]
+
+
+def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
+    """One full aggregation round under the configured failure mix."""
+    rng = np.random.RandomState(cfg.seed)
+    spec = cfg.spec()
+    S, d = cfg.clients, cfg.d
+
+    base = cfg.base_scale * rng.randn(d).astype(np.float32)
+    xs = base[None] + cfg.spread * rng.randn(S, d).astype(np.float32)
+    # adversarial tail: offsets past the attempt-0 margin (random signs so
+    # the §6 rotation cannot concentrate them into one coordinate)
+    adv = list(range(S - cfg.adversarial - cfg.extreme, S - cfg.extreme))
+    for i in adv:
+        xs[i] += (10.0 * cfg.y0
+                  * rng.choice([-1.0, 1.0], d).astype(np.float32))
+    extreme = list(range(S - cfg.extreme, S))
+    for i in extreme:
+        xs[i] += 1e6 * cfg.y0 * rng.choice([-1.0, 1.0], d).astype(np.float32)
+
+    server = AggServer(spec, base)
+    payloads = fleet_payloads(spec, xs)
+
+    # delivery plan: drops / stragglers / duplicates over the benign fleet
+    benign = [i for i in range(S) if i not in set(adv + extreme)]
+    rng.shuffle(benign)
+    n_drop = int(round(cfg.drop * S))
+    dropped = set(benign[:n_drop])
+    rest = [i for i in range(S) if i not in dropped]
+    n_straggle = int(round(cfg.straggle * S))
+    stragglers = set(x for x in benign[n_drop:n_drop + n_straggle])
+    wave1 = [i for i in rest if i not in stragglers]
+    rng.shuffle(wave1)
+    dup = rng.choice(wave1, size=int(round(cfg.duplicate * S)),
+                     replace=False) if wave1 else []
+
+    def damaged(data: bytes, kind: str) -> bytes:
+        if kind == "corrupt":
+            b = bytearray(data)
+            b[rng.randint(len(b))] ^= 0xFF
+            return bytes(b)
+        return data[: rng.randint(8, len(data) - 1)]
+
+    # wave 1: the bulk of the fleet, shuffled, plus damaged frames
+    for i in wave1:
+        server.receive(payloads[i])
+    for _ in range(cfg.corrupt):
+        server.receive(damaged(payloads[rng.choice(wave1)], "corrupt"))
+    for _ in range(cfg.truncate):
+        server.receive(damaged(payloads[rng.choice(wave1)], "truncate"))
+
+    retry_clients: dict[int, AggClient] = {}
+    escalated: set[int] = set()
+
+    def route(responses: list[bytes]) -> list[bytes]:
+        out = []
+        for rb in responses:
+            r = wire.decode_response(rb)
+            if r.status != wire.STATUS_NACK:
+                continue
+            c = retry_clients.setdefault(
+                r.client_id, AggClient(spec, r.client_id, xs[r.client_id]))
+            escalated.add(r.client_id)
+            p = c.handle_response(rb)
+            if p is not None:
+                out.append(p)
+        return out
+
+    retries = route(server.drain())
+    # wave 2: stragglers, duplicates and first-round escalation retries
+    for i in stragglers:
+        server.receive(payloads[i])
+    for i in dup:
+        server.receive(payloads[i])
+    for p in retries:
+        server.receive(p)
+    retries = route(server.drain())
+    while retries:                         # escalation ladder, bounded by
+        for p in retries:                  # max_attempts / the q cap
+            server.receive(p)
+        retries = route(server.drain())
+
+    mean, stats = server.finalize()
+    acc = sorted(server.accepted_clients)
+    expected = (xs[acc].astype(np.float64).mean(0)
+                if acc else np.zeros(d))
+    max_err = float(np.max(np.abs(mean - expected))) if acc else 0.0
+    return SimReport(
+        stats=stats, mean=mean, expected=expected.astype(np.float32),
+        max_err=max_err, accepted_clients=frozenset(acc),
+        escalated_clients=frozenset(escalated & set(acc)),
+        dropped_clients=frozenset(set(range(S)) - set(acc)),
+        drains=stats.drains,
+        bytes_per_client=float(wire.payload_bytes(spec)))

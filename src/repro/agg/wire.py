@@ -1,0 +1,294 @@
+"""Versioned byte-level codec for the federated-DME aggregation protocol.
+
+Client payload layout (little-endian):
+
+    offset  size  field
+    0       4     magic         b"DMEA"
+    4       2     version       WIRE_VERSION
+    6       2     flags         bit 0: rotate (HD pre-rotation, paper §6)
+    8       4     round_id
+    12      4     client_id
+    16      4     attempt       escalation level (0 on first send)
+    20      4     q             color classes at this attempt (q0^(2^attempt))
+    24      4     d             unpadded vector length
+    28      4     bucket        coordinates per bucket (power of two)
+    32      4     seed          round's shared-randomness seed (dither u)
+    36      4     rot_seed      shared Hadamard-diagonal seed
+    40      4     n_words       packed uint32 word count
+    44      4     nb            bucket count (= padded d / bucket)
+    48      4     check         coordinate checksum h(k) (core.error_detect)
+    52      4     crc           CRC-32 of header (crc field zeroed) + body
+    56      4*n_words   packed color words (bits_for_q(q) bits/coordinate)
+    ...     4*nb        f32 sides sidecar (one lattice side per bucket)
+
+The payload body is exactly the packed wire format of the shard_map
+collectives (repro.dist.collectives): uint32 words from the fused Pallas
+encode plus the per-bucket sides sidecar.  The header adds what a real
+transport needs — versioning, round/client identity, integrity (CRC) and
+the §5-style decode-failure detection checksum over the integer lattice
+coordinates (h(k) = <a, k> mod 2^32, shared odd weights; see
+repro.core.error_detect).
+
+Server responses reuse the framing:
+
+    magic b"DMER" | version u16 | status u16 | round_id u32 | client_id u32
+    | attempt_next u32 | q_next u32 | y_next f32 | crc u32
+
+Escalation follows RobustAgreement (paper Alg. 5) with the *lattice
+granularity held fixed*: the round pins the side s0 = 2*y0/(q0-1) and each
+retry squares the color space, q <- q^2 (capped at 2^16), which widens the
+decode margin y_a = s0*(q_a-1)/2 without moving the lattice — so integer
+coordinates from different attempts remain summable and the server's
+integer-space accumulation stays bit-deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+
+import numpy as np
+
+from repro.core import lattice as L
+from repro.dist.collectives import (QSyncConfig, flat_size_padded,
+                                    _ROTATION_SEED)
+
+MAGIC_PAYLOAD = b"DMEA"
+MAGIC_RESPONSE = b"DMER"
+WIRE_VERSION = 1
+Q_CAP = 1 << 16                   # largest packable color space (16 bits)
+
+FLAG_ROTATE = 1 << 0
+
+_HEADER = struct.Struct("<4sHH11I")
+_RESPONSE = struct.Struct("<4sHHIIIIfI")
+
+# response statuses
+STATUS_QUEUED = 0     # payload buffered; verdict at the next drain
+STATUS_ACK = 1        # payload decoded and accumulated
+STATUS_NACK = 2       # decode failure detected: retry at (attempt+1, q_next)
+STATUS_REJECT = 3     # malformed/mismatched payload: not retryable as-is
+
+
+class WireError(ValueError):
+    """Base class for payload parse/validation failures."""
+
+
+class TruncatedPayloadError(WireError):
+    pass
+
+
+class BadMagicError(WireError):
+    pass
+
+
+class VersionMismatchError(WireError):
+    pass
+
+
+class CorruptPayloadError(WireError):
+    pass
+
+
+class HeaderMismatchError(WireError):
+    """Payload is well-formed but does not match the round's spec."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSpec:
+    """Static per-round protocol contract (distributed out of band).
+
+    The lattice granularity of the round is pinned by (y0, cfg.q):
+    s0 = 2*y0/(cfg.q - 1).  Escalation squares q with s0 fixed, so the
+    attempt-a decode margin is y_a = s0*(q_a - 1)/2.
+    """
+    round_id: int
+    d: int
+    cfg: QSyncConfig = QSyncConfig()
+    y0: float = 1.0
+    seed: int = 0
+    # defaulting to the collectives' shared diagonal seed keeps the agg
+    # bucket pipeline bit-identical to the shard_map star collective
+    rot_seed: int = _ROTATION_SEED
+    max_attempts: int = 4
+
+    @property
+    def padded(self) -> int:
+        return flat_size_padded(self.d, self.cfg)
+
+    @property
+    def nb(self) -> int:
+        return self.padded // self.cfg.bucket
+
+    @property
+    def side(self) -> float:
+        """The round's fixed lattice side s0 (granularity never escalates)."""
+        return 2.0 * self.y0 / (self.cfg.q - 1)
+
+
+def q_at_attempt(q0: int, attempt: int) -> int:
+    """RobustAgreement color-space schedule: q0^(2^attempt), capped at 2^16."""
+    q = q0
+    for _ in range(attempt):
+        if q >= Q_CAP:
+            return Q_CAP
+        q = q * q
+    return min(q, Q_CAP)
+
+
+def y_at_attempt(spec: RoundSpec, attempt: int) -> float:
+    """Decode margin at an escalation level: y_a = s0 * (q_a - 1) / 2."""
+    return spec.side * (q_at_attempt(spec.cfg.q, attempt) - 1) / 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Payload:
+    """Parsed client payload (validated framing; numpy views of the body)."""
+    round_id: int
+    client_id: int
+    attempt: int
+    q: int
+    d: int
+    bucket: int
+    seed: int
+    rot_seed: int
+    rotate: bool
+    check: int
+    words: np.ndarray          # (n_words,) uint32
+    sides: np.ndarray          # (nb,) f32
+
+    @property
+    def nb(self) -> int:
+        return self.sides.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Response:
+    status: int
+    round_id: int
+    client_id: int
+    attempt_next: int
+    q_next: int
+    y_next: float
+
+
+def payload_bytes(spec: RoundSpec, attempt: int = 0) -> int:
+    """Exact on-the-wire size of one client payload at an attempt level
+    (header + CRC word + packed words + sides sidecar)."""
+    q = q_at_attempt(spec.cfg.q, attempt)
+    return (_HEADER.size + 4 + 4 * L.packed_len(spec.padded, L.bits_for_q(q))
+            + 4 * spec.nb)
+
+
+def encode_payload(spec: RoundSpec, client_id: int, attempt: int, q: int,
+                   words: np.ndarray, sides: np.ndarray, check: int) -> bytes:
+    """Serialize one client message to transportable bytes."""
+    words = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
+    sides = np.ascontiguousarray(np.asarray(sides, dtype=np.float32))
+    flags = FLAG_ROTATE if spec.cfg.rotate else 0
+    body = words.tobytes() + sides.tobytes()
+    head0 = _HEADER.pack(MAGIC_PAYLOAD, WIRE_VERSION, flags, spec.round_id,
+                         client_id, attempt, q, spec.d, spec.cfg.bucket,
+                         spec.seed, spec.rot_seed, words.shape[0],
+                         sides.shape[0], int(check) & 0xFFFFFFFF)
+    crc = zlib.crc32(body, zlib.crc32(head0))
+    return head0 + struct.pack("<I", crc) + body
+
+
+def decode_payload(data: bytes) -> Payload:
+    """Parse + integrity-check a payload; raises WireError subclasses."""
+    hsize = _HEADER.size + 4                       # header + crc word
+    if len(data) < hsize:
+        raise TruncatedPayloadError(
+            f"payload of {len(data)} bytes is shorter than the "
+            f"{hsize}-byte header")
+    (magic, version, flags, round_id, client_id, attempt, q, d, bucket,
+     seed, rot_seed, n_words, nb, check) = _HEADER.unpack_from(data, 0)
+    if magic != MAGIC_PAYLOAD:
+        raise BadMagicError(f"bad magic {magic!r}")
+    if version != WIRE_VERSION:
+        raise VersionMismatchError(
+            f"wire version {version} != supported {WIRE_VERSION}")
+    (crc,) = struct.unpack_from("<I", data, _HEADER.size)
+    body = data[hsize:]
+    want = 4 * n_words + 4 * nb
+    if len(body) < want:
+        raise TruncatedPayloadError(
+            f"body has {len(body)} bytes, header promises {want}")
+    if len(body) != want:
+        raise CorruptPayloadError(
+            f"body has {len(body)} bytes, header promises {want}")
+    if zlib.crc32(body, zlib.crc32(data[:_HEADER.size])) != crc:
+        raise CorruptPayloadError("CRC mismatch")
+    # header self-consistency (cheap sanity; spec matching is the server's)
+    if q < 2 or q > Q_CAP or bucket < 1 or (bucket & (bucket - 1)):
+        raise CorruptPayloadError(f"inconsistent header: q={q} "
+                                  f"bucket={bucket}")
+    padded = nb * bucket
+    if d > padded or padded - d >= bucket:
+        raise CorruptPayloadError(
+            f"inconsistent header: d={d} vs nb*bucket={padded}")
+    if n_words != L.packed_len(padded, L.bits_for_q(q)):
+        raise CorruptPayloadError(
+            f"inconsistent header: {n_words} words for {padded} coords "
+            f"at q={q}")
+    words = np.frombuffer(body, dtype="<u4", count=n_words)
+    sides = np.frombuffer(body, dtype="<f4", offset=4 * n_words, count=nb)
+    return Payload(round_id=round_id, client_id=client_id, attempt=attempt,
+                   q=q, d=d, bucket=bucket, seed=seed, rot_seed=rot_seed,
+                   rotate=bool(flags & FLAG_ROTATE), check=check,
+                   words=words, sides=sides)
+
+
+def check_against_spec(p: Payload, spec: RoundSpec) -> None:
+    """Raise HeaderMismatchError when a payload doesn't belong to a round."""
+    if p.round_id != spec.round_id:
+        raise HeaderMismatchError(
+            f"round {p.round_id} != current {spec.round_id}")
+    want_q = q_at_attempt(spec.cfg.q, p.attempt)
+    mism = [
+        f"{k}: got {got}, want {want}" for k, got, want in (
+            ("d", p.d, spec.d),
+            ("bucket", p.bucket, spec.cfg.bucket),
+            ("rotate", p.rotate, spec.cfg.rotate),
+            ("seed", p.seed, spec.seed),
+            ("rot_seed", p.rot_seed, spec.rot_seed),
+            ("q", p.q, want_q),
+        ) if got != want]
+    if p.attempt >= spec.max_attempts:
+        mism.append(f"attempt {p.attempt} >= max {spec.max_attempts}")
+    # the sidecar must carry the round's pinned granularity s0: a client
+    # built against a different y0 would otherwise be accepted (its checksum
+    # is self-consistent) yet scaled by the *round's* sides at finalize,
+    # silently corrupting the mean
+    s0 = np.float32(spec.side)
+    if not np.all(p.sides == s0):
+        mism.append(f"sides sidecar != round side {float(s0):.6g} "
+                    f"(y0 mismatch)")
+    if mism:
+        raise HeaderMismatchError("; ".join(mism))
+
+
+def encode_response(r: Response) -> bytes:
+    head0 = _RESPONSE.pack(MAGIC_RESPONSE, WIRE_VERSION, r.status,
+                           r.round_id, r.client_id, r.attempt_next,
+                           r.q_next, r.y_next, 0)
+    crc = zlib.crc32(head0[:-4])
+    return head0[:-4] + struct.pack("<I", crc)
+
+
+def decode_response(data: bytes) -> Response:
+    if len(data) < _RESPONSE.size:
+        raise TruncatedPayloadError(
+            f"response of {len(data)} bytes < {_RESPONSE.size}")
+    (magic, version, status, round_id, client_id, attempt_next, q_next,
+     y_next, crc) = _RESPONSE.unpack_from(data, 0)
+    if magic != MAGIC_RESPONSE:
+        raise BadMagicError(f"bad magic {magic!r}")
+    if version != WIRE_VERSION:
+        raise VersionMismatchError(
+            f"wire version {version} != supported {WIRE_VERSION}")
+    if zlib.crc32(data[:_RESPONSE.size - 4]) != crc:
+        raise CorruptPayloadError("response CRC mismatch")
+    return Response(status=status, round_id=round_id, client_id=client_id,
+                    attempt_next=attempt_next, q_next=q_next, y_next=y_next)

@@ -45,10 +45,17 @@ def checksum_weights(key: Array, d: int) -> Array:
     return jnp.bitwise_or(w, jnp.uint32(1))
 
 
-def coord_checksum(k: Array, weights: Array) -> Array:
-    """h(k) = <a, k> mod 2^32 over the last axis."""
+def coord_checksum(k: Array, weights: Array, axis=None) -> Array:
+    """h(k) = <a, k> mod 2^32.
+
+    axis=None sums over all of k (one message); an explicit axis computes
+    batched checksums (the aggregation server verifies every sender of a
+    drain in one shot: k (S, n), weights (n,), axis=-1 -> (S,))."""
     kk = k.astype(jnp.uint32) * weights
-    return jnp.sum(kk.reshape(-1), dtype=jnp.uint32)
+    if axis is None:
+        kk = kk.reshape(-1)
+        axis = 0
+    return jnp.sum(kk, axis=axis, dtype=jnp.uint32)
 
 
 @dataclasses.dataclass(frozen=True)

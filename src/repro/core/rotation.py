@@ -80,3 +80,18 @@ def unrotate(x: Array, diag: Array, d: int, *, use_kernel: bool = False) -> Arra
 def rotation_keypair(key: Array, d: int) -> Array:
     """Generate the diagonal once per run (shared across machines)."""
     return rademacher_diag(key, next_pow2(d))
+
+
+def rotated_coord_bound(l2, d: int, beta: float = 1e-3) -> float:
+    """Paper §6 (Lemma 24) rotated-space coordinate bound.
+
+    With probability >= 1 - beta over the shared HD rotation,
+
+        |HD x|_inf  <=  ||x||_2 * sqrt(2 * ln(2d / beta) / d)
+
+    — the ℓ2/√d bound (up to the log factor) that makes the cubic-lattice
+    scheme's per-coordinate distance bound depend on the *Euclidean*
+    distance between inputs rather than their coordinate-wise worst case.
+    Used to seed the trainer's per-leaf ``y`` state when rotation is on.
+    """
+    return float(l2) * float(np.sqrt(2.0 * np.log(2.0 * d / beta) / d))

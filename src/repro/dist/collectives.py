@@ -277,9 +277,14 @@ def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
         words = _encode_packed(xb, sides, u, cfg)
         all_words = jax.lax.all_gather(words, axis_name)    # (world, nw)
         all_sides = jax.lax.all_gather(sides, axis_name)    # (world, nb)
-        k = jnp.stack([_decode_packed(all_words[i], xb, all_sides[i], u, cfg,
-                                      mode="coords")
-                       for i in range(world)])              # (world, nb, b)
+        # one batched kernel launch over all senders' gathered words (each
+        # decoded with *its* sides sidecar), instead of `world` per-sender
+        # pallas_calls — same integer coords bit-for-bit
+        s_sender = jnp.repeat(all_sides, cfg.bucket, axis=-1)  # (world, n)
+        k = K.lattice_decode_batched(all_words, xb.reshape(-1),
+                                     u.reshape(-1), s_sender, q=cfg.q,
+                                     mode="coords")
+        k = k.reshape((world,) + xb.shape)                  # (world, nb, b)
     else:
         k_own = _encode(xb, s, u)
         colors = L.color_of(k_own, cfg.q)

@@ -20,6 +20,15 @@ Output modes:
     averages own+partner coordinates in exact integer space (bit-identical
     outputs across ranks, the paper's common-output requirement), so it
     needs k rather than z.
+
+Batched variant (:func:`lattice_decode_batched_pallas`): decodes ``senders``
+independently-encoded payloads of the *same* vector length against one
+shared anchor in a single ``pallas_call`` over a ``(senders, row_tiles)``
+grid — the star collective's gathered wire words and the aggregation
+server's drain path (repro.agg.server), which previously needed one kernel
+launch per sender.  Each sender may carry its own per-coordinate sides (the
+per-sender sidecar that rides the wire), while the anchor and the shared
+dither ``u`` are read once per row tile.
 """
 from __future__ import annotations
 
@@ -34,28 +43,34 @@ COLS = 2048
 DEFAULT_BLOCK_ROWS = 8
 
 
-def _decode_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int, bits: int,
-                   avg_cnt: Optional[int], scalar_s: bool, coords: bool):
-    s = s_ref[0, 0] if scalar_s else s_ref[...]
-    per = 32 // bits
-    w = w_ref[...]                                    # (bm, COLS//per) uint32
-    bm = w.shape[0]
-    shifts = (jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(bits))
-    c = ((w[:, :, None] >> shifts) & jnp.uint32(q - 1)).astype(jnp.int32)
-    c = c.reshape(bm, -1)                             # (bm, COLS) colors
-    anchor = a_ref[...].astype(jnp.float32)
-    u = u_ref[...]
+def _decode_math(w, anchor, u, s, *, q: int, bits: int,
+                 avg_cnt: Optional[int], coords: bool):
+    """Shared decode body: packed words (..., COLS//per) -> k or z (..., COLS).
+
+    anchor/u/s broadcast against the unpacked colors (the batched kernel
+    passes (bs, bm, COLS) words against a (bm, COLS) anchor block)."""
+    shifts = (jnp.arange(per := 32 // bits, dtype=jnp.uint32)
+              * jnp.uint32(bits))
+    c = ((w[..., :, None] >> shifts) & jnp.uint32(q - 1)).astype(jnp.int32)
+    c = c.reshape(w.shape[:-1] + (w.shape[-1] * per,))  # (..., COLS) colors
     t = anchor / s - u
     k_a = jnp.round(t).astype(jnp.int32)
     delta = jnp.bitwise_and(c - k_a + (q // 2), q - 1) - (q // 2)
     k = k_a + delta
     if coords:
-        o_ref[...] = k
-        return
+        return k
     z = (k.astype(jnp.float32) + u) * s
     if avg_cnt is not None:
         z = (z + anchor * avg_cnt) * (1.0 / (avg_cnt + 1))
-    o_ref[...] = z.astype(o_ref.dtype)
+    return z
+
+
+def _decode_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int, bits: int,
+                   avg_cnt: Optional[int], scalar_s: bool, coords: bool):
+    s = s_ref[0, 0] if scalar_s else s_ref[...]
+    out = _decode_math(w_ref[...], a_ref[...].astype(jnp.float32), u_ref[...],
+                       s, q=q, bits=bits, avg_cnt=avg_cnt, coords=coords)
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("q", "bits", "n", "avg_cnt",
@@ -108,3 +123,87 @@ def lattice_decode_pallas(words: jax.Array, anchor: jax.Array, u: jax.Array,
         interpret=interpret,
     )(wf, af, uf, sf)
     return out.reshape(-1)[:n]
+
+
+DEFAULT_BLOCK_SENDERS = 16
+
+
+def _decode_batched_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int,
+                           bits: int, s_kind: str, coords: bool):
+    if s_kind == "scalar":
+        s = s_ref[0, 0]
+    elif s_kind == "shared":
+        s = s_ref[...]                      # (bm, COLS), broadcasts over bs
+    else:                                   # per-sender: (bs, bm, COLS)
+        s = s_ref[...]
+    out = _decode_math(w_ref[...], a_ref[...].astype(jnp.float32), u_ref[...],
+                       s, q=q, bits=bits, avg_cnt=None, coords=coords)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "bits", "n", "mode",
+                                             "block_rows", "block_senders",
+                                             "interpret"))
+def lattice_decode_batched_pallas(words: jax.Array, anchor: jax.Array,
+                                  u: jax.Array, s: jax.Array, *, q: int,
+                                  bits: int, n: int, mode: str = "coords",
+                                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                                  block_senders: int = DEFAULT_BLOCK_SENDERS,
+                                  interpret: bool = True) -> jax.Array:
+    """Decode (senders, n_words) packed payloads against one anchor (n,).
+
+    One pallas_call over a (sender_tiles, row_tiles) grid; each step holds a
+    (block_senders, block_rows, COLS) tile in VMEM (~2.5 MiB at the
+    defaults), decoding ``block_senders`` payloads against one anchor block
+    read once per tile.  The per-sender words (the 8x-compressed payload)
+    dominate HBM traffic.  ``s`` is a scalar, a shared (n,) per-coordinate
+    array, or a per-sender (senders, n) array (each sender's sides
+    sidecar).  Returns (senders, n) int32 coords (mode="coords") or f32
+    points (mode="point").
+    """
+    assert q & (q - 1) == 0 and bits in (2, 4, 8, 16)
+    assert mode in ("point", "coords")
+    senders = words.shape[0]
+    per = 32 // bits
+    tile = block_rows * COLS
+    pad = (-n) % tile
+    bs = min(block_senders, senders)
+    spad = (-senders) % bs
+    af = jnp.pad(anchor.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
+    uf = jnp.pad(u.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
+    rows = af.shape[0]
+    wpad = rows * (COLS // per) - words.shape[1]
+    wf = jnp.pad(words, ((0, spad), (0, wpad))).reshape(senders + spad, rows,
+                                                        COLS // per)
+    bm = block_rows
+    if jnp.ndim(s) == 0:
+        s_kind = "scalar"
+        sf = jnp.asarray(s, jnp.float32).reshape(1, 1)
+        s_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    elif jnp.ndim(s) == 1:
+        s_kind = "shared"
+        sf = jnp.pad(s.astype(jnp.float32), (0, pad),
+                     constant_values=1.0).reshape(-1, COLS)
+        s_spec = pl.BlockSpec((bm, COLS), lambda i, j: (j, 0))
+    else:
+        s_kind = "sender"
+        sf = jnp.pad(s.astype(jnp.float32), ((0, spad), (0, pad)),
+                     constant_values=1.0).reshape(senders + spad, rows, COLS)
+        s_spec = pl.BlockSpec((bs, bm, COLS), lambda i, j: (i, j, 0))
+    out_dtype = jnp.int32 if mode == "coords" else jnp.float32
+    out = pl.pallas_call(
+        functools.partial(_decode_batched_kernel, q=q, bits=bits,
+                          s_kind=s_kind, coords=(mode == "coords")),
+        grid=((senders + spad) // bs, rows // bm),
+        in_specs=[
+            pl.BlockSpec((bs, bm, COLS // per), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, COLS), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, COLS), lambda i, j: (j, 0)),
+            s_spec,
+        ],
+        out_specs=pl.BlockSpec((bs, bm, COLS), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((senders + spad, rows, COLS),
+                                       out_dtype),
+        interpret=interpret,
+    )(wf, af, uf, sf)
+    return out.reshape(senders + spad, -1)[:senders, :n]

@@ -17,8 +17,20 @@ from repro.core import lattice as L
 from repro.kernels import ref as _ref
 from repro.kernels.fwht import fwht_pallas, MAX_D
 from repro.kernels.lattice_encode import lattice_encode_pallas
-from repro.kernels.lattice_decode import lattice_decode_pallas
+from repro.kernels.lattice_decode import (lattice_decode_pallas,
+                                          lattice_decode_batched_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
+
+# Kernel-dispatch telemetry: how many decode launches each wrapper has issued
+# (counted at trace time — one entry per kernel launch in the compiled
+# program).  tests/test_agg.py asserts the star collective and the agg
+# server drain stay single-dispatch however many senders they decode.
+DISPATCH_COUNTS: dict = {"lattice_decode": 0, "lattice_decode_batched": 0}
+
+
+def reset_dispatch_counts() -> None:
+    for k in DISPATCH_COUNTS:
+        DISPATCH_COUNTS[k] = 0
 
 
 def _interpret() -> bool:
@@ -59,12 +71,35 @@ def lattice_decode(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
     or mode="coords" (int32 lattice coordinates)."""
     bits = L.bits_for_q(q)
     n = anchor.shape[0]
+    DISPATCH_COUNTS["lattice_decode"] += 1
     if not _pow2(q) or bits not in (2, 4, 8, 16) or n < 32:
         return _ref.lattice_decode_ref(words, anchor, u, s, q=q, bits=bits,
                                        n=n, avg_cnt=avg_cnt, mode=mode)
     return lattice_decode_pallas(words, anchor, u, jnp.asarray(s), q=q,
                                  bits=bits, n=n, avg_cnt=avg_cnt, mode=mode,
                                  interpret=_interpret())
+
+
+def lattice_decode_batched(words: jax.Array, anchor: jax.Array, u: jax.Array,
+                           s, *, q: int, mode: str = "coords") -> jax.Array:
+    """One fused launch decoding (senders, n_words) payloads of the same
+    vector against a shared anchor (n,) -> (senders, n).
+
+    ``s`` is a scalar side, a shared per-coordinate (n,) array, or a
+    per-sender (senders, n) array (each sender's sides sidecar).  Used by
+    the star collective (the gathered wire) and the aggregation server's
+    drain (repro.agg.server) instead of one kernel call per sender.
+    """
+    bits = L.bits_for_q(q)
+    n = anchor.shape[0]
+    DISPATCH_COUNTS["lattice_decode_batched"] += 1
+    if not _pow2(q) or bits not in (2, 4, 8, 16) or n < 32:
+        return _ref.lattice_decode_batched_ref(words, anchor, u,
+                                               jnp.asarray(s), q=q, bits=bits,
+                                               n=n, mode=mode)
+    return lattice_decode_batched_pallas(words, anchor, u, jnp.asarray(s),
+                                         q=q, bits=bits, n=n, mode=mode,
+                                         interpret=_interpret())
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

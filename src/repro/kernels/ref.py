@@ -43,6 +43,18 @@ def lattice_decode_ref(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
     return z
 
 
+def lattice_decode_batched_ref(words: jax.Array, anchor: jax.Array,
+                               u: jax.Array, s, *, q: int, bits: int, n: int,
+                               mode: str = "coords") -> jax.Array:
+    """(senders, n_words) payloads vs one (n,) anchor -> (senders, n)."""
+    colors = L.unpack_colors(words, n, bits)            # (senders, n)
+    sa = jnp.asarray(s, jnp.float32)
+    k = L.decode_coords(colors, anchor[None], sa, u[None], q=q)
+    if mode == "coords":
+        return k
+    return L.coords_to_point(k, sa, u[None], jnp.float32)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True) -> jax.Array:
     """Plain-softmax oracle.  q: (BH, Sq, D); k/v: (BH, Sk, D)."""

@@ -79,13 +79,17 @@ def encdec_param_shapes(cfg: ModelConfig, ctx: ShardCtx) -> dict:
 
 
 def encdec_y_init(cfg: ModelConfig, ctx: ShardCtx, value: float = 1.0) -> dict:
+    """Per-leaf initial distance bounds (rotated-space-seeded like
+    transformer.y_init; see repro.models.sharding.leaf_y0)."""
+    from repro.models.sharding import leaf_y0
     metas = encdec_metas(cfg, ctx)
     return {
-        "enc": {k: jnp.full((cfg.enc_layers,), value, jnp.float32)
-                for k in metas["enc"]},
-        "dec": {k: jnp.full((cfg.n_layers,), value, jnp.float32)
-                for k in metas["dec"]},
-        "top": {k: jnp.full((), value, jnp.float32) for k in metas["top"]},
+        "enc": {k: jnp.full((cfg.enc_layers,), leaf_y0(m, ctx, value),
+                            jnp.float32) for k, m in metas["enc"].items()},
+        "dec": {k: jnp.full((cfg.n_layers,), leaf_y0(m, ctx, value),
+                            jnp.float32) for k, m in metas["dec"].items()},
+        "top": {k: jnp.full((), leaf_y0(m, ctx, value), jnp.float32)
+                for k, m in metas["top"].items()},
     }
 
 

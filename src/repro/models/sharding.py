@@ -33,10 +33,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.dist.collectives import QSyncConfig, flat_size_padded
+from repro.dist.collectives import (QSyncConfig, butterfly_allreduce_mean,
+                                    flat_size_padded)
 from repro.dist import fsdp as F
 
 Array = jax.Array
+
+# Seed of the shared dither used by the quantized TP gradient psum (every
+# rank derives the same offsets without communication, like the
+# collectives' rotation seed).
+_TP_SYNC_SEED = 20210508
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +111,26 @@ def effective_bucket(n: int, ctx: ShardCtx) -> int:
     while b > 32 and n < ctx.dp * b:
         b //= 2
     return b
+
+
+def leaf_y0(meta: LeafMeta, ctx: ShardCtx, value: float) -> float:
+    """Initial distance bound for one leaf's quantized gradient sync.
+
+    Raw space: ``value`` itself (the trainer's per-coordinate guess).  With
+    ``qcfg.rotate`` the reduce-scatter quantizes HD-rotated buckets, so the
+    seed comes from the paper's §6 bound instead (Lemma 24: rotated
+    coordinates are at most ||delta||_2 * sqrt(2 ln(2b/beta)/b) w.h.p.),
+    applied with the l2 distance the raw guess implies for a b-coordinate
+    bucket (value * sqrt(b)).  A spiky gradient's raw l_inf understates its
+    rotated coordinates by up to ~sqrt(b), so seeding rotated runs with the
+    raw guess triggers a first-steps escalation storm; telemetry then
+    tracks measured rotated-space distances from this calibrated start.
+    """
+    if not ctx.qcfg.rotate:
+        return value
+    from repro.core import rotation as R
+    b = effective_bucket(meta.numel(), ctx)
+    return R.rotated_coord_bound(value * math.sqrt(b), b)
 
 
 def storage_shape(meta: LeafMeta, ctx: ShardCtx, n_layers: int) -> tuple[int, ...]:
@@ -261,7 +287,34 @@ def _tp_psum_grad_fwd(x, ctx, groups):
     return x, None
 
 
+def _tp_quantized_psum(g: Array, ctx: ShardCtx) -> Array:
+    """psum('model') of a replicated-leaf gradient via the quantized
+    butterfly: mean over the tp axis through butterfly_allreduce_mean
+    (packed lattice wire, bits_for_q(q) bits/coord) scaled back by tp.
+
+    The distance bound is derived at runtime — twice the tp-max absolute
+    gradient entry, a bound on |own - partner| for any pair — with pmax so
+    every rank uses the same y (the collectives' common-output requirement).
+    The dither key is a shared constant; all ranks derive identical offsets.
+    """
+    gf = g.astype(jnp.float32).reshape(-1)
+    n = gf.shape[0]
+    b = ctx.qcfg.bucket
+    while b > 32 and n < b:
+        b //= 2
+    qc = dataclasses.replace(ctx.qcfg, bucket=b)
+    nb = flat_size_padded(n, qc) // b
+    y = 2.0 * jax.lax.pmax(jnp.max(jnp.abs(gf)), ctx.tp_axis) + 1e-20
+    y_b = jnp.full((nb,), 1.0, jnp.float32) * y
+    mean, _aux = butterfly_allreduce_mean(
+        gf, y_b, jax.random.PRNGKey(_TP_SYNC_SEED), ctx.tp_axis, qc)
+    return (mean * ctx.tp).reshape(g.shape).astype(g.dtype)
+
+
 def _tp_psum_grad_bwd(ctx, groups, _, g):
+    if (groups is None and ctx.quantize_tp_grads and ctx.tp > 1
+            and (ctx.tp & (ctx.tp - 1)) == 0):
+        return (_tp_quantized_psum(g, ctx),)
     gl = None if groups is None else [list(t) for t in groups]
     return (jax.lax.psum(g, ctx.tp_axis, axis_index_groups=gl),)
 

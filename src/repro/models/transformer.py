@@ -215,12 +215,20 @@ def param_shapes(cfg: ModelConfig, ctx: ShardCtx) -> dict:
 
 
 def y_init(cfg: ModelConfig, ctx: ShardCtx, value: float = 1.0) -> dict:
+    """Initial distance-bound state, one scalar per leaf (per layer).
+
+    With ``ctx.qcfg.rotate`` each leaf is seeded from the paper's §6
+    rotated-space bound instead of the raw-space guess — see
+    :func:`repro.models.sharding.leaf_y0`.
+    """
+    from repro.models.sharding import leaf_y0
     metas = all_metas(cfg, ctx)
     L = n_scan_steps(cfg)
     return {
-        "layers": {k: jnp.full((L,), value, jnp.float32)
-                   for k in metas["layers"]},
-        "top": {k: jnp.full((), value, jnp.float32) for k in metas["top"]},
+        "layers": {k: jnp.full((L,), leaf_y0(m, ctx, value), jnp.float32)
+                   for k, m in metas["layers"].items()},
+        "top": {k: jnp.full((), leaf_y0(m, ctx, value), jnp.float32)
+                for k, m in metas["top"].items()},
     }
 
 

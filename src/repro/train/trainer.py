@@ -48,7 +48,9 @@ class TrainConfig:
     log_every: int = 10
     keep: int = 3
     max_restarts: int = 3
-    y0: float = 1.0
+    y0: float = 1.0                # per-coordinate distance guess; with
+                                   # qcfg.rotate each leaf seeds from the §6
+                                   # rotated-space bound (sharding.leaf_y0)
     y_decay: float = 0.99          # relax y toward measured distance
     y_escalate: float = 2.0        # on detected decode failure
 

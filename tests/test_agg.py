@@ -1,0 +1,463 @@
+"""repro.agg: wire-codec fuzzing + rejection, batched-decode parity and
+single-dispatch guarantees, server determinism/escalation, and the >=512-
+client simulation round (ISSUE 3 acceptance).  The server-vs-star bit-parity
+check runs on 8 emulated devices in a subprocess (XLA_FLAGS must be set
+before jax initializes), like tests/test_multidevice.py."""
+import dataclasses
+import os
+import struct
+import subprocess
+import sys
+import textwrap
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg import rounds, sim, wire
+from repro.agg.client import AggClient
+from repro.agg.server import AggServer
+from repro.core import lattice as L
+from repro.dist.collectives import QSyncConfig
+from repro.kernels import ops as K
+from repro.kernels import ref
+
+
+def _spec(d=2048, q=16, bucket=256, rotate=False, y0=1.0, seed=3,
+          round_id=7, max_attempts=4):
+    return wire.RoundSpec(round_id=round_id, d=d,
+                          cfg=QSyncConfig(q=q, bucket=bucket, rotate=rotate),
+                          y0=y0, seed=seed, max_attempts=max_attempts)
+
+
+# ---------------------------------------------------------------------------
+# Wire codec: round-trip fuzz + rejection of damaged frames
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,q,bucket", [
+    (2048, 16, 256),      # aligned
+    (1000, 16, 128),      # odd d, partial final bucket
+    (4096, 256, 512),     # 8-bit colors
+    (96, 2, 32),          # 1-bit colors packed at 2 bits, tiny buckets
+    (5000, 65536, 1024),  # the q cap (16-bit colors)
+])
+def test_wire_roundtrip_fuzz(d, q, bucket):
+    rng = np.random.RandomState(d + q)
+    spec = wire.RoundSpec(round_id=rng.randint(1 << 31), d=d,
+                          cfg=QSyncConfig(q=min(q, 256), bucket=bucket),
+                          seed=rng.randint(1 << 31))
+    nb = spec.nb
+    nw = L.packed_len(spec.padded, L.bits_for_q(q))
+    for trial in range(5):
+        words = rng.randint(0, 1 << 32, nw, dtype=np.uint64).astype(np.uint32)
+        sides = rng.rand(nb).astype(np.float32) + 1e-3
+        check = int(rng.randint(0, 1 << 32, dtype=np.uint64))
+        attempt = int(rng.randint(0, 4))
+        cid = int(rng.randint(0, 1 << 31))
+        data = wire.encode_payload(spec, cid, attempt, q, words, sides, check)
+        assert len(data) == 56 + 4 * nw + 4 * nb      # 52B header + 4B CRC
+        if attempt == 0 and q == spec.cfg.q:
+            assert len(data) == wire.payload_bytes(spec, 0)
+        p = wire.decode_payload(data)
+        assert (p.round_id, p.client_id, p.attempt, p.q) == \
+            (spec.round_id, cid, attempt, q)
+        assert (p.d, p.bucket, p.seed, p.rotate) == \
+            (d, bucket, spec.seed, False)
+        assert p.check == check
+        np.testing.assert_array_equal(p.words, words)
+        np.testing.assert_array_equal(p.sides, sides)
+
+
+def _payload():
+    spec = _spec()
+    x = np.random.RandomState(0).randn(spec.d).astype(np.float32)
+    return spec, AggClient(spec, 5, x).payload()
+
+
+def test_wire_rejects_truncation():
+    _, data = _payload()
+    for cut in (0, 10, 51, 56, len(data) - 1):
+        with pytest.raises(wire.TruncatedPayloadError):
+            wire.decode_payload(data[:cut])
+
+
+def test_wire_rejects_trailing_garbage():
+    _, data = _payload()
+    with pytest.raises(wire.CorruptPayloadError):
+        wire.decode_payload(data + b"\x00")
+
+
+def test_wire_rejects_corruption():
+    _, data = _payload()
+    rng = np.random.RandomState(1)
+    for _ in range(20):                       # random single-byte flips
+        b = bytearray(data)
+        b[rng.randint(4, len(b))] ^= 1 + rng.randint(255)
+        with pytest.raises(wire.WireError):
+            wire.decode_payload(bytes(b))
+
+
+def test_wire_rejects_bad_magic_and_version():
+    _, data = _payload()
+    with pytest.raises(wire.BadMagicError):
+        wire.decode_payload(b"XXXX" + data[4:])
+    bad = bytearray(data)
+    bad[4:6] = struct.pack("<H", wire.WIRE_VERSION + 1)
+    with pytest.raises(wire.VersionMismatchError):
+        wire.decode_payload(bytes(bad))
+
+
+def test_wire_rejects_inconsistent_header():
+    spec, data = _payload()
+    # lie about n_words (offset 40 in the 52-byte header), recomputing the
+    # CRC so only the header consistency check can catch it
+    b = bytearray(data)
+    b[40:44] = struct.pack("<I", 7)
+    body = bytes(b[56:])
+    crc = zlib.crc32(body, zlib.crc32(bytes(b[:52])))
+    b[52:56] = struct.pack("<I", crc)
+    with pytest.raises(wire.CorruptPayloadError):
+        wire.decode_payload(bytes(b))
+
+
+def test_check_against_spec_mismatches():
+    spec, data = _payload()
+    p = wire.decode_payload(data)
+    wire.check_against_spec(p, spec)          # no raise
+    for other in (dataclasses.replace(spec, round_id=8),
+                  dataclasses.replace(spec, d=1024),
+                  dataclasses.replace(spec, seed=99),
+                  dataclasses.replace(spec, y0=5.0),   # sides != round s0
+                  dataclasses.replace(spec,
+                                      cfg=QSyncConfig(q=16, bucket=512))):
+        with pytest.raises(wire.HeaderMismatchError):
+            wire.check_against_spec(p, other)
+
+
+def test_server_rejects_y0_mismatched_client():
+    """A client built against a different y0 encodes on a different lattice;
+    its checksum is self-consistent, so only the sidecar-vs-round-s0 check
+    keeps it from silently corrupting the mean."""
+    spec = _spec(y0=1.0)
+    x = np.random.RandomState(0).randn(spec.d).astype(np.float32)
+    server = AggServer(spec, x)
+    bad = AggClient(dataclasses.replace(spec, y0=5.0), 1, x)
+    r = wire.decode_response(server.receive(bad.payload()))
+    assert r.status == wire.STATUS_REJECT
+    assert server.stats.rejected_spec == 1
+
+
+def test_response_roundtrip_and_crc():
+    r = wire.Response(status=wire.STATUS_NACK, round_id=7, client_id=12,
+                      attempt_next=2, q_next=65536, y_next=3.5)
+    data = wire.encode_response(r)
+    assert wire.decode_response(data) == r
+    bad = bytearray(data)
+    bad[8] ^= 0xFF
+    with pytest.raises(wire.CorruptPayloadError):
+        wire.decode_response(bytes(bad))
+
+
+def test_escalation_schedule():
+    assert [wire.q_at_attempt(16, a) for a in range(4)] == \
+        [16, 256, 65536, 65536]
+    spec = _spec(q=16, y0=1.0)
+    assert spec.side == pytest.approx(2.0 / 15.0)
+    # margins grow like (q_a - 1) * s0 / 2 with s0 fixed
+    ys = [wire.y_at_attempt(spec, a) for a in range(3)]
+    assert ys[0] == pytest.approx(1.0)
+    assert ys[1] == pytest.approx((256 - 1) / 15.0)
+    assert ys[2] == pytest.approx((65536 - 1) / 15.0)
+    assert wire.payload_bytes(spec, 1) > wire.payload_bytes(spec, 0)
+
+
+# ---------------------------------------------------------------------------
+# Batched decode: bit-parity with the per-sender kernel and the jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,q,S", [
+    (5000, 16, 6),        # odd n
+    (4096, 256, 17),      # 8-bit colors, sender count not a block multiple
+    (2048, 16, 1),        # single sender
+    (1024, 65536, 3),     # 16-bit colors (the escalation cap)
+])
+def test_batched_decode_parity(n, q, S):
+    bits = L.bits_for_q(q)
+    anchor = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 10
+    u = L.shared_offset(jax.random.PRNGKey(1), (n,))
+    xs = anchor[None] + 0.05 * jax.random.normal(jax.random.PRNGKey(2),
+                                                 (S, n))
+    sides = jnp.stack([jnp.full((n,), 0.01 * (i + 1)) for i in range(S)])
+    words = jnp.stack([K.lattice_encode(xs[i], u, sides[i], q=q)
+                       for i in range(S)])
+    for mode in ("coords", "point"):
+        kb = K.lattice_decode_batched(words, anchor, u, sides, q=q,
+                                      mode=mode)
+        kr = ref.lattice_decode_batched_ref(words, anchor, u, sides, q=q,
+                                            bits=bits, n=n, mode=mode)
+        kloop = jnp.stack([K.lattice_decode(words[i], anchor, u, sides[i],
+                                            q=q, mode=mode)
+                           for i in range(S)])
+        np.testing.assert_array_equal(np.asarray(kb), np.asarray(kr))
+        np.testing.assert_array_equal(np.asarray(kb), np.asarray(kloop))
+
+
+def test_star_collective_single_batched_dispatch():
+    """allgather_allreduce_mean's packed path must issue exactly one
+    (batched) decode launch, not one per sender."""
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.collectives import allgather_allreduce_mean
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = QSyncConfig(q=16, bucket=256, packed=True)
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,))
+    y_b = jnp.full((2,), 1.0)
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(P(),), out_specs=P(),
+             check_vma=False)
+    def f(xl):
+        out, _ = allgather_allreduce_mean(xl, y_b, jax.random.PRNGKey(7),
+                                          "data", cfg)
+        return out
+
+    K.reset_dispatch_counts()
+    jax.jit(f).lower(x)                      # trace: wrappers run once
+    assert K.DISPATCH_COUNTS["lattice_decode_batched"] == 1
+    assert K.DISPATCH_COUNTS["lattice_decode"] == 0
+
+
+def test_server_drain_single_batched_dispatch():
+    # a d/bucket/sender-count combination no other test uses, so the jitted
+    # drain must trace here — and the trace issues exactly one batched
+    # decode launch for the whole pending set
+    spec = _spec(d=2560, bucket=256)
+    rng = np.random.RandomState(0)
+    base = rng.randn(spec.d).astype(np.float32)
+    xs = base[None] + 0.02 * rng.randn(40, spec.d).astype(np.float32)
+    payloads = sim.fleet_payloads(spec, xs)
+    server = AggServer(spec, base)
+    for p in payloads:
+        server.receive(p)
+    K.reset_dispatch_counts()
+    server.drain()
+    assert K.DISPATCH_COUNTS["lattice_decode_batched"] == 1
+    assert K.DISPATCH_COUNTS["lattice_decode"] == 0
+    assert sorted(server.accepted_clients) == list(range(40))
+    # drain sizes are padded to the kernel's sender-block multiple, so a
+    # nearby client count reuses the compiled drain (no retrace at all)
+    server2 = AggServer(spec, base)
+    for p in payloads[:39]:
+        server2.receive(p)
+    K.reset_dispatch_counts()
+    server2.drain()
+    assert K.DISPATCH_COUNTS["lattice_decode_batched"] == 0
+    assert sorted(server2.accepted_clients) == list(range(39))
+
+
+# ---------------------------------------------------------------------------
+# Server semantics
+# ---------------------------------------------------------------------------
+
+def _fleet(spec, S, seed=0, spread=0.02):
+    rng = np.random.RandomState(seed)
+    base = rng.randn(spec.d).astype(np.float32)
+    xs = base[None] + spread * rng.randn(S, spec.d).astype(np.float32)
+    return base, xs, sim.fleet_payloads(spec, xs)
+
+
+def test_server_mean_invariant_to_arrival_order_and_drain_batching():
+    spec = _spec(d=2048, bucket=256)
+    base, xs, payloads = _fleet(spec, 24)
+    means = []
+    for order_seed, drain_every in ((0, 100), (1, 5), (2, 1)):
+        server = AggServer(spec, base)
+        order = np.random.RandomState(order_seed).permutation(24)
+        for j, i in enumerate(order):
+            server.receive(payloads[i])
+            if (j + 1) % drain_every == 0:
+                server.drain()
+        means.append(server.finalize()[0])
+    assert np.array_equal(means[0], means[1])
+    assert np.array_equal(means[0], means[2])
+    exact = xs.astype(np.float64).mean(0)
+    assert float(np.abs(means[0] - exact).max()) <= spec.y0
+
+
+def test_server_duplicates_never_double_count():
+    spec = _spec(d=1024, bucket=128)
+    base, xs, payloads = _fleet(spec, 8)
+    server = AggServer(spec, base)
+    for p in payloads:
+        server.receive(p)
+    server.drain()
+    for p in payloads[:5]:                  # post-accept duplicates: ACKed
+        r = wire.decode_response(server.receive(p))
+        assert r.status == wire.STATUS_ACK
+    server.receive(payloads[6])             # pre-drain duplicate window
+    mean, stats = server.finalize()
+    ref_server = AggServer(spec, base)
+    for p in payloads:
+        ref_server.receive(p)
+    mean_ref, _ = ref_server.finalize()
+    assert np.array_equal(mean, mean_ref)
+    assert stats.duplicates == 6
+    assert stats.accepted == 8
+
+
+def test_server_escalation_recovers_and_gives_up():
+    spec = _spec(d=1024, bucket=128, y0=1.0, max_attempts=4)
+    rng = np.random.RandomState(0)
+    base = rng.randn(spec.d).astype(np.float32)
+    clients = {
+        0: AggClient(spec, 0, base + 0.01),
+        1: AggClient(spec, 1, base + 8.0),     # needs q=256 (margin 17*y0)
+        2: AggClient(spec, 2, base + 1e6),     # beyond the q cap: dropped
+    }
+    server = AggServer(spec, base)
+    for c in clients.values():
+        server.receive(c.payload())
+    resps = server.drain()
+    while resps:
+        retries = [p for rb in resps
+                   for p in [clients[wire.decode_response(rb).client_id]
+                             .handle_response(rb)] if p is not None]
+        if not retries:
+            break
+        for p in retries:
+            server.receive(p)
+        resps = server.drain()
+    mean, stats = server.finalize()
+    assert sorted(server.accepted_clients) == [0, 1]
+    assert clients[1].attempt == 1 and not clients[1].gave_up
+    assert clients[2].gave_up and stats.gave_up == 1
+    assert stats.decode_failures >= 2 and stats.nacks_sent >= 1
+    exact = (np.asarray(base + 0.01, np.float64)
+             + np.asarray(base + 8.0, np.float64)) / 2
+    # attempt-1 margin is ~17*y0; the lattice cell is still s0
+    assert float(np.abs(mean - exact).max()) <= spec.y0
+
+
+def test_server_zero_accepts_returns_zeros():
+    spec = _spec(d=512, bucket=64)
+    server = AggServer(spec, np.zeros(512, np.float32))
+    mean, stats = server.finalize()
+    assert mean.shape == (512,)
+    assert np.all(mean == 0) and stats.accepted == 0
+
+
+def test_client_payload_matches_fleet_encoder():
+    for rotate in (False, True):
+        spec = _spec(d=1000, bucket=128, rotate=rotate)
+        _, xs, payloads = _fleet(spec, 4)
+        assert AggClient(spec, 2, xs[2]).payload() == payloads[2]
+
+
+def test_client_handles_ack_nack_reject():
+    spec = _spec(max_attempts=3)
+    x = np.zeros(spec.d, np.float32)
+    c = AggClient(spec, 9, x)
+
+    def resp(status, attempt_next=0):
+        return wire.encode_response(wire.Response(
+            status=status, round_id=spec.round_id, client_id=9,
+            attempt_next=attempt_next,
+            q_next=wire.q_at_attempt(16, attempt_next),
+            y_next=wire.y_at_attempt(spec, attempt_next)))
+
+    assert c.handle_response(resp(wire.STATUS_ACK)) is None and c.acked
+    c.acked = False
+    retry = c.handle_response(resp(wire.STATUS_NACK, 1))
+    assert retry is not None and c.attempt == 1
+    assert wire.decode_payload(retry).q == 256
+    # a duplicated/stale NACK must not flip gave_up: its retry is in flight
+    assert c.handle_response(resp(wire.STATUS_NACK, 1)) is None
+    assert not c.gave_up and c.attempt == 1
+    assert c.handle_response(resp(wire.STATUS_NACK, 3)) is None  # >= max
+    assert c.gave_up
+
+
+# ---------------------------------------------------------------------------
+# The simulation acceptance: >=512 clients with escalation + drops
+# ---------------------------------------------------------------------------
+
+def test_sim_512_client_round():
+    cfg = sim.SimConfig(clients=512, d=4096, bucket=512, drop=0.02,
+                        duplicate=0.05, straggle=0.25, corrupt=2, truncate=1,
+                        adversarial=4, extreme=1, seed=0)
+    rep = sim.run_round(cfg)
+    s = rep.stats
+    n_drop = int(round(cfg.drop * cfg.clients))
+    assert len(rep.accepted_clients) == cfg.clients - n_drop - cfg.extreme
+    assert len(rep.escalated_clients) == cfg.adversarial   # all recovered
+    assert s.gave_up == cfg.extreme
+    assert s.rejected_wire == cfg.corrupt + cfg.truncate
+    assert s.duplicates >= int(round(cfg.duplicate * cfg.clients))
+    assert s.drains >= 2                                   # straggler wave
+    assert rep.max_err <= 2 * cfg.y0
+    # wire cost: ~d/2 bytes at q=16 plus sidecar/header overhead
+    assert rep.bytes_per_client < 4 * cfg.d / 7
+
+
+# ---------------------------------------------------------------------------
+# Server mean == star collective, bit for bit (8 emulated devices)
+# ---------------------------------------------------------------------------
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_8dev(code: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_server_mean_bit_identical_to_star_8dev():
+    """ISSUE 3 acceptance: the aggregation server's round mean equals
+    allgather_allreduce_mean bitwise for the same inputs/seeds (rotated and
+    unrotated), invariant to client arrival order."""
+    out = _run_8dev("""
+        from functools import partial
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import (QSyncConfig,
+            allgather_allreduce_mean, flat_size_padded)
+        from repro.agg import wire, rounds
+        from repro.agg.client import AggClient
+        from repro.agg.server import AggServer
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        for rotate in (False, True):
+            n, bucket = 8192, 1024
+            cfg = QSyncConfig(q=16, bucket=bucket, rotate=rotate)
+            spec = wire.RoundSpec(round_id=11, d=n, cfg=cfg, y0=2.0, seed=5)
+            base = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 50.0
+            xs = base + 0.05 * jax.random.normal(jax.random.PRNGKey(1),
+                                                 (8, n))
+            nb = flat_size_padded(n, cfg) // bucket
+            y_b = jnp.full((nb,), spec.y0)
+            key = rounds.round_key(spec)
+            @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P("data"), check_vma=False)
+            def f(xl):
+                out, _ = allgather_allreduce_mean(xl.reshape(-1), y_b, key,
+                                                  "data", cfg)
+                return out.reshape(1, -1)
+            star = np.asarray(jax.jit(f)(xs))
+            assert np.all(star == star[0]), rotate
+            server = AggServer(spec, np.asarray(xs[3]))
+            for i in np.random.RandomState(1).permutation(8):
+                server.receive(AggClient(spec, int(i),
+                                         np.asarray(xs[i])).payload())
+            mean, _ = server.finalize()
+            assert np.array_equal(mean, star[0]), rotate
+        print("SERVER_STAR_PARITY_OK")
+    """)
+    assert "SERVER_STAR_PARITY_OK" in out

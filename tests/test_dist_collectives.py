@@ -345,3 +345,45 @@ def test_effective_bucket_matches_sharding_rule():
             m = pad_to_shardable(n, dp, b_store)
             b_rs = _effective_bucket(qcfg, m, dp)
             assert m % (dp * b_rs) == 0, (n, dp, b_store, b_rs, m)
+
+
+def test_tp_psum_grad_quantized_butterfly_2dev():
+    """ShardCtx.quantize_tp_grads routes the replicated-leaf gradient psum
+    through the quantized butterfly (ROADMAP item): close to the exact fp32
+    psum, bit-identical across tp ranks, and exact when the flag is off."""
+    out = _run_8dev("""
+        from functools import partial
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.models.sharding import ShardCtx, _tp_psum_grad
+        from repro.dist.collectives import QSyncConfig
+        mesh = jax.make_mesh((2,), ("model",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n = 2048
+        coef = jax.random.normal(jax.random.PRNGKey(0), (2, n))
+        x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+        def run(ctx):
+            @partial(jax.shard_map, mesh=mesh, in_specs=(P(), P("model")),
+                     out_specs=P("model"), check_vma=False)
+            def f(xl, cl):
+                def loss(v):
+                    return jnp.sum(_tp_psum_grad(v, ctx, None)
+                                   * cl.reshape(-1))
+                return jax.grad(loss)(xl).reshape(1, -1)
+            return np.asarray(jax.jit(f)(x, coef))
+        exact = np.asarray(coef.sum(0))
+        g_fp = run(ShardCtx(tp=2, quantize_tp_grads=False))
+        assert np.allclose(g_fp[0], exact, atol=1e-5)
+        g_lq = run(ShardCtx(tp=2, quantize_tp_grads=True,
+                            qcfg=QSyncConfig(q=16, bucket=512)))
+        assert np.array_equal(g_lq[0], g_lq[1])       # common output
+        rel = np.abs(g_lq[0] - exact).max() / np.abs(exact).max()
+        assert rel < 0.25, rel                        # y = 2*pmax|g| bound
+        # finer color space -> smaller error
+        g_lq2 = run(ShardCtx(tp=2, quantize_tp_grads=True,
+                             qcfg=QSyncConfig(q=256, bucket=512)))
+        rel2 = np.abs(g_lq2[0] - exact).max() / np.abs(exact).max()
+        assert rel2 < rel / 4, (rel, rel2)
+        print("TP_BUTTERFLY_OK")
+    """)
+    assert "TP_BUTTERFLY_OK" in out

@@ -147,3 +147,33 @@ def test_rglru_assoc_scan_matches_loop():
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(jnp.stack(outs, 1), np.float32),
                                rtol=1e-4, atol=1e-5)
+
+
+def test_y_init_seeds_from_rotated_bound():
+    """With qcfg.rotate the per-leaf y seeds come from the §6 rotated-space
+    bound (value * sqrt(2 ln(2b/beta)) for bucket size b) instead of the
+    raw-space guess; without rotation they stay the raw guess."""
+    import math
+    from repro.models.config import ModelConfig
+    from repro.models.sharding import effective_bucket, leaf_y0
+    cfg = ModelConfig(arch="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv=2, head_dim=16, d_ff=128, vocab=256)
+    ctx_raw = _ctx()
+    ctx_rot = ShardCtx(tp=1, dp=1, grad_sync="lq",
+                       qcfg=QSyncConfig(q=16, bucket=64, rotate=True))
+    metas = T.all_metas(cfg, ctx_rot)
+    y_raw = T.y_init(cfg, ctx_raw, 1.0)
+    y_rot = T.y_init(cfg, ctx_rot, 1.0)
+    for k, m in metas["layers"].items():
+        assert float(y_raw["layers"][k][0]) == 1.0
+        b = effective_bucket(m.numel(), ctx_rot)
+        want = math.sqrt(b) * math.sqrt(2 * math.log(2 * b / 1e-3) / b)
+        np.testing.assert_allclose(float(y_rot["layers"][k][0]), want,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(y_rot["layers"][k][0]),
+                                   leaf_y0(m, ctx_rot, 1.0), rtol=1e-6)
+    # scales linearly with the raw guess
+    y2 = T.y_init(cfg, ctx_rot, 2.0)
+    k0 = sorted(metas["layers"])[0]
+    np.testing.assert_allclose(2 * float(y_rot["layers"][k0][0]),
+                               float(y2["layers"][k0][0]), rtol=1e-6)

@@ -41,3 +41,18 @@ def test_lemma24_linf_concentration():
     expect = 100 / np.sqrt(d) * np.sqrt(2 * np.log(d * 20))
     assert max(bounds) < 3 * expect, (max(bounds), expect)
     assert max(bounds) < 10.0       # versus 100 unrotated
+
+
+def test_rotated_coord_bound_holds_whp():
+    """rotated_coord_bound(l2, d, beta) upper-bounds |HDx|_inf empirically,
+    is sublinear in d (the l2/sqrt(d) shape), and tightens with beta."""
+    d = 1024
+    x = jnp.zeros((d,)).at[3].set(1.0)          # unit-l2 spike (worst case)
+    bound = R.rotated_coord_bound(1.0, d, beta=1e-3)
+    for seed in range(30):
+        diag = R.rotation_keypair(jax.random.PRNGKey(seed), d)
+        assert float(jnp.max(jnp.abs(R.rotate(x, diag)))) <= bound
+    assert bound < 0.2                          # ~ sqrt(2 ln(2d/beta) / d)
+    assert R.rotated_coord_bound(1.0, 4 * d) < bound
+    assert R.rotated_coord_bound(1.0, d, beta=1e-6) > bound
+    assert R.rotated_coord_bound(2.0, d) == 2 * R.rotated_coord_bound(1.0, d)
