@@ -65,3 +65,42 @@ print("arrival-order bit-determinism: OK")
 if AggClient(spec, 5, xs[5]).payload() != payloads[5]:
     raise SystemExit("AggClient payload differs from the fleet encoder")
 print("client/fleet payload parity: OK")
+
+# --- anchored multi-round service (RoundSpec v2, ISSUE 4 CI smoke) --------
+# Three rounds over a drifting large-norm population: round k+1's anchor is
+# round k's published mean (digest-pinned in the spec) and its per-bucket y
+# comes from round k's decode telemetry.
+from repro.agg import rounds as AR
+from repro.agg.service import AggService, ServiceConfig
+
+rng = np.random.RandomState(7)
+d3 = 2048
+mu = 1e6 * rng.randn(d3).astype(np.float32)
+svc = AggService(ServiceConfig(d=d3, bucket=256, y0=0.5, seed=7),
+                 anchor0=mu.copy())
+published = []
+for rnd in range(3):
+    mu = mu + 0.02 * rng.randn(d3).astype(np.float32)
+    xs3 = mu[None] + 0.02 * rng.randn(48, d3).astype(np.float32)
+    spec3, anchor3 = svc.begin_round()
+    if published:
+        # the contract under test: round k+1's anchor IS round k's mean
+        if spec3.anchor_digest != AR.anchor_digest(published[-1]):
+            raise SystemExit("anchor digest does not chain round means")
+        if not np.array_equal(anchor3, published[-1]):
+            raise SystemExit("round anchor is not the previous mean")
+    server3 = svc.make_server()
+    for p in fleet_payloads(spec3, xs3, anchor=anchor3):
+        server3.receive(p)
+    mean3, stats3 = svc.end_round(server3)
+    published.append(mean3)
+    exact3 = xs3.astype(np.float64).mean(0)
+    err3 = float(np.abs(mean3 - exact3).max())
+    print(f"  anchored round {spec3.round_id}: accepted={stats3.accepted} "
+          f"digest={spec3.anchor_digest:#010x} max_err={err3:.5f} "
+          f"y_mean={float(np.mean(spec3.y_np())):.3f}")
+    if stats3.accepted != 48:
+        raise SystemExit("anchored round lost clients")
+    if err3 > 2 * float(np.max(spec3.y_np())):
+        raise SystemExit("anchored round error exceeds the lattice bound")
+print("anchored multi-round digest chain: OK")

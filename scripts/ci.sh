@@ -11,7 +11,9 @@
 #   4. a smoke run of the federated aggregation service
 #      (examples/federated_dme.py) — a 256-client round over the repro.agg
 #      byte protocol with drops/duplicates/corruption/escalation, asserting
-#      arrival-order bit-determinism;
+#      arrival-order bit-determinism, PLUS three anchored multi-round
+#      service rounds (RoundSpec v2) asserting that round k+1's anchor
+#      digest matches round k's published mean and no clients are lost;
 #   5. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
 #      kernel_lattice_* timings + bench_dme accuracy + agg_* service
 #      throughput vs the last committed BENCH_*.json baseline).

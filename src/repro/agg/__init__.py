@@ -15,26 +15,35 @@ an actual request/response protocol over real ``bytes``:
   coordinate space (bit-deterministic under any arrival order), and NACKs
   undecodable clients with an escalated bound (RobustAgreement r <- r^2,
   lattice granularity fixed so retried coordinates stay summable);
+* :mod:`repro.agg.service` — multi-round coordinator: round k+1's anchor is
+  round k's published mean (digest-pinned in the RoundSpec) and its
+  per-bucket y comes from round k's decode telemetry
+  (repro.core.qstate.update_y) — the anchored QState, threaded across
+  rounds;
 * :mod:`repro.agg.sim`    — in-process harness driving hundreds of simulated
   clients through a server with stragglers, drops, duplicates, corruption
-  and out-of-bound adversarial inputs.
+  and out-of-bound adversarial inputs; :func:`repro.agg.sim.run_rounds`
+  drives the multi-round service over a drifting large-norm population.
 """
 from repro.agg.wire import (RoundSpec, Payload, Response, WireError,
                             TruncatedPayloadError, BadMagicError,
                             VersionMismatchError, CorruptPayloadError,
                             HeaderMismatchError, encode_payload,
                             decode_payload, encode_response, decode_response,
-                            q_at_attempt, y_at_attempt, payload_bytes,
+                            q_at_attempt, y_at_attempt, y_buckets_at_attempt,
+                            payload_bytes,
                             STATUS_QUEUED, STATUS_NACK, STATUS_REJECT,
                             STATUS_ACK)
 from repro.agg.client import AggClient
 from repro.agg.server import AggServer, RoundStats
+from repro.agg.service import AggService, ServiceConfig
 
 __all__ = [
     "RoundSpec", "Payload", "Response", "WireError",
     "TruncatedPayloadError", "BadMagicError", "VersionMismatchError",
     "CorruptPayloadError", "HeaderMismatchError", "encode_payload",
     "decode_payload", "encode_response", "decode_response", "q_at_attempt",
-    "y_at_attempt", "payload_bytes", "AggClient", "AggServer", "RoundStats",
+    "y_at_attempt", "y_buckets_at_attempt", "payload_bytes", "AggClient",
+    "AggServer", "RoundStats", "AggService", "ServiceConfig",
     "STATUS_QUEUED", "STATUS_NACK", "STATUS_REJECT", "STATUS_ACK",
 ]

@@ -2,13 +2,22 @@
 
 A client holds one local vector for one round.  Encoding runs the same
 fused Pallas path as the shard_map collectives (repro.kernels.ops
-lattice_encode): bucketize (+ optional §6 HD rotation), dither with the
-round's shared offset, round to integer lattice coordinates, pack the mod-q
-colors into uint32 words.  The integer coordinates ``k = round(x/s0 - u)``
-are *independent of the attempt level* — escalation only widens the color
-space (q <- q^2, granularity s0 fixed), so a retry re-packs the same
-coordinates at more bits per coordinate and the §5 checksum h(k) never
-changes.
+lattice_encode): bucketize (+ optional §6 HD rotation), subtract the round
+anchor *inside the kernel* when the round is anchored (RoundSpec v2:
+``anchor_digest != 0`` — the anchor is round k-1's published mean, so the
+integer coordinates stay ~y/s-sized however large the drifting mean grows),
+dither with the round's shared offset, round to integer lattice
+coordinates, pack the mod-q colors into uint32 words.  The integer
+coordinates ``k = round((x - anchor)/s_b - u)`` are *independent of the
+attempt level* — escalation only widens the color space (q <- q^2, the
+per-bucket granularity fixed), so a retry re-packs the same coordinates at
+more bits per coordinate and the §5 checksum h(k) never changes.
+
+NACK hygiene (v2): a NACK's per-bucket ``y_buckets`` must have exactly
+``spec.nb`` entries.  A length mismatch means the response was corrupted or
+belongs to a different round config — the client treats it as corrupt and
+re-sends its current-attempt payload instead of truncating or broadcasting
+the vector (which would silently desync its escalation state).
 """
 from __future__ import annotations
 
@@ -26,18 +35,22 @@ from repro.kernels import ops as K
 class AggClient:
     """One client's state for one aggregation round."""
 
-    def __init__(self, spec: wire.RoundSpec, client_id: int, x):
+    def __init__(self, spec: wire.RoundSpec, client_id: int, x,
+                 anchor=None):
         if np.shape(x) != (spec.d,):
             raise ValueError(f"x has shape {np.shape(x)}, spec.d={spec.d}")
+        rounds.check_anchor(spec, anchor)
         self.spec = spec
         self.client_id = client_id
         self.attempt = 0
         self.acked = False
         self.gave_up = False
         self._xflat = rounds.bucketize(jnp.asarray(x), spec).reshape(-1)
+        self._aflat = (rounds.bucketize(jnp.asarray(anchor), spec).reshape(-1)
+                       if spec.anchored else None)
         self._u = rounds.dither(spec).reshape(-1)
         self._sides = rounds.sides(spec)
-        # per-coordinate sides for the fused kernel (one s0 per bucket)
+        # per-coordinate sides for the fused kernel (one s_b per bucket)
         self._s_coord = jnp.repeat(self._sides, spec.cfg.bucket)
         self._check: Optional[int] = None
 
@@ -48,11 +61,13 @@ class AggClient:
         q = wire.q_at_attempt(self.spec.cfg.q, attempt)
         if self._check is None:
             words, k = K.lattice_encode(self._xflat, self._u, self._s_coord,
-                                        q=q, return_coords=True)
+                                        q=q, return_coords=True,
+                                        anchor=self._aflat)
             self._check = int(ED.coord_checksum(
                 k, rounds.checksum_weights(self.spec)))
         else:
-            words = K.lattice_encode(self._xflat, self._u, self._s_coord, q=q)
+            words = K.lattice_encode(self._xflat, self._u, self._s_coord,
+                                     q=q, anchor=self._aflat)
         nw = L.packed_len(self.spec.padded, L.bits_for_q(q))
         words = np.asarray(words[:nw])
         return wire.encode_payload(self.spec, self.client_id, attempt, q,
@@ -60,11 +75,14 @@ class AggClient:
                                    self._check)
 
     def handle_response(self, data: bytes) -> Optional[bytes]:
-        """Process a server response; returns the retry payload on NACK.
+        """Process a server response; returns the next payload to send.
 
         Returns None when no further send is needed (ACK/QUEUED, terminal
         REJECT, or escalation exhausted — ``gave_up`` is set in the latter
-        two cases).
+        two cases).  A NACK directing escalation returns the re-encoded
+        payload at the server-directed attempt; a NACK whose per-bucket y
+        vector does not match the round's bucket count is treated as
+        corrupt: the current-attempt payload is re-sent unchanged.
         """
         r = wire.decode_response(data)
         if r.client_id != self.client_id or r.round_id != self.spec.round_id:
@@ -76,9 +94,13 @@ class AggClient:
             self.gave_up = True
             return None
         # NACK: escalate to the server-directed attempt (RobustAgreement:
-        # the color space squares, the granularity stays s0)
+        # the color space squares, the per-bucket granularity stays fixed)
         if self.acked or self.gave_up:
             return None                    # late NACK after a verdict
+        if len(r.y_buckets) != self.spec.nb:
+            # corrupt/foreign NACK (wrong per-bucket margin count): do not
+            # escalate off it — retransmit and let the server re-judge
+            return self.payload(self.attempt)
         if r.attempt_next >= self.spec.max_attempts:
             self.gave_up = True
             return None

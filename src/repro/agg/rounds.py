@@ -2,17 +2,25 @@
 
 Everything a round's participants must agree on is derived deterministically
 from the :class:`repro.agg.wire.RoundSpec`: the dither ``u`` (one draw per
-round from ``seed``/``round_id``), the §5 checksum weights, and the §6
-Hadamard rotation diagonal (``rot_seed``).  The defaults make the bucket
-pipeline bit-identical to :mod:`repro.dist.collectives` — the acceptance
-test pins the server's round mean to ``allgather_allreduce_mean``.
+round from ``seed``/``round_id``), the §5 checksum weights, the §6 Hadamard
+rotation diagonal (``rot_seed``), the per-bucket sides, and — in anchored
+rounds — the anchor vector itself, pinned by its CRC-32 digest in the spec.
+The defaults make the bucket pipeline bit-identical to
+:mod:`repro.dist.collectives` — the acceptance test pins the server's round
+mean to ``allgather_allreduce_mean``; the bucket layout itself is the one
+definition in :mod:`repro.core.bucketing` (shared with the collectives).
 """
 from __future__ import annotations
 
+import zlib
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.agg import wire as W
+from repro.core import bucketing as B
 from repro.core import error_detect as ED
 from repro.core import lattice as L
 from repro.core import rotation as R
@@ -45,28 +53,45 @@ def rotation_diag(spec: W.RoundSpec) -> Array:
 def bucketize(x: Array, spec: W.RoundSpec) -> Array:
     """Flat (d,) -> (nb, bucket) f32, zero-padded, HD-rotated if configured.
 
-    Mirrors repro.dist.collectives._bucketize (same rotation kernel path),
-    parameterized by the round's rot_seed.
+    The same repro.core.bucketing layout the collectives use (identical
+    rotation kernel path), parameterized by the round's rot_seed.
     """
-    pad = spec.padded - x.shape[0]
-    v = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, spec.cfg.bucket)
-    if spec.cfg.rotate:
-        v = R.rotate(v, rotation_diag(spec), use_kernel=spec.cfg.packed)
-    return v
+    diag = rotation_diag(spec) if spec.cfg.rotate else None
+    return B.bucketize(x, spec.cfg.bucket, diag=diag,
+                       use_kernel=spec.cfg.packed)
 
 
 def unbucketize(b: Array, spec: W.RoundSpec) -> Array:
     """Inverse of :func:`bucketize`: (nb, bucket) -> flat (d,)."""
-    if spec.cfg.rotate:
-        b = R.unrotate(b, rotation_diag(spec), spec.cfg.bucket,
-                       use_kernel=spec.cfg.packed)
-    return b.reshape(-1)[: spec.d]
+    diag = rotation_diag(spec) if spec.cfg.rotate else None
+    return B.unbucketize(b, spec.d, diag=diag, use_kernel=spec.cfg.packed)
 
 
 def sides(spec: W.RoundSpec) -> Array:
-    """(nb,) f32 sides sidecar — the round's fixed granularity s0 per bucket,
+    """(nb,) f32 sides sidecar — the round's fixed per-bucket granularity,
     pinned behind an optimization barrier exactly like the collectives'
     _sides (a compile-time-constant divisor is rewritten into a non-exactly-
     rounded reciprocal multiply, which would break bit-parity)."""
-    s = jnp.full((spec.nb,), spec.side, jnp.float32)
+    s = jnp.asarray(spec.sides_np())
     return jax.lax.optimization_barrier(s)
+
+
+def anchor_digest(anchor) -> int:
+    """CRC-32 of the anchor's little-endian f32 bytes (nonzero: 0 is the
+    wire's 'unanchored' sentinel)."""
+    raw = np.ascontiguousarray(np.asarray(anchor, np.float32))
+    return (zlib.crc32(raw.tobytes()) & 0xFFFFFFFF) or 1
+
+
+def check_anchor(spec: W.RoundSpec, anchor: Optional[np.ndarray]) -> None:
+    """Validate a party's anchor vector against the round contract."""
+    if not spec.anchored:
+        return
+    if anchor is None:
+        raise ValueError(f"round {spec.round_id} is anchored "
+                         f"(digest {spec.anchor_digest:#x}) but no anchor "
+                         f"vector was provided")
+    got = anchor_digest(anchor)
+    if got != spec.anchor_digest:
+        raise ValueError(f"anchor digest {got:#x} != round's "
+                         f"{spec.anchor_digest:#x} (stale anchor?)")

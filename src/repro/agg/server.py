@@ -2,28 +2,45 @@
 
 Arrival path (:meth:`AggServer.receive`): parse/validate the payload bytes
 (framing errors and spec mismatches are counted and REJECTed — including
-truncated, corrupt, and version-mismatched messages), dedupe by client id,
-and buffer the *packed words* — the 8x-compressed form — until a drain.
+truncated, corrupt, version-mismatched and anchor-digest-mismatched
+messages), dedupe by client id, and buffer the *packed words* — the
+8x-compressed form — until a drain.
 
 Drain path (:meth:`AggServer.drain`): all pending payloads of one color
-space q are decoded against the server's anchor in ONE batched Pallas
-launch (repro.kernels.ops.lattice_decode_batched), their §5 coordinate
-checksums verified vectorized, and the accepted senders' integer lattice
-coordinates summed into the round accumulator.  Integer addition is exact
-and commutative, so the accumulated sum — and therefore the round mean — is
-bit-identical under any arrival order, any receive/drain interleaving, and
-any drain batching.
+space q are decoded against the server's decode reference in ONE batched
+Pallas launch (repro.kernels.ops.lattice_decode_batched), their §5
+coordinate checksums verified vectorized, and the accepted senders' integer
+lattice coordinates summed into the round accumulator.  Integer addition is
+exact and commutative, so the accumulated sum — and therefore the round
+mean — is bit-identical under any arrival order, any receive/drain
+interleaving, and any drain batching.
+
+Anchored rounds (RoundSpec v2, ``anchor_digest != 0``): clients encoded
+``x - anchor``, so the server operates entirely in anchor-relative space —
+its decode reference is the zero vector (the server's anchor *is* the round
+anchor, digest-checked at construction) and the anchor is added back once
+at finalize.  Coordinates and the accumulator stay ~y/s-sized however large
+the drifting mean grows; with a zero anchor (digest 0) the path is
+bit-identical to the historical server.
+
+Per-bucket telemetry: every drain updates ``RoundStats.dist_b`` (max
+|decoded - ref|_inf per bucket over accepted senders) and
+``RoundStats.fails_b`` (decode failures attributed per bucket via the
+distance surrogate on checksum-failed senders) — the inputs the multi-round
+service feeds to :func:`repro.core.qstate.update_y` to produce round k+1's
+per-bucket ``y``.
 
 Decode failures (checksum mismatch: the §5 detection event) are NACKed with
-the next escalation level — RobustAgreement's r <- r^2 with the lattice
-granularity pinned at the round's s0, so a retried client's coordinates
-land on the same lattice and stay summable.  When the color space is
-already at the 2^16 packing cap (or max_attempts is reached) the client is
-REJECTed and excluded from the round.
+the next escalation level — RobustAgreement's r <- r^2 with the per-bucket
+lattice granularity pinned, so a retried client's coordinates land on the
+same lattice and stay summable; the NACK carries the per-bucket margins at
+the directed level (v2).  When the color space is already at the 2^16
+packing cap (or max_attempts is reached) the client is REJECTed and
+excluded from the round.
 
-Finalize: mean = ((ksum / count) + u) * s0, unbucketized — the same integer-
-space averaging expression as ``allgather_allreduce_mean``, against which
-the acceptance test pins bit-identity.
+Finalize: mean = ((ksum / count) + u) * s_b (+ anchor), unbucketized — the
+same integer-space averaging expression as ``allgather_allreduce_mean``,
+against which the acceptance test pins bit-identity.
 """
 from __future__ import annotations
 
@@ -51,14 +68,16 @@ class RoundStats:
     accepted: int = 0
     duplicates: int = 0
     rejected_wire: int = 0       # framing: truncated / corrupt / bad version
-    rejected_spec: int = 0       # well-formed but wrong round/config
+    rejected_spec: int = 0       # well-formed but wrong round/config/anchor
     decode_failures: int = 0     # §5 checksum detections across all drains
     nacks_sent: int = 0
     gave_up: int = 0             # clients dropped after escalation exhausted
     drains: int = 0
     bytes_in: int = 0
     bytes_out: int = 0
-    max_dist: float = 0.0        # max |decoded - anchor|_inf over accepts
+    max_dist: float = 0.0        # max |decoded - ref|_inf over accepts
+    dist_b: Optional[np.ndarray] = None    # (nb,) per-bucket max distance
+    fails_b: Optional[np.ndarray] = None   # (nb,) per-bucket failure counts
 
 
 def _reject(spec: wire.RoundSpec, client_id: int) -> wire.Response:
@@ -69,15 +88,17 @@ def _reject(spec: wire.RoundSpec, client_id: int) -> wire.Response:
 
 @partial(jax.jit, static_argnames=("q", "bucket"))
 def _drain_math(words: Array, sides: Array, checks: Array, valid: Array,
-                anchor: Array, u: Array, weights: Array, *, q: int,
-                bucket: int):
+                anchor: Array, u: Array, weights: Array, y_col: Array,
+                *, q: int, bucket: int):
     """Decode S payloads, verify checksums, sum accepted integer coords.
 
     words: (S, nw) uint32; sides: (S, nb) f32 sidecars; checks: (S,) uint32;
     valid: (S,) bool (False for the block-size padding rows the server adds
     so drain sizes hit a bounded set of compiled shapes); anchor/u/weights:
-    (n,).  Returns (ok (S,), ksum_delta (n,) int32, max_dist () f32 over
-    accepted senders).
+    (n,); y_col: (nb,) decode margins at this q.  Returns (ok (S,),
+    ksum_delta (n,) int32, max_dist () f32 over accepted senders,
+    dist_b (nb,) per-bucket max over accepted, fails_b (nb,) per-bucket
+    failure attribution over checksum-failed senders).
     """
     s_sender = jnp.repeat(sides, bucket, axis=-1)          # (S, n)
     k = K.lattice_decode_batched(words, anchor, u, s_sender, q=q,
@@ -88,10 +109,23 @@ def _drain_math(words: Array, sides: Array, checks: Array, valid: Array,
     ok = (ED.coord_checksum(k, weights, axis=-1) == checks) & valid
     ksum_delta = jnp.sum(jnp.where(ok[:, None], k, 0), axis=0,
                          dtype=jnp.int32)
+    # the largest accepted |coordinate|: the server bounds the int32
+    # accumulator with it (count * max|k| < 2^31) and fails loudly instead
+    # of silently wrapping — only reachable with huge-norm *unanchored*
+    # rounds, where raw coords scale like |x|/s; anchored coords stay ~y/s
+    max_abs_k = jnp.max(jnp.where(ok[:, None], jnp.abs(k), 0))
     z = (k.astype(jnp.float32) + u[None]) * s_sender
-    dist = jnp.abs(z - anchor[None])
-    max_dist = jnp.max(jnp.where(ok[:, None], dist, 0.0))
-    return ok, ksum_delta, max_dist
+    dist = jnp.abs(z - anchor[None]).reshape(z.shape[0], -1, bucket)
+    dist_bk = jnp.max(dist, axis=-1)                       # (S, nb)
+    max_dist = jnp.max(jnp.where(ok[:, None], dist_bk, 0.0))
+    dist_b = jnp.max(jnp.where(ok[:, None], dist_bk, 0.0), axis=0)
+    # failure attribution: for checksum-failed senders, buckets whose
+    # decoded distance exceeds the margin carry the blame (the §5 distance
+    # surrogate, per bucket)
+    failed = valid & ~ok
+    over = dist_bk > 1.5 * y_col[None]
+    fails_b = jnp.sum(jnp.where(failed[:, None] & over, 1.0, 0.0), axis=0)
+    return ok, ksum_delta, max_dist, dist_b, fails_b, max_abs_k
 
 
 @jax.jit
@@ -107,15 +141,25 @@ def _mean_math(ksum: Array, count: Array, u: Array, s_col: Array) -> Array:
 
 
 class AggServer:
-    """One aggregation round's coordinator."""
+    """One aggregation round's coordinator.
+
+    ``anchor`` doubles as the decode reference and — in anchored rounds —
+    the round anchor itself (validated against ``spec.anchor_digest``).
+    """
 
     def __init__(self, spec: wire.RoundSpec, anchor):
         if np.shape(anchor) != (spec.d,):
             raise ValueError(
                 f"anchor has shape {np.shape(anchor)}, spec.d={spec.d}")
+        rounds.check_anchor(spec, anchor if spec.anchored else None)
         self.spec = spec
-        self._anchor_flat = rounds.bucketize(jnp.asarray(anchor),
-                                             spec).reshape(-1)
+        self._anchor_b = rounds.bucketize(jnp.asarray(anchor), spec)
+        if spec.anchored:
+            # clients encoded x - anchor: decode in anchor-relative space
+            # (reference 0), add the anchor back at finalize
+            self._ref_flat = jnp.zeros((spec.padded,), jnp.float32)
+        else:
+            self._ref_flat = self._anchor_b.reshape(-1)
         self._u = rounds.dither(spec)                     # (nb, bucket)
         self._weights = rounds.checksum_weights(spec)     # (padded,)
         self._sides = rounds.sides(spec)                  # (nb,)
@@ -124,7 +168,20 @@ class AggServer:
         self._gave_up: set[int] = set()
         self._ksum = jnp.zeros((spec.nb, spec.cfg.bucket), jnp.int32)
         self._count = 0
-        self.stats = RoundStats()
+        self._max_abs_k = 0
+        # per-attempt per-bucket margin tuples for QUEUED/NACK responses
+        # (attempts are bounded by max_attempts; don't rebuild per message)
+        self._margins: dict[int, tuple] = {}
+        self.stats = RoundStats(dist_b=np.zeros((spec.nb,), np.float32),
+                                fails_b=np.zeros((spec.nb,), np.float32))
+
+    def _margin_tuple(self, attempt: int) -> tuple:
+        t = self._margins.get(attempt)
+        if t is None:
+            t = tuple(float(v) for v in
+                      wire.y_buckets_at_attempt(self.spec, attempt))
+            self._margins[attempt] = t
+        return t
 
     # ------------------------------------------------------------------ RX
     def receive(self, data: bytes) -> bytes:
@@ -157,7 +214,8 @@ class AggServer:
         return self._respond(wire.Response(
             status=wire.STATUS_QUEUED, round_id=self.spec.round_id,
             client_id=p.client_id, attempt_next=p.attempt, q_next=p.q,
-            y_next=wire.y_at_attempt(self.spec, p.attempt)))
+            y_next=wire.y_at_attempt(self.spec, p.attempt),
+            y_buckets=self._margin_tuple(p.attempt)))
 
     def _ack(self, client_id: int) -> wire.Response:
         return wire.Response(status=wire.STATUS_ACK,
@@ -201,6 +259,7 @@ class AggServer:
             # valid=False and never enter the sum)
             S = len(plist)
             pad = (-S) % DEFAULT_BLOCK_SENDERS
+            attempt0 = plist[0].attempt
             words = jnp.asarray(np.pad(
                 np.stack([p.words for p in plist]), ((0, pad), (0, 0))))
             sides = jnp.asarray(np.pad(
@@ -209,16 +268,32 @@ class AggServer:
             checks = jnp.asarray(np.pad(
                 np.array([p.check for p in plist], np.uint32), (0, pad)))
             valid = jnp.asarray(np.arange(S + pad) < S)
-            ok, ksum_delta, max_dist = _drain_math(
-                words, sides, checks, valid, self._anchor_flat,
-                self._u.reshape(-1), self._weights, q=q,
-                bucket=self.spec.cfg.bucket)
+            y_col = jnp.asarray(wire.y_buckets_at_attempt(self.spec,
+                                                          attempt0))
+            ok, ksum_delta, max_dist, dist_b, fails_b, max_abs_k = \
+                _drain_math(words, sides, checks, valid, self._ref_flat,
+                            self._u.reshape(-1), self._weights, y_col, q=q,
+                            bucket=self.spec.cfg.bucket)
             ok = np.asarray(ok)[:S]
-            self._ksum = self._ksum + ksum_delta.reshape(self._ksum.shape)
             n_ok = int(ok.sum())
+            # int32 accumulator guard: sum_i |k_i| <= count * max|k| must
+            # stay below 2^31 or the exact integer sum may have wrapped —
+            # fail loudly (an anchored round is the fix: coords stay ~y/s)
+            self._max_abs_k = max(self._max_abs_k, int(max_abs_k))
+            if (self._count + n_ok) * self._max_abs_k >= 2 ** 31:
+                raise OverflowError(
+                    f"round {self.spec.round_id}: accumulating {n_ok} more "
+                    f"senders with |coords| up to {self._max_abs_k} can "
+                    f"overflow the int32 sum ({self._count} accepted so "
+                    f"far); anchor the round (RoundSpec.anchor_digest) so "
+                    f"coordinates stay ~y/s instead of ~|x|/s")
+            self._ksum = self._ksum + ksum_delta.reshape(self._ksum.shape)
             self._count += n_ok
             self.stats.accepted += n_ok
             self.stats.max_dist = max(self.stats.max_dist, float(max_dist))
+            self.stats.dist_b = np.maximum(self.stats.dist_b,
+                                           np.asarray(dist_b))
+            self.stats.fails_b = self.stats.fails_b + np.asarray(fails_b)
             for p, good in zip(plist, ok):
                 if good:
                     self._accepted.add(p.client_id)
@@ -237,7 +312,8 @@ class AggServer:
                     status=wire.STATUS_NACK, round_id=self.spec.round_id,
                     client_id=p.client_id, attempt_next=nxt,
                     q_next=wire.q_at_attempt(self.spec.cfg.q, nxt),
-                    y_next=wire.y_at_attempt(self.spec, nxt))))
+                    y_next=wire.y_at_attempt(self.spec, nxt),
+                    y_buckets=self._margin_tuple(nxt))))
         return responses
 
     # ------------------------------------------------------------ FINALIZE
@@ -245,12 +321,18 @@ class AggServer:
         """Drain anything still pending and return (mean (d,), stats).
 
         The mean is over the accepted senders; with zero accepts it is the
-        all-zeros vector.  Bit-identical for any arrival order of the same
-        accepted payload set.
+        all-zeros vector (the round anchor in anchored rounds — the best
+        available estimate when nobody reported).  Bit-identical for any
+        arrival order of the same accepted payload set.
         """
         self.drain()
         if self._count == 0:
-            return np.zeros((self.spec.d,), np.float32), self.stats
+            if not self.spec.anchored:
+                return np.zeros((self.spec.d,), np.float32), self.stats
+            return (np.asarray(rounds.unbucketize(self._anchor_b, self.spec)),
+                    self.stats)
         mean_b = _mean_math(self._ksum, jnp.int32(self._count), self._u,
                             self._sides[:, None])
+        if self.spec.anchored:
+            mean_b = mean_b + self._anchor_b
         return np.asarray(rounds.unbucketize(mean_b, self.spec)), self.stats

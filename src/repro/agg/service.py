@@ -1,0 +1,135 @@
+"""Multi-round aggregation service: anchored QState threaded across rounds.
+
+The missing piece between single-round :class:`repro.agg.server.AggServer`
+and a deployable service: round k+1's protocol contract is *derived from
+round k's outcome*.
+
+  * **anchor** — round k+1's anchor is round k's published mean (the
+    paper's distance-dependent regime: clients encode ``x - mean_{k-1}``,
+    so the wire cost depends on how far the population moved, never on
+    ``|mean|``).  The anchor is pinned in the RoundSpec by its CRC-32
+    digest; a client encoding against a stale anchor is REJECTed rather
+    than silently mis-decoded.
+  * **per-bucket y** — round k+1's distance bounds come from round k's
+    decode telemetry through :func:`repro.core.qstate.update_y`: buckets
+    implicated in decode failures escalate (RobustAgreement per bucket),
+    clean buckets relax toward the observed distances — so the granularity
+    tightens as the population concentrates, round over round, without any
+    out-of-band tuning.
+
+Usage::
+
+    svc = AggService(ServiceConfig(d=4096, bucket=512, y0=0.5))
+    for _ in range(rounds):
+        spec, anchor = svc.begin_round()
+        server = svc.make_server()
+        ... feed payloads from AggClient(spec, cid, x, anchor=anchor) ...
+        mean, stats = svc.end_round(server)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.agg import rounds, wire
+from repro.agg.server import AggServer, RoundStats
+from repro.core import qstate as QS
+from repro.dist.collectives import QSyncConfig, flat_size_padded
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Static config of a multi-round aggregation service."""
+    d: int
+    q: int = 16
+    bucket: int = 512
+    rotate: bool = False
+    y0: float = 1.0
+    seed: int = 0
+    max_attempts: int = 4
+    anchored: bool = True       # False: every round keeps the zero anchor
+                                # (the historical raw-input protocol)
+    y_decay: float = 0.75       # per-round relaxation toward measured dist
+    y_escalate: float = 2.0     # per-bucket escalation on decode failure
+    y_floor: float = 1e-6
+
+    @property
+    def qcfg(self) -> QSyncConfig:
+        return QSyncConfig(q=self.q, bucket=self.bucket, rotate=self.rotate)
+
+    @property
+    def nb(self) -> int:
+        return flat_size_padded(self.d, self.qcfg) // self.bucket
+
+
+class AggService:
+    """Coordinates successive anchored rounds of federated DME."""
+
+    def __init__(self, cfg: ServiceConfig, anchor0=None):
+        """``anchor0``: optional warm-start reference for round 1 (e.g. the
+        previous model state in a federated-learning deployment); None
+        starts from the zero anchor."""
+        self.cfg = cfg
+        self.round_id = 0
+        self.y = np.full((cfg.nb,), cfg.y0, np.float32)
+        self.anchor: Optional[np.ndarray] = (
+            None if anchor0 is None else np.asarray(anchor0, np.float32))
+        self.history: list[RoundStats] = []
+        self._spec: Optional[wire.RoundSpec] = None
+
+    # ----------------------------------------------------------- ROUND API
+    def begin_round(self) -> "tuple[wire.RoundSpec, Optional[np.ndarray]]":
+        """Open round k+1: returns (spec, anchor vector or None).
+
+        The spec (RoundSpec v2) carries the per-bucket sides derived from
+        the tracked y state and the digest of the anchor — both published
+        out of band to the fleet along with the anchor itself.
+        """
+        self.round_id += 1
+        digest = (rounds.anchor_digest(self.anchor)
+                  if self.cfg.anchored and self.anchor is not None else 0)
+        self._spec = wire.RoundSpec(
+            round_id=self.round_id, d=self.cfg.d, cfg=self.cfg.qcfg,
+            y0=float(self.y.max()), seed=self.cfg.seed,
+            max_attempts=self.cfg.max_attempts,
+            y_buckets=tuple(float(v) for v in self.y),
+            anchor_digest=digest)
+        return self._spec, (self.anchor if digest else None)
+
+    def make_server(self) -> AggServer:
+        """The round's server.
+
+        Anchored: decodes in anchor-relative space (the round anchor,
+        digest-checked).  Unanchored: the previous round's mean still serves
+        as the *decode reference* (the historical protocol — clients encode
+        raw x and the reference realizes the distance bound server-side),
+        so an anchored-vs-unanchored comparison isolates the encode-side
+        anchoring.
+        """
+        assert self._spec is not None, "begin_round() first"
+        ref = (self.anchor if self.anchor is not None
+               else np.zeros((self.cfg.d,), np.float32))
+        return AggServer(self._spec, ref)
+
+    def end_round(self, server: AggServer
+                  ) -> "tuple[np.ndarray, RoundStats]":
+        """Close the round: finalize, advance the QState.
+
+        anchor <- the round mean (when anchored); y <- per-bucket update
+        from the round's decode telemetry (escalate failed buckets, relax
+        clean ones toward the measured distances).
+        """
+        assert self._spec is not None, "begin_round() first"
+        mean, stats = server.finalize()
+        # the published mean always becomes the next reference; with
+        # cfg.anchored it is additionally pinned (digest) and subtracted
+        # client-side
+        self.anchor = np.asarray(mean, np.float32)
+        self.y = np.asarray(QS.update_y(
+            self.y, stats.fails_b, stats.dist_b, decay=self.cfg.y_decay,
+            escalate=self.cfg.y_escalate, floor=self.cfg.y_floor), np.float32)
+        self.history.append(stats)
+        self._spec = None
+        return mean, stats

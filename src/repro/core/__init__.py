@@ -12,3 +12,6 @@ from repro.core.dme import (mean_estimation_star, mean_estimation_tree,
 from repro.core import rotation
 from repro.core import error_detect
 from repro.core import sublinear
+from repro.core import bucketing
+from repro.core import qstate
+from repro.core.qstate import QState

@@ -1,0 +1,51 @@
+"""Bucket-space layout shared by the collectives and the agg protocol.
+
+One definition of the flat-vector <-> (n_buckets, bucket) mapping — padding
+to a whole number of buckets, plus the optional per-bucket shared-randomness
+Hadamard rotation (paper §6).  ``repro.dist.collectives`` and
+``repro.agg.rounds`` used to hand-mirror these; the agg-server-vs-star
+bit-parity acceptance test depends on them staying identical, so they now
+both delegate here.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rotation as R
+
+Array = jax.Array
+
+
+def padded_size(n: int, bucket: int) -> int:
+    """Smallest multiple of the bucket size >= n (flat wire length)."""
+    b = int(bucket)
+    return -(-int(n) // b) * b
+
+
+def bucketize(x: Array, bucket: int, *, diag: Optional[Array] = None,
+              use_kernel: bool = True) -> Array:
+    """Flat (n,) -> (n_buckets, bucket) f32, zero-padded.
+
+    ``diag`` (a ±1 Hadamard diagonal from :func:`rotation.rotation_keypair`)
+    enables the per-bucket HD rotation — block-diagonal, inverted exactly by
+    :func:`unbucketize` with the same diagonal.  ``use_kernel`` routes the
+    rotation through the Pallas FWHT kernel (the packed wire path).
+    """
+    n = x.shape[0]
+    pad = padded_size(n, bucket) - n
+    v = jnp.pad(x.astype(jnp.float32), (0, pad))
+    v = v.reshape(-1, bucket)
+    if diag is not None:
+        v = R.rotate(v, diag, use_kernel=use_kernel)
+    return v
+
+
+def unbucketize(b: Array, n: int, *, diag: Optional[Array] = None,
+                use_kernel: bool = True) -> Array:
+    """Inverse of :func:`bucketize`: (n_buckets, bucket) -> flat (n,)."""
+    if diag is not None:
+        b = R.unrotate(b, diag, b.shape[-1], use_kernel=use_kernel)
+    return b.reshape(-1)[:int(n)]

@@ -1,0 +1,88 @@
+"""Anchored quantization state (the paper's distance-dependent regime).
+
+The paper's headline bound says DME error need only depend on the *distance*
+between encoder and decoder inputs, never their norm.  Decoding against a
+nearby anchor already realizes the distance dependence; what breaks in the
+drifting large-norm regime (mean ``mu`` advancing each round with
+``|mu| >> spread``) is the *arithmetic*: raw-space lattice coordinates
+``k = round(x/s - u)`` grow like ``|x|/s``, blowing past f32's 24-bit
+mantissa (the dither — and eventually the rounding itself — is lost) and
+toward int32 range.  Encoding ``x - anchor`` with the anchor pinned to the
+previous round/step mean keeps ``|k| ~ y/s ~ q`` regardless of ``|x|`` —
+the shared-state flavor of correlated quantization (Suresh et al. 2022).
+
+:class:`QState` bundles that anchor with the per-bucket granularity state:
+
+  * ``y``      — (nb,) distance bound per bucket; lattice side
+                 ``s_b = 2 y_b / (q-1)``;
+  * ``anchor`` — flat (n,) anchor vector, or ``None`` for the zero anchor
+                 (bit-identical to the historical raw-input path — asserted
+                 in tests).
+
+:func:`update_y` is the per-bucket state transition driven by decode
+telemetry: buckets implicated in a detected decode failure escalate
+(RobustAgreement's ``r <- r^2`` analogue, applied to the bound), clean
+buckets relax toward the measured distance so the granularity tightens as
+inputs concentrate across rounds.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class QState(NamedTuple):
+    """Anchored quantization state carried through every layer of the stack.
+
+    y:      (nb,) f32 per-bucket distance bounds.
+    anchor: flat (n,) f32 anchor vector (raw space, pre-bucketize), or None
+            for the zero anchor.
+    """
+    y: Array
+    anchor: Optional[Array] = None
+
+
+def as_qstate(state: Union[QState, Array], *, anchor: Optional[Array] = None
+              ) -> QState:
+    """Promote a bare per-bucket ``y`` array to a :class:`QState`.
+
+    Every collective accepts either form, so the historical
+    ``(x, y_buckets, ...)`` call sites keep working unchanged (zero anchor).
+    """
+    if isinstance(state, QState):
+        return state
+    return QState(y=jnp.asarray(state, jnp.float32), anchor=anchor)
+
+
+def uniform(nb: int, y: Union[float, Array],
+            anchor: Optional[Array] = None) -> QState:
+    """Uniform per-bucket bounds (the scalar-y compatibility constructor)."""
+    return QState(y=jnp.full((nb,), y, jnp.float32), anchor=anchor)
+
+
+def update_y(y: Array, fails_b: Array, dist_b: Array, *,
+             decay: float = 0.99, escalate: float = 2.0,
+             margin: float = 2.5, floor: float = 1e-8) -> Array:
+    """Per-bucket distance-bound transition from one round's telemetry.
+
+    y:       (..., nb) current bounds.
+    fails_b: (..., nb) detected decode failures attributed to each bucket.
+    dist_b:  (..., nb) max observed |decoded - anchor|_inf per bucket.
+
+    Buckets with failures escalate ``y <- y * escalate`` (the bound-space
+    form of RobustAgreement's color-space squaring); clean buckets relax
+    toward ``margin * dist_b`` — clipped to [y/4, 4y] per step so one noisy
+    round cannot collapse or explode the state — which *shrinks* y as the
+    inputs concentrate around the anchor.  ``dist_b == 0`` (nothing
+    measured, e.g. world size 1) leaves the bucket's bound unchanged.
+    """
+    y = jnp.asarray(y, jnp.float32)
+    candidate = jnp.where(dist_b > floor,
+                          jnp.clip(margin * dist_b, 0.25 * y, 4.0 * y),
+                          y)
+    relaxed = decay * y + (1.0 - decay) * candidate
+    return jnp.maximum(jnp.where(fails_b > 0, y * escalate, relaxed), floor)

@@ -34,7 +34,28 @@ of ``cfg.bucket``-sized buckets, each with its own distance bound
 ``y_buckets[b]`` and lattice side ``s = 2*y/(q-1)``.  With
 ``cfg.rotate=True`` each bucket is pre-rotated by the shared-randomness
 randomized Hadamard transform HD (paper §6, RLQSGD) — see
-:func:`_bucketize` / :func:`_unbucketize`.
+:func:`_bucketize` / :func:`_unbucketize` (thin wrappers over
+:mod:`repro.core.bucketing`, the one bucket-layout definition shared with
+the agg protocol).
+
+Anchored state (:class:`repro.core.qstate.QState`): every collective takes
+either a bare per-bucket ``y`` array (zero anchor — bit-identical to the
+historical signature) or a ``QState`` whose ``anchor`` is subtracted before
+encoding (fused into the Pallas encode/decode for the star's single-shot
+wire; the iterating butterfly/rh convert to anchor-relative space once at
+entry so per-round state never re-absorbs the large-norm anchor).  The wire
+still carries only packed coords; anchoring pins the integer coordinates to
+``|k| ~ y/s`` however large the inputs' common mean grows — the paper's
+distance-dependent regime, where a drifting large-norm mean would otherwise
+push ``round(x/s - u)`` past f32's mantissa (losing the dither) and toward
+int32 range.
+
+Telemetry is per bucket: ``QSyncAux.fails_b`` / ``dist_b`` attribute decode
+failures and observed distances to individual buckets (feeding the
+per-bucket ``y`` update in :func:`repro.core.qstate.update_y`), and
+``rh_reduce_scatter_mean`` additionally returns ``y_seg`` — the kept
+segment's per-bucket bounds — so multi-axis FSDP chains thread per-bucket
+``y`` from axis to axis instead of broadcasting one scalar per leaf.
 
 Wire format (``cfg.packed=True``, the default): what crosses the
 ``all_gather``/``ppermute`` boundary is the *packed* payload produced by the
@@ -69,14 +90,17 @@ sides sidecar, and matches the actual packed payload byte-for-byte
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bucketing as B
 from repro.core import lattice as L
+from repro.core import qstate as QS
 from repro.core import rotation as R
+from repro.core.qstate import QState
 from repro.kernels import ops as K
 
 Array = jax.Array
@@ -94,10 +118,18 @@ class QSyncAux(NamedTuple):
     max_dist: () f32 — max observed |decoded - anchor|_inf (bucket space).
     y_next:   () f32 — suggested distance bound for the next step
                        (0 when nothing was measured, e.g. world size 1).
+    fails_b:  (nb,) f32 — decode failures attributed per bucket (None when
+                       the collective measured nothing, e.g. world size 1).
+    dist_b:   (nb,) f32 — per-bucket max |decoded - anchor|_inf.
+    y_seg:    rh only: the kept segment's per-bucket y (nb/world,), for
+                       threading per-bucket bounds across FSDP axis chains.
     """
     fails: Array
     max_dist: Array
     y_next: Array
+    fails_b: Optional[Array] = None
+    dist_b: Optional[Array] = None
+    y_seg: Optional[Array] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,7 +172,7 @@ class QSyncConfig:
 def flat_size_padded(n: int, cfg: Union[QSyncConfig, int]) -> int:
     """Smallest multiple of the bucket size >= n (flat wire length)."""
     b = cfg.bucket if isinstance(cfg, QSyncConfig) else int(cfg)
-    return -(-n // b) * b
+    return B.padded_size(n, b)
 
 
 def _bucket_diag(bucket: int) -> Array:
@@ -151,22 +183,16 @@ def _bucket_diag(bucket: int) -> Array:
 def _bucketize(x: Array, cfg: QSyncConfig) -> Array:
     """Flat (n,) -> (n_buckets, bucket) f32, zero-padded; HD-rotated per
     bucket when cfg.rotate (block-diagonal, invertible by _unbucketize).
-    The packed path rotates through the Pallas FWHT kernel."""
-    n = x.shape[0]
-    pad = flat_size_padded(n, cfg) - n
-    v = jnp.pad(x.astype(jnp.float32), (0, pad))
-    v = v.reshape(-1, cfg.bucket)
-    if cfg.rotate:
-        v = R.rotate(v, _bucket_diag(cfg.bucket), use_kernel=cfg.packed)
-    return v
+    The packed path rotates through the Pallas FWHT kernel.  Delegates to
+    :mod:`repro.core.bucketing` (shared with repro.agg)."""
+    diag = _bucket_diag(cfg.bucket) if cfg.rotate else None
+    return B.bucketize(x, cfg.bucket, diag=diag, use_kernel=cfg.packed)
 
 
 def _unbucketize(b: Array, n: int, cfg: QSyncConfig) -> Array:
     """Inverse of _bucketize: (n_buckets, bucket) -> flat (n,)."""
-    if cfg.rotate:
-        b = R.unrotate(b, _bucket_diag(cfg.bucket), cfg.bucket,
-                       use_kernel=cfg.packed)
-    return b.reshape(-1)[:n]
+    diag = _bucket_diag(cfg.bucket) if cfg.rotate else None
+    return B.unbucketize(b, n, diag=diag, use_kernel=cfg.packed)
 
 
 def _sides(y_buckets: Array, cfg: QSyncConfig) -> Array:
@@ -186,12 +212,16 @@ def _sides(y_buckets: Array, cfg: QSyncConfig) -> Array:
 def _bucket_fails(z: Array, anchor: Array, y_col: Array):
     """Vectorized lattice.decode_failure over buckets.
 
-    z, anchor: (..., nb, bucket); y_col: (nb, 1).  Returns (count, max_dist)
-    where count sums per-(sender, bucket) failure flags.
+    z, anchor: (..., nb, bucket); y_col: (nb, 1).  Returns
+    (fails_b (nb,), dist_b (nb,)) — per-bucket failure counts and max
+    distances, reduced over any leading (sender/round) axes.  The scalar
+    telemetry is ``fails_b.sum()`` / ``dist_b.max()``.
     """
     dist = jnp.abs(z - anchor)
-    failed = jnp.any(dist > 1.5 * y_col, axis=-1)
-    return jnp.sum(failed.astype(jnp.float32)), jnp.max(dist)
+    failed = jnp.any(dist > 1.5 * y_col, axis=-1).astype(jnp.float32)
+    dist_b = jnp.max(dist, axis=-1)
+    lead = tuple(range(failed.ndim - 1))
+    return jnp.sum(failed, axis=lead), jnp.max(dist_b, axis=lead)
 
 
 def _encode(xb: Array, s: Array, u: Array) -> Array:
@@ -209,31 +239,37 @@ def _sides_per_coord(sides: Array, bucket: int) -> Array:
 
 
 def _encode_packed(xb: Array, sides: Array, u: Array, cfg: QSyncConfig,
-                   return_coords: bool = False):
+                   return_coords: bool = False,
+                   anchor: Optional[Array] = None):
     """Fused encode of bucketized xb -> packed uint32 wire words.
 
-    xb, u: (nb, bucket); sides: (nb,).  Returns words (packed_len(n, bits),)
-    — plus the int32 coords (nb, bucket) when return_coords.
+    xb, u: (nb, bucket); sides: (nb,); anchor: optional (nb, bucket) QState
+    anchor subtracted in-kernel.  Returns words (packed_len(n, bits),) —
+    plus the int32 coords (nb, bucket) when return_coords.
     """
     s_flat = _sides_per_coord(sides, xb.shape[-1])
+    a_flat = anchor.reshape(-1) if anchor is not None else None
     out = K.lattice_encode(xb.reshape(-1), u.reshape(-1), s_flat, q=cfg.q,
-                           return_coords=return_coords)
+                           return_coords=return_coords, anchor=a_flat)
     if return_coords:
         return out[0], out[1].reshape(xb.shape)
     return out
 
 
 def _decode_packed(words: Array, anchor: Array, sides: Array, u: Array,
-                   cfg: QSyncConfig, mode: str = "point") -> Array:
+                   cfg: QSyncConfig, mode: str = "point",
+                   ref: Optional[Array] = None) -> Array:
     """Fused decode of wire words against the local anchor.
 
-    anchor, u: (nb, bucket); sides: (nb,) — the *received* sidecar.
+    anchor, u: (nb, bucket); sides: (nb,) — the *received* sidecar; ref:
+    optional (nb, bucket) QState anchor the sender subtracted (fused).
     Returns the decoded points (mode="point") or int32 coords
     (mode="coords"), shaped like anchor.
     """
     s_flat = _sides_per_coord(sides, anchor.shape[-1])
+    r_flat = ref.reshape(-1) if ref is not None else None
     out = K.lattice_decode(words, anchor.reshape(-1), u.reshape(-1), s_flat,
-                           q=cfg.q, mode=mode)
+                           q=cfg.q, mode=mode, ref=r_flat)
     return out.reshape(anchor.shape)
 
 
@@ -253,8 +289,8 @@ def _check_buckets(xb: Array, y_buckets: Array):
 # Star analogue (paper Algorithm 3): all-gather colors, decode locally
 # ---------------------------------------------------------------------------
 
-def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
-                             axis_name, cfg: QSyncConfig
+def allgather_allreduce_mean(x_local: Array, state: Union[QState, Array],
+                             key: Array, axis_name, cfg: QSyncConfig
                              ) -> tuple[Array, QSyncAux]:
     """Mean over `axis_name` of per-rank vectors, star-style.
 
@@ -263,18 +299,28 @@ def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
     lattice points, so outputs are bit-identical across ranks.  With
     cfg.packed the gathered payload is the packed words + sides sidecar.
 
+    ``state`` is a :class:`QState` (per-bucket y + optional shared anchor,
+    subtracted/added inside the fused Pallas encode/decode) or a bare (nb,)
+    per-bucket y array (zero anchor — bit-identical to the historical path).
+
     Returns (mean (n,), QSyncAux).
     """
+    qs = QS.as_qstate(state)
+    y_buckets = qs.y
     n = x_local.shape[0]
     xb = _bucketize(x_local, cfg)
     _check_buckets(xb, y_buckets)
+    ab = _bucketize(qs.anchor, cfg) if qs.anchor is not None else None
+    # anchor-relative telemetry/averaging frame (xr == xb when unanchored):
+    # distances and decoded points stay ~y-sized however large the raw norm
+    xr = xb if ab is None else xb - ab
     s = _sides(y_buckets, cfg)
     u = L.shared_offset(key, xb.shape)
 
     world = _axis_size(axis_name)
     if cfg.packed:
         sides = s[:, 0]
-        words = _encode_packed(xb, sides, u, cfg)
+        words = _encode_packed(xb, sides, u, cfg, anchor=ab)
         all_words = jax.lax.all_gather(words, axis_name)    # (world, nw)
         all_sides = jax.lax.all_gather(sides, axis_name)    # (world, nb)
         # one batched kernel launch over all senders' gathered words (each
@@ -283,13 +329,15 @@ def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
         s_sender = jnp.repeat(all_sides, cfg.bucket, axis=-1)  # (world, n)
         k = K.lattice_decode_batched(all_words, xb.reshape(-1),
                                      u.reshape(-1), s_sender, q=cfg.q,
-                                     mode="coords")
+                                     mode="coords",
+                                     ref=None if ab is None
+                                     else ab.reshape(-1))
         k = k.reshape((world,) + xb.shape)                  # (world, nb, b)
     else:
-        k_own = _encode(xb, s, u)
+        k_own = _encode(xr, s, u)
         colors = L.color_of(k_own, cfg.q)
         all_colors = jax.lax.all_gather(colors, axis_name)  # (world, nb, b)
-        k = L.decode_coords(all_colors, xb[None], s, u, q=cfg.q)
+        k = L.decode_coords(all_colors, xr[None], s, u, q=cfg.q)
 
     # pin the (exact) integer coords: the producers differ between the packed
     # kernel and jnp wire paths, and XLA's fusion/reduce-order/FMA choices
@@ -297,7 +345,7 @@ def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
     # barrier is an identical subgraph in both, so outputs stay bit-identical
     k = jax.lax.optimization_barrier(k)
     z = L.coords_to_point(k, s, u)                          # (world, nb, b)
-    fails, max_dist = _bucket_fails(z, xb[None],
+    fails_b, dist_b = _bucket_fails(z, xr[None],
                                     y_buckets.astype(jnp.float32)[:, None])
     # average in integer coordinate space (as the butterfly does): the int
     # sum over senders is exact and order-free, so the mean is bit-identical
@@ -306,7 +354,10 @@ def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
     mean_b = (ksum.astype(jnp.float32) / world + u) * s
 
     dev = jnp.max(jnp.abs(z - mean_b[None]))
-    aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * dev)
+    if ab is not None:
+        mean_b = mean_b + ab
+    aux = QSyncAux(fails=jnp.sum(fails_b), max_dist=jnp.max(dist_b),
+                   y_next=2.5 * dev, fails_b=fails_b, dist_b=dist_b)
     return _unbucketize(mean_b, n, cfg), aux
 
 
@@ -314,8 +365,8 @@ def allgather_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
 # Tree analogue (paper Algorithm 4): recursive doubling
 # ---------------------------------------------------------------------------
 
-def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
-                             axis_name, cfg: QSyncConfig
+def butterfly_allreduce_mean(x_local: Array, state: Union[QState, Array],
+                             key: Array, axis_name, cfg: QSyncConfig
                              ) -> tuple[Array, QSyncAux]:
     """Mean over `axis_name`, butterfly (recursive-doubling) topology.
 
@@ -328,19 +379,30 @@ def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
     returns the local coords so the exact integer-space average needs no
     second pass over the vector.
 
+    ``state``: :class:`QState` or bare (nb,) y array.  With an anchor the
+    rounds iterate in anchor-relative space (subtracted once at entry, added
+    back at exit): re-absorbing a large-norm anchor into the running value
+    every round would re-lose the f32 precision the anchor buys.
+
     Returns (mean (n,), QSyncAux).
     """
+    qs = QS.as_qstate(state)
+    y_buckets = qs.y
     n = x_local.shape[0]
     world = _axis_size(axis_name)
     if world & (world - 1):
         raise ValueError(f"butterfly needs a power-of-two world, got {world}")
     cur = _bucketize(x_local, cfg)
     _check_buckets(cur, y_buckets)
+    ab = _bucketize(qs.anchor, cfg) if qs.anchor is not None else None
+    if ab is not None:
+        cur = cur - ab
     s = _sides(y_buckets, cfg)
     y_col = y_buckets.astype(jnp.float32)[:, None]
 
-    fails = jnp.zeros((), jnp.float32)
-    max_dist = jnp.zeros((), jnp.float32)
+    nb = cur.shape[0]
+    fails_b = jnp.zeros((nb,), jnp.float32)
+    dist_b = jnp.zeros((nb,), jnp.float32)
     rounds = int(np.log2(world)) if world > 1 else 0
     for r in range(rounds):
         u = L.shared_offset(jax.random.fold_in(key, r), cur.shape)
@@ -361,9 +423,10 @@ def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
         # pin the (exact) integer coords so the float math below compiles
         # from identical subgraphs whichever wire path produced them
         k_own, k_partner = jax.lax.optimization_barrier((k_own, k_partner))
-        f, d = _bucket_fails(L.coords_to_point(k_partner, s, u), cur, y_col)
-        fails = fails + f
-        max_dist = jnp.maximum(max_dist, d)
+        f_b, d_b = _bucket_fails(L.coords_to_point(k_partner, s, u), cur,
+                                 y_col)
+        fails_b = fails_b + f_b
+        dist_b = jnp.maximum(dist_b, d_b)
         # average in integer coordinate space: int adds are exact and
         # commutative, and the single float expression below is the same
         # fusion on every rank — so partners produce bit-identical values
@@ -376,7 +439,11 @@ def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
         # roundings, so packed and unpacked runs would drift
         cur = jax.lax.optimization_barrier(cur)
 
-    aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * max_dist)
+    if ab is not None:
+        cur = cur + ab
+    aux = QSyncAux(fails=jnp.sum(fails_b), max_dist=jnp.max(dist_b),
+                   y_next=2.5 * jnp.max(dist_b), fails_b=fails_b,
+                   dist_b=dist_b)
     return _unbucketize(cur, n, cfg), aux
 
 
@@ -384,8 +451,8 @@ def butterfly_allreduce_mean(x_local: Array, y_buckets: Array, key: Array,
 # Recursive-halving reduce-scatter (the FSDP gradient path)
 # ---------------------------------------------------------------------------
 
-def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
-                           axis_name, cfg: QSyncConfig
+def rh_reduce_scatter_mean(x_local: Array, state: Union[QState, Array],
+                           key: Array, axis_name, cfg: QSyncConfig
                            ) -> tuple[Array, QSyncAux]:
     """Reduce-scatter of the mean via quantized recursive halving.
 
@@ -398,9 +465,18 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
     shape (padded_n / world,).  With cfg.packed the sent half is packed
     words + its sides sidecar (the payload halves every round).
 
+    ``state``: :class:`QState` or bare (nb,) y array.  An anchor is
+    subtracted once at entry (the rounds then iterate anchor-relative, like
+    the butterfly) and the kept segment's slice is added back at exit.
+    ``aux.y_seg`` / ``aux.fails_b`` / ``aux.dist_b`` describe the kept
+    segment per bucket — multi-axis FSDP chains feed ``y_seg`` straight into
+    the next axis' call instead of re-broadcasting one scalar y.
+
     Requires the padded bucket count to divide evenly by the world size
     (guaranteed by fsdp.pad_to_shardable).
     """
+    qs = QS.as_qstate(state)
+    y_buckets = qs.y
     n = x_local.shape[0]
     world = _axis_size(axis_name)
     if world & (world - 1):
@@ -412,11 +488,18 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
     if nb % world:
         raise ValueError(f"{nb} buckets not divisible by world={world}; "
                          f"pad with fsdp.pad_to_shardable first")
+    ab = _bucketize(qs.anchor, cfg) if qs.anchor is not None else None
+    if ab is not None:
+        cur = cur - ab
     # pinned for the same reason as _sides: constant-derived lattice sides
     # otherwise compile into context-dependent non-exact reciprocal multiplies
     y_cur = jax.lax.optimization_barrier(y_buckets.astype(jnp.float32))
     rank = jax.lax.axis_index(axis_name) if world > 1 else jnp.zeros((), jnp.int32)
 
+    fails_b = jnp.zeros((nb,), jnp.float32)
+    dist_b = jnp.zeros((nb,), jnp.float32)
+    # scalar telemetry covers every decode this rank performed (the old
+    # semantics); the per-bucket maps follow the kept lineage only
     fails = jnp.zeros((), jnp.float32)
     max_dist = jnp.zeros((), jnp.float32)
     rounds = int(np.log2(world)) if world > 1 else 0
@@ -438,6 +521,13 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
         u_send = jnp.where(bit, u_lo, u_hi)
         s_keep = cfg.spec.side(y_keep)[:, None]
         s_send = cfg.spec.side(y_send)[:, None]
+        if ab is not None:
+            ab = jnp.where(bit, ab[half:], ab[:half])
+        # the running per-bucket telemetry follows the kept half (every
+        # bucket of the final segment was inside the working segment of
+        # every round, so its counts/distances are complete)
+        fails_b = jnp.where(bit, fails_b[half:], fails_b[:half])
+        dist_b = jnp.where(bit, dist_b[half:], dist_b[:half])
 
         perm = [(i, i ^ dist) for i in range(world)]
         if cfg.packed:
@@ -462,9 +552,11 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
         # unpacked paths and the reduce-scatter stays bit-identical
         k_recv = jax.lax.optimization_barrier(k_recv)
         z = L.coords_to_point(k_recv, s_keep, u_keep)
-        f, d = _bucket_fails(z, keep, y_keep[:, None])
-        fails = fails + f
-        max_dist = jnp.maximum(max_dist, d)
+        f_b, d_b = _bucket_fails(z, keep, y_keep[:, None])
+        fails_b = fails_b + f_b
+        dist_b = jnp.maximum(dist_b, d_b)
+        fails = fails + jnp.sum(f_b)
+        max_dist = jnp.maximum(max_dist, jnp.max(d_b))
         # average in integer coordinate space, exactly as the butterfly does:
         # quantize our own half onto the same (u, s) lattice and average the
         # *coordinates*.  A float average 0.5*(keep + z) is not
@@ -479,11 +571,14 @@ def rh_reduce_scatter_mean(x_local: Array, y_buckets: Array, key: Array,
         cur = (0.5 * (k_own + k_recv).astype(jnp.float32) + u_keep) * s_keep
         y_cur = y_keep
 
+    if ab is not None:
+        cur = cur + ab
     if cfg.rotate:
         cur = R.unrotate(cur, _bucket_diag(cfg.bucket), cfg.bucket,
                          use_kernel=cfg.packed)
     out = cur.reshape(-1)
-    aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * max_dist)
+    aux = QSyncAux(fails=fails, max_dist=max_dist, y_next=2.5 * max_dist,
+                   fails_b=fails_b, dist_b=dist_b, y_seg=y_cur)
     return out, aux
 
 

@@ -44,32 +44,46 @@ DEFAULT_BLOCK_ROWS = 8
 
 
 def _decode_math(w, anchor, u, s, *, q: int, bits: int,
-                 avg_cnt: Optional[int], coords: bool):
+                 avg_cnt: Optional[int], coords: bool, ref=None):
     """Shared decode body: packed words (..., COLS//per) -> k or z (..., COLS).
 
     anchor/u/s broadcast against the unpacked colors (the batched kernel
-    passes (bs, bm, COLS) words against a (bm, COLS) anchor block)."""
+    passes (bs, bm, COLS) words against a (bm, COLS) anchor block).  ``ref``
+    is the QState anchor the sender subtracted before encoding: the
+    coordinate frame becomes anchor-relative, ``k_a = round((a - ref)/s - u)``
+    and the decoded point gets ``ref`` added back."""
     shifts = (jnp.arange(per := 32 // bits, dtype=jnp.uint32)
               * jnp.uint32(bits))
     c = ((w[..., :, None] >> shifts) & jnp.uint32(q - 1)).astype(jnp.int32)
     c = c.reshape(w.shape[:-1] + (w.shape[-1] * per,))  # (..., COLS) colors
-    t = anchor / s - u
+    av = anchor - ref if ref is not None else anchor
+    t = av / s - u
     k_a = jnp.round(t).astype(jnp.int32)
     delta = jnp.bitwise_and(c - k_a + (q // 2), q - 1) - (q // 2)
     k = k_a + delta
     if coords:
         return k
     z = (k.astype(jnp.float32) + u) * s
+    if ref is not None:
+        z = z + ref
     if avg_cnt is not None:
         z = (z + anchor * avg_cnt) * (1.0 / (avg_cnt + 1))
     return z
 
 
-def _decode_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int, bits: int,
-                   avg_cnt: Optional[int], scalar_s: bool, coords: bool):
+def _decode_kernel(w_ref, a_ref, u_ref, s_ref, *refs, q: int, bits: int,
+                   avg_cnt: Optional[int], scalar_s: bool, coords: bool,
+                   with_ref: bool):
+    if with_ref:
+        r_ref, o_ref = refs
+        rv = r_ref[...]
+    else:
+        (o_ref,) = refs
+        rv = None
     s = s_ref[0, 0] if scalar_s else s_ref[...]
     out = _decode_math(w_ref[...], a_ref[...].astype(jnp.float32), u_ref[...],
-                       s, q=q, bits=bits, avg_cnt=avg_cnt, coords=coords)
+                       s, q=q, bits=bits, avg_cnt=avg_cnt, coords=coords,
+                       ref=rv)
     o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -77,7 +91,8 @@ def _decode_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int, bits: int,
                                              "mode", "block_rows",
                                              "interpret"))
 def lattice_decode_pallas(words: jax.Array, anchor: jax.Array, u: jax.Array,
-                          s: jax.Array, *, q: int, bits: int, n: int,
+                          s: jax.Array, ref: jax.Array = None,
+                          *, q: int, bits: int, n: int,
                           avg_cnt: Optional[int] = None, mode: str = "point",
                           block_rows: int = DEFAULT_BLOCK_ROWS,
                           interpret: bool = True) -> jax.Array:
@@ -86,6 +101,8 @@ def lattice_decode_pallas(words: jax.Array, anchor: jax.Array, u: jax.Array,
     mode="point": returns z (N,) f32; avg_cnt, if given, fuses the
     running-average epilogue out = (z + anchor*avg_cnt)/(avg_cnt+1).
     mode="coords": returns the int32 coordinates k (N,).
+    ``ref`` (N,) is the QState anchor fused into the coordinate frame
+    (the sender encoded x - ref); see :func:`_decode_math`.
     """
     assert q & (q - 1) == 0 and bits in (2, 4, 8, 16)
     assert mode in ("point", "coords")
@@ -108,28 +125,43 @@ def lattice_decode_pallas(words: jax.Array, anchor: jax.Array, u: jax.Array,
         s_spec = pl.BlockSpec((block_rows, COLS), lambda i: (i, 0))
     bm = block_rows
     out_dtype = jnp.int32 if mode == "coords" else jnp.float32
+    with_ref = ref is not None
+    in_arrays = [wf, af, uf, sf]
+    in_specs = [
+        pl.BlockSpec((bm, COLS // per), lambda i: (i, 0)),
+        pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
+        pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
+        s_spec,
+    ]
+    if with_ref:
+        rf = jnp.pad(ref.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
+        in_arrays.append(rf)
+        in_specs.append(pl.BlockSpec((bm, COLS), lambda i: (i, 0)))
     out = pl.pallas_call(
         functools.partial(_decode_kernel, q=q, bits=bits, avg_cnt=avg_cnt,
-                          scalar_s=scalar_s, coords=(mode == "coords")),
+                          scalar_s=scalar_s, coords=(mode == "coords"),
+                          with_ref=with_ref),
         grid=(rows // bm,),
-        in_specs=[
-            pl.BlockSpec((bm, COLS // per), lambda i: (i, 0)),
-            pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
-            pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
-            s_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, COLS), out_dtype),
         interpret=interpret,
-    )(wf, af, uf, sf)
+    )(*in_arrays)
     return out.reshape(-1)[:n]
 
 
 DEFAULT_BLOCK_SENDERS = 16
 
 
-def _decode_batched_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int,
-                           bits: int, s_kind: str, coords: bool):
+def _decode_batched_kernel(w_ref, a_ref, u_ref, s_ref, *refs, q: int,
+                           bits: int, s_kind: str, coords: bool,
+                           with_ref: bool):
+    if with_ref:
+        r_ref, o_ref = refs
+        rv = r_ref[...]                     # (bm, COLS), broadcasts over bs
+    else:
+        (o_ref,) = refs
+        rv = None
     if s_kind == "scalar":
         s = s_ref[0, 0]
     elif s_kind == "shared":
@@ -137,7 +169,8 @@ def _decode_batched_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int,
     else:                                   # per-sender: (bs, bm, COLS)
         s = s_ref[...]
     out = _decode_math(w_ref[...], a_ref[...].astype(jnp.float32), u_ref[...],
-                       s, q=q, bits=bits, avg_cnt=None, coords=coords)
+                       s, q=q, bits=bits, avg_cnt=None, coords=coords,
+                       ref=rv)
     o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -145,7 +178,8 @@ def _decode_batched_kernel(w_ref, a_ref, u_ref, s_ref, o_ref, *, q: int,
                                              "block_rows", "block_senders",
                                              "interpret"))
 def lattice_decode_batched_pallas(words: jax.Array, anchor: jax.Array,
-                                  u: jax.Array, s: jax.Array, *, q: int,
+                                  u: jax.Array, s: jax.Array,
+                                  ref: jax.Array = None, *, q: int,
                                   bits: int, n: int, mode: str = "coords",
                                   block_rows: int = DEFAULT_BLOCK_ROWS,
                                   block_senders: int = DEFAULT_BLOCK_SENDERS,
@@ -158,7 +192,9 @@ def lattice_decode_batched_pallas(words: jax.Array, anchor: jax.Array,
     read once per tile.  The per-sender words (the 8x-compressed payload)
     dominate HBM traffic.  ``s`` is a scalar, a shared (n,) per-coordinate
     array, or a per-sender (senders, n) array (each sender's sides
-    sidecar).  Returns (senders, n) int32 coords (mode="coords") or f32
+    sidecar).  ``ref`` (n,) is the shared QState anchor all senders
+    subtracted before encoding (fused like the anchor block, read once per
+    row tile).  Returns (senders, n) int32 coords (mode="coords") or f32
     points (mode="point").
     """
     assert q & (q - 1) == 0 and bits in (2, 4, 8, 16)
@@ -191,19 +227,27 @@ def lattice_decode_batched_pallas(words: jax.Array, anchor: jax.Array,
                      constant_values=1.0).reshape(senders + spad, rows, COLS)
         s_spec = pl.BlockSpec((bs, bm, COLS), lambda i, j: (i, j, 0))
     out_dtype = jnp.int32 if mode == "coords" else jnp.float32
+    with_ref = ref is not None
+    in_arrays = [wf, af, uf, sf]
+    in_specs = [
+        pl.BlockSpec((bs, bm, COLS // per), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((bm, COLS), lambda i, j: (j, 0)),
+        pl.BlockSpec((bm, COLS), lambda i, j: (j, 0)),
+        s_spec,
+    ]
+    if with_ref:
+        rf = jnp.pad(ref.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
+        in_arrays.append(rf)
+        in_specs.append(pl.BlockSpec((bm, COLS), lambda i, j: (j, 0)))
     out = pl.pallas_call(
         functools.partial(_decode_batched_kernel, q=q, bits=bits,
-                          s_kind=s_kind, coords=(mode == "coords")),
+                          s_kind=s_kind, coords=(mode == "coords"),
+                          with_ref=with_ref),
         grid=((senders + spad) // bs, rows // bm),
-        in_specs=[
-            pl.BlockSpec((bs, bm, COLS // per), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((bm, COLS), lambda i, j: (j, 0)),
-            pl.BlockSpec((bm, COLS), lambda i, j: (j, 0)),
-            s_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bs, bm, COLS), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((senders + spad, rows, COLS),
                                        out_dtype),
         interpret=interpret,
-    )(wf, af, uf, sf)
+    )(*in_arrays)
     return out.reshape(senders + spad, -1)[:senders, :n]

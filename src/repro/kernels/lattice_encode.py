@@ -20,6 +20,13 @@ coordinates ``k = round(x/s - u)`` — the butterfly collective needs both the
 wire words (to send) and the local coordinates (to average in exact integer
 space) from a single fused pass over x.
 
+With ``anchor`` (the :class:`repro.core.qstate.QState` anchor, bucketized
+and flattened like x) the subtraction is fused into the same pass:
+``k = round((x - anchor)/s - u)``.  The wire still carries only the packed
+mod-q colors; anchoring keeps ``|k| ~ y/s`` however large ``|x|`` grows
+(the drifting large-norm regime), at zero extra HBM traffic beyond reading
+the anchor once.  ``anchor=None`` is byte-for-byte the historical kernel.
+
 q must be a power of two (the paper's experiments use q in {8, 16, 64});
 mod-q of the two's-complement coordinate is a bitwise AND with q-1.
 """
@@ -35,10 +42,16 @@ COLS = 2048
 DEFAULT_BLOCK_ROWS = 8
 
 
-def _encode_kernel(x_ref, u_ref, s_ref, *o_refs, q: int, bits: int,
-                   scalar_s: bool, with_coords: bool):
+def _encode_kernel(x_ref, u_ref, s_ref, *refs, q: int, bits: int,
+                   scalar_s: bool, with_coords: bool, with_anchor: bool):
+    if with_anchor:
+        a_ref, *o_refs = refs
+        xv = x_ref[...].astype(jnp.float32) - a_ref[...]
+    else:
+        o_refs = refs
+        xv = x_ref[...].astype(jnp.float32)
     s = s_ref[0, 0] if scalar_s else s_ref[...]
-    t = x_ref[...].astype(jnp.float32) / s - u_ref[...]
+    t = xv / s - u_ref[...]
     k = jnp.round(t).astype(jnp.int32)
     c = jnp.bitwise_and(k, q - 1).astype(jnp.uint32)      # mod q (q = 2^bits')
     bm, ccols = c.shape
@@ -55,6 +68,7 @@ def _encode_kernel(x_ref, u_ref, s_ref, *o_refs, q: int, bits: int,
                    static_argnames=("q", "bits", "return_coords",
                                     "block_rows", "interpret"))
 def lattice_encode_pallas(x: jax.Array, u: jax.Array, s: jax.Array,
+                          anchor: jax.Array = None,
                           *, q: int, bits: int, return_coords: bool = False,
                           block_rows: int = DEFAULT_BLOCK_ROWS,
                           interpret: bool = True):
@@ -63,7 +77,8 @@ def lattice_encode_pallas(x: jax.Array, u: jax.Array, s: jax.Array,
     Returns packed uint32 words of length ceil(N/per) where per=32/bits —
     plus the int32 coordinates (N,) when ``return_coords``.  N is padded
     internally to a (rows, COLS) view; callers slice via
-    repro.core.lattice.packed_len(N, bits).
+    repro.core.lattice.packed_len(N, bits).  ``anchor`` (N,), when given,
+    is subtracted in-kernel: ``k = round((x - anchor)/s - u)``.
     """
     assert q & (q - 1) == 0 and 2 <= q <= (1 << bits), (q, bits)
     assert bits in (2, 4, 8, 16)
@@ -85,6 +100,17 @@ def lattice_encode_pallas(x: jax.Array, u: jax.Array, s: jax.Array,
     rows = xf.shape[0]
     bm = block_rows
     grid = (rows // bm,)
+    with_anchor = anchor is not None
+    in_arrays = [xf, uf, sf]
+    in_specs = [
+        pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
+        pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
+        s_spec,
+    ]
+    if with_anchor:
+        af = jnp.pad(anchor.astype(jnp.float32), (0, pad)).reshape(-1, COLS)
+        in_arrays.append(af)
+        in_specs.append(pl.BlockSpec((bm, COLS), lambda i: (i, 0)))
     out_shape = [jax.ShapeDtypeStruct((rows, COLS // per), jnp.uint32)]
     out_specs = [pl.BlockSpec((bm, COLS // per), lambda i: (i, 0))]
     if return_coords:
@@ -92,17 +118,13 @@ def lattice_encode_pallas(x: jax.Array, u: jax.Array, s: jax.Array,
         out_specs.append(pl.BlockSpec((bm, COLS), lambda i: (i, 0)))
     out = pl.pallas_call(
         functools.partial(_encode_kernel, q=q, bits=bits, scalar_s=scalar_s,
-                          with_coords=return_coords),
+                          with_coords=return_coords, with_anchor=with_anchor),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
-            pl.BlockSpec((bm, COLS), lambda i: (i, 0)),
-            s_spec,
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(xf, uf, sf)
+    )(*in_arrays)
     n_words = (n + per - 1) // per
     words = out[0].reshape(-1)[:n_words]
     if return_coords:

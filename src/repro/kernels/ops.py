@@ -50,45 +50,53 @@ def fwht(x: jax.Array) -> jax.Array:
 
 
 def lattice_encode(x: jax.Array, u: jax.Array, s, *, q: int,
-                   return_coords: bool = False):
+                   return_coords: bool = False,
+                   anchor: Optional[jax.Array] = None):
     """Fused encode of flat x -> packed uint32 words (+ coords if asked).
 
     s is a scalar side or a per-coordinate (N,) array (per-bucket sides
-    broadcast by the collectives)."""
+    broadcast by the collectives).  ``anchor`` (N,), when given, is the
+    QState anchor subtracted in-kernel: k = round((x - anchor)/s - u)."""
     bits = L.bits_for_q(q)
     if not _pow2(q) or bits not in (2, 4, 8, 16) or x.size < 32:
         return _ref.lattice_encode_ref(x, u, s, q=q, bits=bits,
-                                       return_coords=return_coords)
-    return lattice_encode_pallas(x, u, jnp.asarray(s), q=q, bits=bits,
+                                       return_coords=return_coords,
+                                       anchor=anchor)
+    return lattice_encode_pallas(x, u, jnp.asarray(s), anchor, q=q, bits=bits,
                                  return_coords=return_coords,
                                  interpret=_interpret())
 
 
 def lattice_decode(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
                    *, q: int, avg_cnt: Optional[int] = None,
-                   mode: str = "point") -> jax.Array:
+                   mode: str = "point",
+                   ref: Optional[jax.Array] = None) -> jax.Array:
     """Fused decode: mode="point" (z, optional running-average epilogue)
-    or mode="coords" (int32 lattice coordinates)."""
+    or mode="coords" (int32 lattice coordinates).  ``ref`` (N,) is the
+    QState anchor the sender subtracted (fused anchor-relative frame)."""
     bits = L.bits_for_q(q)
     n = anchor.shape[0]
     DISPATCH_COUNTS["lattice_decode"] += 1
     if not _pow2(q) or bits not in (2, 4, 8, 16) or n < 32:
         return _ref.lattice_decode_ref(words, anchor, u, s, q=q, bits=bits,
-                                       n=n, avg_cnt=avg_cnt, mode=mode)
-    return lattice_decode_pallas(words, anchor, u, jnp.asarray(s), q=q,
+                                       n=n, avg_cnt=avg_cnt, mode=mode,
+                                       ref=ref)
+    return lattice_decode_pallas(words, anchor, u, jnp.asarray(s), ref, q=q,
                                  bits=bits, n=n, avg_cnt=avg_cnt, mode=mode,
                                  interpret=_interpret())
 
 
 def lattice_decode_batched(words: jax.Array, anchor: jax.Array, u: jax.Array,
-                           s, *, q: int, mode: str = "coords") -> jax.Array:
+                           s, *, q: int, mode: str = "coords",
+                           ref: Optional[jax.Array] = None) -> jax.Array:
     """One fused launch decoding (senders, n_words) payloads of the same
     vector against a shared anchor (n,) -> (senders, n).
 
     ``s`` is a scalar side, a shared per-coordinate (n,) array, or a
-    per-sender (senders, n) array (each sender's sides sidecar).  Used by
-    the star collective (the gathered wire) and the aggregation server's
-    drain (repro.agg.server) instead of one kernel call per sender.
+    per-sender (senders, n) array (each sender's sides sidecar); ``ref``
+    (n,) the shared QState anchor all senders subtracted.  Used by the star
+    collective (the gathered wire) and the aggregation server's drain
+    (repro.agg.server) instead of one kernel call per sender.
     """
     bits = L.bits_for_q(q)
     n = anchor.shape[0]
@@ -96,9 +104,9 @@ def lattice_decode_batched(words: jax.Array, anchor: jax.Array, u: jax.Array,
     if not _pow2(q) or bits not in (2, 4, 8, 16) or n < 32:
         return _ref.lattice_decode_batched_ref(words, anchor, u,
                                                jnp.asarray(s), q=q, bits=bits,
-                                               n=n, mode=mode)
+                                               n=n, mode=mode, ref=ref)
     return lattice_decode_batched_pallas(words, anchor, u, jnp.asarray(s),
-                                         q=q, bits=bits, n=n, mode=mode,
+                                         ref, q=q, bits=bits, n=n, mode=mode,
                                          interpret=_interpret())
 
 

@@ -21,9 +21,12 @@ def fwht_ref(x: jax.Array) -> jax.Array:
 
 
 def lattice_encode_ref(x: jax.Array, u: jax.Array, s, *, q: int,
-                       bits: int, return_coords: bool = False):
-    """Packed mod-q colors of round(x/s - u); s is scalar or per-coordinate."""
-    k = L.encode_coords(x, s, u)
+                       bits: int, return_coords: bool = False,
+                       anchor: Optional[jax.Array] = None):
+    """Packed mod-q colors of round((x - anchor)/s - u); s is scalar or
+    per-coordinate, anchor the optional QState anchor (None = zero)."""
+    xv = x.astype(jnp.float32) - anchor if anchor is not None else x
+    k = L.encode_coords(xv, s, u)
     colors = L.color_of(k, q)
     words = L.pack_colors(colors, bits)
     return (words, k) if return_coords else words
@@ -32,12 +35,16 @@ def lattice_encode_ref(x: jax.Array, u: jax.Array, s, *, q: int,
 def lattice_decode_ref(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
                        *, q: int, bits: int, n: int,
                        avg_cnt: Optional[int] = None,
-                       mode: str = "point") -> jax.Array:
+                       mode: str = "point",
+                       ref: Optional[jax.Array] = None) -> jax.Array:
     colors = L.unpack_colors(words, n, bits)
-    k = L.decode_coords(colors, anchor, s, u, q=q)
+    av = anchor.astype(jnp.float32) - ref if ref is not None else anchor
+    k = L.decode_coords(colors, av, s, u, q=q)
     if mode == "coords":
         return k
     z = L.coords_to_point(k, s, u, jnp.float32)
+    if ref is not None:
+        z = z + ref
     if avg_cnt is not None:
         z = (z + anchor.astype(jnp.float32) * avg_cnt) / (avg_cnt + 1)
     return z
@@ -45,14 +52,19 @@ def lattice_decode_ref(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
 
 def lattice_decode_batched_ref(words: jax.Array, anchor: jax.Array,
                                u: jax.Array, s, *, q: int, bits: int, n: int,
-                               mode: str = "coords") -> jax.Array:
+                               mode: str = "coords",
+                               ref: Optional[jax.Array] = None) -> jax.Array:
     """(senders, n_words) payloads vs one (n,) anchor -> (senders, n)."""
     colors = L.unpack_colors(words, n, bits)            # (senders, n)
     sa = jnp.asarray(s, jnp.float32)
-    k = L.decode_coords(colors, anchor[None], sa, u[None], q=q)
+    av = anchor.astype(jnp.float32) - ref if ref is not None else anchor
+    k = L.decode_coords(colors, av[None], sa, u[None], q=q)
     if mode == "coords":
         return k
-    return L.coords_to_point(k, sa, u[None], jnp.float32)
+    z = L.coords_to_point(k, sa, u[None], jnp.float32)
+    if ref is not None:
+        z = z + ref[None]
+    return z
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -79,29 +79,32 @@ def encdec_param_shapes(cfg: ModelConfig, ctx: ShardCtx) -> dict:
 
 
 def encdec_y_init(cfg: ModelConfig, ctx: ShardCtx, value: float = 1.0) -> dict:
-    """Per-leaf initial distance bounds (rotated-space-seeded like
-    transformer.y_init; see repro.models.sharding.leaf_y0)."""
-    from repro.models.sharding import leaf_y0
+    """Per-leaf, per-bucket initial distance bounds (rotated-space-seeded
+    like transformer.y_init; see repro.models.sharding.leaf_y0/leaf_nb)."""
+    from repro.models.sharding import leaf_nb, leaf_y0
     metas = encdec_metas(cfg, ctx)
+
+    def leaf(m, L):
+        shape = (L, leaf_nb(m, ctx)) if L else (leaf_nb(m, ctx),)
+        return jnp.full(shape, leaf_y0(m, ctx, value), jnp.float32)
+
     return {
-        "enc": {k: jnp.full((cfg.enc_layers,), leaf_y0(m, ctx, value),
-                            jnp.float32) for k, m in metas["enc"].items()},
-        "dec": {k: jnp.full((cfg.n_layers,), leaf_y0(m, ctx, value),
-                            jnp.float32) for k, m in metas["dec"].items()},
-        "top": {k: jnp.full((), leaf_y0(m, ctx, value), jnp.float32)
-                for k, m in metas["top"].items()},
+        "enc": {k: leaf(m, cfg.enc_layers) for k, m in metas["enc"].items()},
+        "dec": {k: leaf(m, cfg.n_layers) for k, m in metas["dec"].items()},
+        "top": {k: leaf(m, 0) for k, m in metas["top"].items()},
     }
 
 
 def encdec_tele_zeros(cfg: ModelConfig, ctx: ShardCtx) -> dict:
-    from repro.dist.fsdp import TELE_WIDTH
+    from repro.models.sharding import leaf_tele_width
     metas = encdec_metas(cfg, ctx)
     return {
-        "enc": {k: jnp.zeros((cfg.enc_layers, TELE_WIDTH), jnp.float32)
-                for k in metas["enc"]},
-        "dec": {k: jnp.zeros((cfg.n_layers, TELE_WIDTH), jnp.float32)
-                for k in metas["dec"]},
-        "top": {k: jnp.zeros((TELE_WIDTH,), jnp.float32) for k in metas["top"]},
+        "enc": {k: jnp.zeros((cfg.enc_layers, leaf_tele_width(m, ctx)),
+                             jnp.float32) for k, m in metas["enc"].items()},
+        "dec": {k: jnp.zeros((cfg.n_layers, leaf_tele_width(m, ctx)),
+                             jnp.float32) for k, m in metas["dec"].items()},
+        "top": {k: jnp.zeros((leaf_tele_width(m, ctx),), jnp.float32)
+                for k, m in metas["top"].items()},
     }
 
 

@@ -58,6 +58,13 @@ class ShardCtx:
     gather_dtype: str = "bfloat16"
     seq_parallel: bool = False        # residual stream sharded over tp
     remat: bool = True
+    anchor_grads: bool = False        # anchored DP sync: encode g - anchor with
+                                      # anchor = previous step's decoded mean
+                                      # (butterfly topology; requires "lq")
+
+    def __post_init__(self):
+        if self.anchor_grads and self.grad_sync != "lq":
+            raise ValueError("anchor_grads requires grad_sync='lq'")
 
     @property
     def world(self) -> int:
@@ -65,7 +72,8 @@ class ShardCtx:
 
     def fsdp_config(self) -> F.FSDPConfig:
         return F.FSDPConfig(axes=self.dp_axes, qcfg=self.qcfg,
-                            sync=self.grad_sync, gather_dtype=self.gather_dtype)
+                            sync=self.grad_sync, gather_dtype=self.gather_dtype,
+                            anchored=self.anchor_grads)
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +119,22 @@ def effective_bucket(n: int, ctx: ShardCtx) -> int:
     while b > 32 and n < ctx.dp * b:
         b //= 2
     return b
+
+
+def leaf_gathered_len(meta: LeafMeta, ctx: ShardCtx) -> int:
+    """Flat gathered length of one leaf (dp * shard_len)."""
+    return shard_len(meta, ctx) * ctx.dp
+
+
+def leaf_nb(meta: LeafMeta, ctx: ShardCtx) -> int:
+    """Bucket count of one leaf's DP gradient sync (per-bucket y length)."""
+    return F.leaf_nb(leaf_gathered_len(meta, ctx), ctx.dp, ctx.qcfg)
+
+
+def leaf_tele_width(meta: LeafMeta, ctx: ShardCtx) -> int:
+    """Tele-leaf length: scalars + per-bucket maps (+ anchor when anchored)."""
+    return F.tele_width(leaf_nb(meta, ctx), leaf_gathered_len(meta, ctx),
+                        ctx.anchor_grads)
 
 
 def leaf_y0(meta: LeafMeta, ctx: ShardCtx, value: float) -> float:
@@ -327,7 +351,10 @@ def gather_param(storage: Array, meta: LeafMeta, ctx: ShardCtx,
                  gathers, compute_dtype=jnp.bfloat16) -> Array:
     """storage local view (1, 1, shard) -> full TP-local weight.
 
-    y: () f32 distance bound for this leaf; tele: (TELE_WIDTH,) zeros.
+    y: this leaf's distance-bound state — () f32 (legacy scalar), (nb,) f32
+    per-bucket bounds, or {"y": (nb,), "anchor": (m,)} in anchored mode
+    (see dist/fsdp.py); tele: (leaf_tele_width(meta, ctx),) zeros whose
+    cotangent carries back the per-bucket decode telemetry.
     """
     g_plain, g_tp, g_groups = gathers
     w_shard = storage.reshape(-1)

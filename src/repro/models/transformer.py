@@ -215,31 +215,50 @@ def param_shapes(cfg: ModelConfig, ctx: ShardCtx) -> dict:
 
 
 def y_init(cfg: ModelConfig, ctx: ShardCtx, value: float = 1.0) -> dict:
-    """Initial distance-bound state, one scalar per leaf (per layer).
+    """Initial distance-bound state, one per-bucket vector per leaf (per
+    layer): shape (L, nb) for scanned leaves, (nb,) for top-level ones,
+    with nb = sharding.leaf_nb — the QState y the FSDP gradient sync
+    consumes and the trainer updates bucket by bucket from telemetry.
 
     With ``ctx.qcfg.rotate`` each leaf is seeded from the paper's §6
     rotated-space bound instead of the raw-space guess — see
-    :func:`repro.models.sharding.leaf_y0`.
+    :func:`repro.models.sharding.leaf_y0`.  With ``ctx.anchor_grads`` each
+    leaf carries ``{"y": ..., "anchor": ...}`` — the anchor (the previous
+    step's decoded gradient mean, replicated) starts at zero, which is
+    bit-identical to the unanchored path on step 0.
     """
-    from repro.models.sharding import leaf_y0
+    from repro.models.sharding import leaf_gathered_len, leaf_nb, leaf_y0
     metas = all_metas(cfg, ctx)
     L = n_scan_steps(cfg)
+
+    def leaf(meta, scanned):
+        nb = leaf_nb(meta, ctx)
+        shape = (L, nb) if scanned else (nb,)
+        y = jnp.full(shape, leaf_y0(meta, ctx, value), jnp.float32)
+        if not ctx.anchor_grads:
+            return y
+        m = leaf_gathered_len(meta, ctx)
+        a_shape = (L, m) if scanned else (m,)
+        return {"y": y, "anchor": jnp.zeros(a_shape, jnp.float32)}
+
     return {
-        "layers": {k: jnp.full((L,), leaf_y0(m, ctx, value), jnp.float32)
-                   for k, m in metas["layers"].items()},
-        "top": {k: jnp.full((), leaf_y0(m, ctx, value), jnp.float32)
-                for k, m in metas["top"].items()},
+        "layers": {k: leaf(m, True) for k, m in metas["layers"].items()},
+        "top": {k: leaf(m, False) for k, m in metas["top"].items()},
     }
 
 
 def tele_zeros(cfg: ModelConfig, ctx: ShardCtx) -> dict:
-    from repro.dist.fsdp import TELE_WIDTH
+    """Zero tele inputs, one per leaf, sized to carry the scalar telemetry
+    plus the per-bucket maps (and the next anchor when ctx.anchor_grads) —
+    see dist/fsdp.py's tele layout."""
+    from repro.models.sharding import leaf_tele_width
     metas = all_metas(cfg, ctx)
     L = n_scan_steps(cfg)
     return {
-        "layers": {k: jnp.zeros((L, TELE_WIDTH), jnp.float32)
-                   for k in metas["layers"]},
-        "top": {k: jnp.zeros((TELE_WIDTH,), jnp.float32) for k in metas["top"]},
+        "layers": {k: jnp.zeros((L, leaf_tele_width(m, ctx)), jnp.float32)
+                   for k, m in metas["layers"].items()},
+        "top": {k: jnp.zeros((leaf_tele_width(m, ctx),), jnp.float32)
+                for k, m in metas["top"].items()},
     }
 
 

@@ -3,12 +3,21 @@
 The train step (one compiled program, runs on every device):
   1. local loss -> grads; the FSDP gather's custom vjp reduce-scatters
      gradients over DP with the paper's lattice quantization;
-  2. telemetry (decode failures / measured distances) arrives as the
-     cotangent of the dummy ``tele`` input;
+  2. telemetry (decode failures / measured distances, now *per bucket*)
+     arrives as the cotangent of the dummy ``tele`` input;
   3. global grad-norm clip (one scalar all-reduce), ZeRO-local optimizer;
-  4. the ``y`` distance-bound state is updated from telemetry: detected
-     decode failures *escalate* y (the SPMD version of RobustAgreement's
-     r <- r^2, DESIGN §2), otherwise y tracks the measured distances.
+  4. the per-bucket ``y`` distance-bound state is updated from telemetry
+     via :func:`repro.core.qstate.update_y`: buckets implicated in a
+     detected decode failure *escalate* (the SPMD version of
+     RobustAgreement's r <- r^2, DESIGN §2), clean buckets relax toward
+     their measured distances.
+
+Anchored gradients (``ShardCtx.anchor_grads``): each leaf's y-state carries
+``{"y": (nb,), "anchor": (m,)}``; the FSDP backward encodes ``g - anchor``
+through the butterfly (dist/fsdp.py) and returns the decoded full mean in
+the tele cotangent, which becomes the next step's anchor — cross-step
+variance reduction: consecutive gradients are correlated, so
+``|g_t - mean_{t-1}|`` (what y must cover) shrinks well below ``|g_t|``.
 
 Fault tolerance: checkpoint every ``ckpt_every`` steps (atomic, logical
 layout => restores onto a different mesh); the loop catches device/runtime
@@ -28,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import qstate as QS
 from repro.dist import fsdp as F
 from repro.models.config import ModelConfig
 from repro.models.sharding import ShardCtx, shard_len, storage_spec
@@ -55,8 +65,28 @@ class TrainConfig:
     y_escalate: float = 2.0        # on detected decode failure
 
 
-def _y_update(y: Array, tele: Array, tc: TrainConfig) -> Array:
-    """tele: (..., 3) = [max_dist, fails, y_next] per leaf (per layer)."""
+def _y_update(y, tele: Array, tc: TrainConfig):
+    """Per-leaf distance-bound state transition from the tele cotangent.
+
+    y: legacy scalar state ((), (L,)), per-bucket state ((nb,), (L, nb)),
+    or an anchored dict leaf {"y": (..., nb), "anchor": (..., m)}.
+    tele: (..., width) — [max_dist, fails, y_next | dist_b | fails_b
+    | anchor_next] per dist/fsdp.py's layout.
+    """
+    if isinstance(y, dict):
+        nb = y["y"].shape[-1]
+        m = y["anchor"].shape[-1]
+        lo = F.TELE_WIDTH + 2 * nb
+        return {"y": _y_update(y["y"], tele, tc),
+                "anchor": tele[..., lo:lo + m]}
+    if y.ndim == tele.ndim and \
+            tele.shape[-1] >= F.TELE_WIDTH + 2 * y.shape[-1]:
+        nb = y.shape[-1]
+        dist_b = tele[..., F.TELE_WIDTH:F.TELE_WIDTH + nb]
+        fails_b = tele[..., F.TELE_WIDTH + nb:F.TELE_WIDTH + 2 * nb]
+        return QS.update_y(y, fails_b, dist_b, decay=tc.y_decay,
+                           escalate=tc.y_escalate)
+    # legacy scalar leaf: one bound per leaf from the scalar telemetry
     max_dist, fails, y_next = tele[..., 0], tele[..., 1], tele[..., 2]
     candidate = jnp.where(y_next > 1e-11,
                           jnp.clip(y_next, 0.25 * y, 4.0 * y),
@@ -71,6 +101,10 @@ def make_train_step(cfg: ModelConfig, ctx: ShardCtx, mesh, opt_cfg: O.OptConfig,
     metas = T.all_metas(cfg, ctx)
     loss_fn = T.make_loss_fn(cfg, ctx)
     L = T.n_scan_steps(cfg)
+    if ctx.anchor_grads and tc.microbatch > 1:
+        # the anchor rides the tele cotangent, which accumulation combines
+        # with jnp.maximum — meaningless for a mean vector
+        raise ValueError("anchor_grads is incompatible with microbatch > 1")
 
     pspec = {"layers": {k: storage_spec(m, ctx) for k, m in metas["layers"].items()},
              "top": {k: storage_spec(m, ctx) for k, m in metas["top"].items()}}
@@ -239,7 +273,16 @@ class Trainer:
         if "opt" in tree:
             state["opt"] = {k: C.logical_to_params(v, self.metas, self.ctx)
                             for k, v in tree["opt"].items()}
-        state["y"] = jax.tree.map(jnp.asarray, tree["y"])
+        # y/anchor shapes depend on the mesh (per-bucket nb, gathered m);
+        # an elastic restore onto a different mesh keeps the fresh init —
+        # telemetry state re-converges within a few steps.  A checkpoint
+        # *missing* the y entry is corrupt and still raises loudly.
+        restored_y = jax.tree.map(jnp.asarray, tree["y"])
+        if (jax.tree.structure(restored_y) == jax.tree.structure(state["y"])
+                and all(a.shape == b.shape for a, b in
+                        zip(jax.tree.leaves(restored_y),
+                            jax.tree.leaves(state["y"])))):
+            state["y"] = restored_y
         state["step"] = jnp.asarray(step, jnp.int32)
         return state
 

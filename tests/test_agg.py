@@ -57,7 +57,7 @@ def test_wire_roundtrip_fuzz(d, q, bucket):
         attempt = int(rng.randint(0, 4))
         cid = int(rng.randint(0, 1 << 31))
         data = wire.encode_payload(spec, cid, attempt, q, words, sides, check)
-        assert len(data) == 56 + 4 * nw + 4 * nb      # 52B header + 4B CRC
+        assert len(data) == 60 + 4 * nw + 4 * nb      # 56B header + 4B CRC
         if attempt == 0 and q == spec.cfg.q:
             assert len(data) == wire.payload_bytes(spec, 0)
         p = wire.decode_payload(data)
@@ -78,7 +78,7 @@ def _payload():
 
 def test_wire_rejects_truncation():
     _, data = _payload()
-    for cut in (0, 10, 51, 56, len(data) - 1):
+    for cut in (0, 10, 51, 59, 60, len(data) - 1):
         with pytest.raises(wire.TruncatedPayloadError):
             wire.decode_payload(data[:cut])
 
@@ -111,13 +111,26 @@ def test_wire_rejects_bad_magic_and_version():
 
 def test_wire_rejects_inconsistent_header():
     spec, data = _payload()
-    # lie about n_words (offset 40 in the 52-byte header), recomputing the
+    # lie about n_words (offset 40 in the 56-byte header), recomputing the
     # CRC so only the header consistency check can catch it
     b = bytearray(data)
     b[40:44] = struct.pack("<I", 7)
-    body = bytes(b[56:])
-    crc = zlib.crc32(body, zlib.crc32(bytes(b[:52])))
-    b[52:56] = struct.pack("<I", crc)
+    body = bytes(b[60:])
+    crc = zlib.crc32(body, zlib.crc32(bytes(b[:56])))
+    b[56:60] = struct.pack("<I", crc)
+    with pytest.raises(wire.CorruptPayloadError):
+        wire.decode_payload(bytes(b))
+
+
+def test_wire_rejects_anchored_flag_digest_mismatch():
+    """The anchored flag and the anchor digest must agree: a digest with no
+    flag (or vice versa) is a corrupt header even if the CRC is fixed up."""
+    spec, data = _payload()
+    b = bytearray(data)
+    b[52:56] = struct.pack("<I", 0xDEADBEEF)      # digest without the flag
+    body = bytes(b[60:])
+    crc = zlib.crc32(body, zlib.crc32(bytes(b[:56])))
+    b[56:60] = struct.pack("<I", crc)
     with pytest.raises(wire.CorruptPayloadError):
         wire.decode_payload(bytes(b))
 
@@ -360,12 +373,16 @@ def test_client_handles_ack_nack_reject():
     x = np.zeros(spec.d, np.float32)
     c = AggClient(spec, 9, x)
 
-    def resp(status, attempt_next=0):
+    def resp(status, attempt_next=0, nb=None):
+        nb = spec.nb if nb is None else nb
         return wire.encode_response(wire.Response(
             status=status, round_id=spec.round_id, client_id=9,
             attempt_next=attempt_next,
             q_next=wire.q_at_attempt(16, attempt_next),
-            y_next=wire.y_at_attempt(spec, attempt_next)))
+            y_next=wire.y_at_attempt(spec, attempt_next),
+            y_buckets=tuple(
+                float(v) for v in
+                wire.y_buckets_at_attempt(spec, attempt_next))[:nb]))
 
     assert c.handle_response(resp(wire.STATUS_ACK)) is None and c.acked
     c.acked = False
@@ -377,6 +394,32 @@ def test_client_handles_ack_nack_reject():
     assert not c.gave_up and c.attempt == 1
     assert c.handle_response(resp(wire.STATUS_NACK, 3)) is None  # >= max
     assert c.gave_up
+
+
+def test_client_rejects_nack_with_wrong_y_vector_length():
+    """ISSUE 4 satellite fix: a NACK whose per-bucket y vector length does
+    not match the round's nb is corrupt — the client re-sends its current
+    payload instead of truncating/broadcasting and escalating off it."""
+    spec = _spec(max_attempts=4)
+    x = np.zeros(spec.d, np.float32)
+    c = AggClient(spec, 9, x)
+    current = c.payload()
+
+    def nack(attempt_next, nb):
+        return wire.encode_response(wire.Response(
+            status=wire.STATUS_NACK, round_id=spec.round_id, client_id=9,
+            attempt_next=attempt_next,
+            q_next=wire.q_at_attempt(16, attempt_next),
+            y_next=wire.y_at_attempt(spec, attempt_next),
+            y_buckets=(1.0,) * nb))
+
+    for bad_nb in (0, spec.nb - 1, spec.nb + 3):
+        out = c.handle_response(nack(1, bad_nb))
+        assert out == current                 # retransmit, don't escalate
+        assert c.attempt == 0 and not c.gave_up
+    # a well-formed NACK still escalates
+    out = c.handle_response(nack(1, spec.nb))
+    assert out is not None and c.attempt == 1
 
 
 # ---------------------------------------------------------------------------
@@ -399,6 +442,144 @@ def test_sim_512_client_round():
     assert rep.max_err <= 2 * cfg.y0
     # wire cost: ~d/2 bytes at q=16 plus sidecar/header overhead
     assert rep.bytes_per_client < 4 * cfg.d / 7
+
+
+# ---------------------------------------------------------------------------
+# Multi-round anchored service (ISSUE 4): convergence + per-bucket y
+# ---------------------------------------------------------------------------
+
+def test_per_bucket_y_uniform_matches_scalar_y_bitwise():
+    """RoundSpec v2 with y_buckets=(y0,)*nb must produce bit-identical
+    payloads, responses and round mean as the scalar-y0 spec."""
+    base_spec = _spec(d=2048, bucket=256, y0=0.75)
+    vec_spec = dataclasses.replace(
+        base_spec, y_buckets=(0.75,) * base_spec.nb)
+    rng = np.random.RandomState(0)
+    anchor = rng.randn(base_spec.d).astype(np.float32)
+    xs = anchor[None] + 0.02 * rng.randn(12, base_spec.d).astype(np.float32)
+    p_scalar = sim.fleet_payloads(base_spec, xs)
+    p_vec = sim.fleet_payloads(vec_spec, xs)
+    assert p_scalar == p_vec
+    means = []
+    for spec, payloads in ((base_spec, p_scalar), (vec_spec, p_vec)):
+        server = AggServer(spec, anchor)
+        for p in payloads:
+            server.receive(p)
+        means.append(server.finalize()[0])
+    assert np.array_equal(means[0], means[1])
+    # the per-client protocol object agrees too
+    assert AggClient(base_spec, 3, xs[3]).payload() == \
+        AggClient(vec_spec, 3, xs[3]).payload()
+
+
+def test_server_rejects_anchor_digest_mismatch():
+    """An anchored round REJECTs payloads built against a different anchor
+    (self-consistent checksum, wrong lattice frame)."""
+    rng = np.random.RandomState(0)
+    d = 1024
+    anchor = rng.randn(d).astype(np.float32)
+    stale = anchor + 1.0
+    spec = wire.RoundSpec(round_id=3, d=d,
+                          cfg=QSyncConfig(q=16, bucket=128), y0=1.0,
+                          anchor_digest=rounds.anchor_digest(anchor))
+    stale_spec = dataclasses.replace(
+        spec, anchor_digest=rounds.anchor_digest(stale))
+    server = AggServer(spec, anchor)
+    bad = AggClient(stale_spec, 1, anchor + 0.01, anchor=stale)
+    r = wire.decode_response(server.receive(bad.payload()))
+    assert r.status == wire.STATUS_REJECT
+    assert server.stats.rejected_spec == 1
+    # constructing a client/server with the wrong anchor vector raises
+    with pytest.raises(ValueError):
+        AggClient(spec, 2, anchor + 0.01, anchor=stale)
+    with pytest.raises(ValueError):
+        AggServer(spec, stale)
+
+
+def test_multi_round_convergence_256_clients():
+    """ISSUE 4 satellite: 256 clients, 8 anchored rounds over a
+    concentrating population — per-round MSE shrinks as the tracked
+    per-bucket y tightens, and the anchor digest chain holds."""
+    cfg = sim.MultiRoundConfig(clients=256, d=1024, bucket=128, rounds=8,
+                               anchored=True, norm_scale=100.0, y0=1.0,
+                               spread0=0.3, concentrate=0.6, y_decay=0.5,
+                               drift=0.0, seed=1)
+    outs = sim.run_rounds(cfg)
+    assert len(outs) == 8
+    assert all(o.accepted == cfg.clients for o in outs)
+    # inputs concentrate => the tracked y tightens round over round once
+    # the round-1 escalation transient settles, and MSE comes down with it:
+    # strictly decreasing over the closing rounds and well below the peak
+    assert outs[-1].y_mean < 0.5 * max(o.y_mean for o in outs)
+    mses = [o.mse for o in outs]
+    assert mses[-1] < mses[-2] < mses[-3], [f"{m:.3e}" for m in mses]
+    assert mses[-1] < 0.5 * max(mses), [f"{m:.3e}" for m in mses]
+    # every anchored round pins a (changing) anchor digest
+    assert all(o.anchor_digest != 0 for o in outs)
+    assert outs[0].anchor_digest != outs[1].anchor_digest
+
+
+def test_multi_round_anchored_beats_unanchored_at_equal_bytes():
+    """The acceptance criterion's protocol-level form: over a drifting
+    large-norm population, anchored rounds achieve strictly lower MSE than
+    unanchored rounds at identical attempt-0 wire bytes."""
+    kw = dict(clients=32, d=2048, bucket=256, rounds=4, norm_scale=1e6,
+              y0=0.5, spread0=0.05, concentrate=0.7, seed=0)
+    anchored = sim.run_rounds(sim.MultiRoundConfig(anchored=True, **kw))
+    plain = sim.run_rounds(sim.MultiRoundConfig(anchored=False, **kw))
+    for a, u in zip(anchored, plain):
+        assert a.bytes_per_client == u.bytes_per_client
+        assert a.mse < u.mse, (a.round_id, a.mse, u.mse)
+
+
+def test_server_overflow_guard_unanchored_large_norm():
+    """Unanchored huge-norm rounds produce raw coords ~|x|/s; enough
+    accepted senders would wrap the int32 accumulator — the server must
+    fail loudly (pointing at anchoring) instead of silently corrupting the
+    mean.  The equivalent anchored round accumulates fine."""
+    rng = np.random.RandomState(0)
+    d, bucket, S = 512, 64, 40
+    mu = 2e6 * np.abs(rng.randn(d)).astype(np.float32) + 1e6
+    xs = mu[None] + 0.01 * rng.randn(S, d).astype(np.float32)
+    spec = wire.RoundSpec(round_id=1, d=d,
+                          cfg=QSyncConfig(q=16, bucket=bucket), y0=0.5)
+    # coords ~ |mu|/s ~ 1e6/(1/15) = 1.5e7..4.5e7; 40 senders * 4.5e7 > 2^31
+    server = AggServer(spec, mu)
+    with pytest.raises(OverflowError, match="anchor the round"):
+        for p in sim.fleet_payloads(spec, xs):
+            server.receive(p)
+        server.finalize()
+    a_spec = dataclasses.replace(spec,
+                                 anchor_digest=rounds.anchor_digest(mu))
+    a_server = AggServer(a_spec, mu)
+    for p in sim.fleet_payloads(a_spec, xs, anchor=mu):
+        a_server.receive(p)
+    mean, stats = a_server.finalize()
+    assert stats.accepted == S
+    exact = xs.astype(np.float64).mean(0)
+    assert float(np.abs(mean - exact).max()) <= 2 * spec.y0
+
+
+def test_service_anchor_chain_digests():
+    """Round k+1's spec digest == digest of round k's published mean."""
+    from repro.agg.service import AggService, ServiceConfig
+    rng = np.random.RandomState(0)
+    d = 512
+    svc = AggService(ServiceConfig(d=d, bucket=64, y0=1.0),
+                     anchor0=np.zeros(d, np.float32))
+    means = []
+    for _ in range(3):
+        spec, anchor = svc.begin_round()
+        if means:
+            assert spec.anchor_digest == rounds.anchor_digest(means[-1])
+        server = svc.make_server()
+        xs = 0.1 * rng.randn(4, d).astype(np.float32)
+        if anchor is not None:
+            xs = xs + anchor[None]
+        for i, p in enumerate(sim.fleet_payloads(spec, xs, anchor=anchor)):
+            server.receive(p)
+        mean, _ = svc.end_round(server)
+        means.append(mean)
 
 
 # ---------------------------------------------------------------------------
@@ -461,3 +642,51 @@ def test_server_mean_bit_identical_to_star_8dev():
         print("SERVER_STAR_PARITY_OK")
     """)
     assert "SERVER_STAR_PARITY_OK" in out
+
+
+def test_anchored_server_mean_bit_identical_to_anchored_star_8dev():
+    """The anchored acceptance: with the same QState anchor (round k-1's
+    mean), the v2 server's round mean equals the anchored star collective
+    bitwise — in the drifting large-norm regime where the unanchored frames
+    could not even represent the coordinates."""
+    out = _run_8dev("""
+        from functools import partial
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.qstate import QState
+        from repro.dist.collectives import (QSyncConfig,
+            allgather_allreduce_mean, flat_size_padded)
+        from repro.agg import wire, rounds
+        from repro.agg.client import AggClient
+        from repro.agg.server import AggServer
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n, bucket = 8192, 1024
+        cfg = QSyncConfig(q=16, bucket=bucket)
+        anchor = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(0), (n,)) * 1e6, np.float32)
+        spec = wire.RoundSpec(round_id=11, d=n, cfg=cfg, y0=2.0, seed=5,
+                              anchor_digest=rounds.anchor_digest(anchor))
+        xs = jnp.asarray(anchor) + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(1), (8, n))
+        nb = flat_size_padded(n, cfg) // bucket
+        qs = QState(y=jnp.full((nb,), spec.y0), anchor=jnp.asarray(anchor))
+        key = rounds.round_key(spec)
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),),
+                 out_specs=P("data"), check_vma=False)
+        def f(xl):
+            out, _ = allgather_allreduce_mean(xl.reshape(-1), qs, key,
+                                              "data", cfg)
+            return out.reshape(1, -1)
+        star = np.asarray(jax.jit(f)(xs))
+        assert np.all(star == star[0])
+        server = AggServer(spec, anchor)
+        for i in np.random.RandomState(1).permutation(8):
+            server.receive(AggClient(spec, int(i), np.asarray(xs[i]),
+                                     anchor=anchor).payload())
+        mean, stats = server.finalize()
+        assert stats.accepted == 8, stats
+        assert np.array_equal(mean, star[0])
+        print("ANCHORED_PARITY_OK")
+    """)
+    assert "ANCHORED_PARITY_OK" in out

@@ -165,15 +165,18 @@ def test_y_init_seeds_from_rotated_bound():
     y_raw = T.y_init(cfg, ctx_raw, 1.0)
     y_rot = T.y_init(cfg, ctx_rot, 1.0)
     for k, m in metas["layers"].items():
-        assert float(y_raw["layers"][k][0]) == 1.0
+        # per-bucket state seeds uniformly from the leaf bound
+        assert np.all(np.asarray(y_raw["layers"][k]) == 1.0)
         b = effective_bucket(m.numel(), ctx_rot)
         want = math.sqrt(b) * math.sqrt(2 * math.log(2 * b / 1e-3) / b)
-        np.testing.assert_allclose(float(y_rot["layers"][k][0]), want,
+        np.testing.assert_allclose(float(y_rot["layers"][k][0, 0]), want,
                                    rtol=1e-6)
-        np.testing.assert_allclose(float(y_rot["layers"][k][0]),
+        np.testing.assert_allclose(float(y_rot["layers"][k][0, 0]),
                                    leaf_y0(m, ctx_rot, 1.0), rtol=1e-6)
+        assert np.all(np.asarray(y_rot["layers"][k])
+                      == np.asarray(y_rot["layers"][k])[0, 0])
     # scales linearly with the raw guess
     y2 = T.y_init(cfg, ctx_rot, 2.0)
     k0 = sorted(metas["layers"])[0]
-    np.testing.assert_allclose(2 * float(y_rot["layers"][k0][0]),
-                               float(y2["layers"][k0][0]), rtol=1e-6)
+    np.testing.assert_allclose(2 * float(y_rot["layers"][k0][0, 0]),
+                               float(y2["layers"][k0][0, 0]), rtol=1e-6)

@@ -1,0 +1,201 @@
+"""repro.core.qstate + bucketing: the anchored-quantization state layer.
+
+Covers the ISSUE 4 tentpole invariants below the collectives:
+  * QState(anchor=0 / None, uniform y) is bit-identical to the historical
+    anchor-free kernel path (encode, decode, batched decode);
+  * the fused in-kernel anchor subtract matches the jnp oracle bitwise and
+    keeps integer coordinates ~y/s-sized in the large-norm regime;
+  * core.bucketing is the single bucket-layout definition: the collectives'
+    and the agg protocol's bucketizers are the same function (the
+    server-vs-star bit-parity acceptance depends on this);
+  * update_y's per-bucket escalate/relax dynamics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg import rounds, wire
+from repro.core import bucketing as B
+from repro.core import qstate as QS
+from repro.core.qstate import QState
+from repro.dist.collectives import (QSyncConfig, _bucketize, _unbucketize,
+                                    allgather_allreduce_mean,
+                                    butterfly_allreduce_mean,
+                                    rh_reduce_scatter_mean)
+from repro.kernels import ops as K
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# QState basics + update dynamics
+# ---------------------------------------------------------------------------
+
+def test_as_qstate_promotes_bare_y():
+    y = jnp.full((4,), 2.0)
+    qs = QS.as_qstate(y)
+    assert isinstance(qs, QState) and qs.anchor is None
+    np.testing.assert_array_equal(np.asarray(qs.y), np.asarray(y))
+    qs2 = QS.as_qstate(qs)
+    assert qs2 is qs
+
+
+def test_update_y_escalates_failed_buckets_only():
+    y = jnp.full((6,), 1.0)
+    fails = jnp.array([0.0, 2.0, 0.0, 0.0, 1.0, 0.0])
+    dist = jnp.full((6,), 0.3)
+    y2 = np.asarray(QS.update_y(y, fails, dist, decay=0.5, escalate=2.0))
+    assert y2[1] == 2.0 and y2[4] == 2.0          # escalated
+    clean = [0, 2, 3, 5]
+    # clean buckets relax toward 2.5 * dist = 0.75
+    np.testing.assert_allclose(y2[clean], 0.5 * 1.0 + 0.5 * 0.75)
+
+
+def test_update_y_shrinks_as_inputs_concentrate():
+    y = jnp.full((4,), 1.0)
+    zeros = jnp.zeros((4,))
+    for _ in range(20):
+        y = QS.update_y(y, zeros, jnp.full((4,), 0.01), decay=0.5)
+    # equilibrium: y* = 2.5 * dist once dist dominates the clip
+    np.testing.assert_allclose(np.asarray(y), 0.025, rtol=0.3)
+
+
+def test_update_y_zero_dist_is_identity():
+    y = jnp.array([0.5, 2.0])
+    y2 = QS.update_y(y, jnp.zeros(2), jnp.zeros(2))
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# One bucket-layout definition (satellite: dedup _bucketize/unbucketize)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rotate", [False, True])
+@pytest.mark.parametrize("n", [1000, 4096])
+def test_bucketize_single_definition(rotate, n):
+    """collectives._bucketize, agg.rounds.bucketize and core.bucketing
+    produce bit-identical buckets for the same (vector, diag) — the
+    server-vs-star acceptance test rests on this."""
+    bucket = 256
+    cfg = QSyncConfig(q=16, bucket=bucket, rotate=rotate)
+    spec = wire.RoundSpec(round_id=1, d=n, cfg=cfg)
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    via_collectives = _bucketize(x, cfg)
+    via_agg = rounds.bucketize(x, spec)
+    diag = rounds.rotation_diag(spec) if rotate else None
+    via_core = B.bucketize(x, bucket, diag=diag, use_kernel=cfg.packed)
+    np.testing.assert_array_equal(np.asarray(via_collectives),
+                                  np.asarray(via_agg))
+    np.testing.assert_array_equal(np.asarray(via_collectives),
+                                  np.asarray(via_core))
+    back = _unbucketize(via_collectives, n, cfg)
+    back2 = rounds.unbucketize(via_agg, spec)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(back2))
+
+
+# ---------------------------------------------------------------------------
+# Fused anchor in the kernels: zero-anchor bit-parity + oracle parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,q", [(5000, 16), (4096, 256)])
+def test_zero_anchor_is_bit_identical(n, q):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 5
+    a = x + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (n,))
+    u = jax.random.uniform(jax.random.PRNGKey(2), (n,), minval=-0.5,
+                           maxval=0.5)
+    s = jnp.full((n,), 0.05)
+    zeros = jnp.zeros((n,))
+    w_none = K.lattice_encode(x, u, s, q=q)
+    w_zero = K.lattice_encode(x, u, s, q=q, anchor=zeros)
+    np.testing.assert_array_equal(np.asarray(w_none), np.asarray(w_zero))
+    for mode in ("coords", "point"):
+        k_none = K.lattice_decode(w_none, a, u, s, q=q, mode=mode)
+        k_zero = K.lattice_decode(w_none, a, u, s, q=q, mode=mode, ref=zeros)
+        np.testing.assert_array_equal(np.asarray(k_none), np.asarray(k_zero))
+    words2 = jnp.stack([w_none, w_none])
+    kb_none = K.lattice_decode_batched(words2, a, u, s, q=q)
+    kb_zero = K.lattice_decode_batched(words2, a, u, s, q=q, ref=zeros)
+    np.testing.assert_array_equal(np.asarray(kb_none), np.asarray(kb_zero))
+
+
+def test_anchored_kernel_matches_oracle_and_bounds_coords():
+    """k = round((x - anchor)/s - u) fused in-kernel == the jnp oracle,
+    bitwise — and |k| stays ~y/s however large |x| is (the large-norm
+    regime where raw coordinates overflow the f32 mantissa)."""
+    n, q = 5000, 16
+    huge = 1e7
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 0.1 + huge
+    a = x + 0.02 * jax.random.normal(jax.random.PRNGKey(1), (n,))
+    u = jax.random.uniform(jax.random.PRNGKey(2), (n,), minval=-0.5,
+                           maxval=0.5)
+    s = jnp.full((n,), 0.05)
+    w, k = K.lattice_encode(x, u, s, q=q, anchor=a, return_coords=True)
+    wr, kr = ref.lattice_encode_ref(x, u, s, q=q, bits=4, anchor=a,
+                                    return_coords=True)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(kr))
+    assert int(jnp.max(jnp.abs(k))) < 64          # ~y/s, not ~|x|/s = 2e8
+    kd = K.lattice_decode(w, a, u, s, q=q, mode="coords", ref=a)
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(k))
+    z = K.lattice_decode(w, a, u, s, q=q, mode="point", ref=a)
+    zr = ref.lattice_decode_ref(w, a, u, s, q=q, bits=4, n=n, mode="point",
+                                ref=a)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(zr))
+    kb = K.lattice_decode_batched(w[None], a, u, s, q=q, mode="coords",
+                                  ref=a)
+    np.testing.assert_array_equal(np.asarray(kb)[0], np.asarray(k))
+
+
+# ---------------------------------------------------------------------------
+# Collectives accept QState; zero anchor == bare y, bitwise (world 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", [allgather_allreduce_mean,
+                                butterfly_allreduce_mean,
+                                rh_reduce_scatter_mean])
+def test_world1_qstate_zero_anchor_matches_bare_y(fn):
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    cfg = QSyncConfig(q=16, bucket=256)
+    n = 512
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    y_b = jnp.full((n // 256,), 1.0)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def run(state):
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P(),),
+                 out_specs=(P(), P()), check_vma=False)
+        def f(xl):
+            out, aux = fn(xl, state, jax.random.PRNGKey(7), "data", cfg)
+            return out, jnp.stack([aux.fails, aux.max_dist, aux.y_next])
+        return jax.jit(f)(x)
+
+    o_bare, t_bare = run(y_b)
+    o_zero, t_zero = run(QState(y=y_b, anchor=jnp.zeros((n,))))
+    np.testing.assert_array_equal(np.asarray(o_bare), np.asarray(o_zero))
+    np.testing.assert_array_equal(np.asarray(t_bare), np.asarray(t_zero))
+
+
+def test_rh_returns_kept_segment_y():
+    """world=1 rh: y_seg is the full per-bucket y (no halving rounds)."""
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    cfg = QSyncConfig(q=16, bucket=128)
+    n, nb = 512, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    y_b = jnp.arange(1.0, nb + 1.0)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(P(),),
+             out_specs=(P(), P(), P(), P()), check_vma=False)
+    def f(xl):
+        out, aux = rh_reduce_scatter_mean(xl, y_b, jax.random.PRNGKey(7),
+                                          "data", cfg)
+        return out, aux.y_seg, aux.fails_b, aux.dist_b
+
+    out, y_seg, fails_b, dist_b = jax.jit(f)(x)
+    np.testing.assert_array_equal(np.asarray(y_seg), np.asarray(y_b))
+    assert fails_b.shape == (nb,) and dist_b.shape == (nb,)
+    assert float(jnp.sum(fails_b)) == 0.0
