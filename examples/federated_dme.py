@@ -9,7 +9,11 @@ Demonstrates, and fails loudly if violated (this script is a CI smoke):
     the RobustAgreement escalation handshake (q <- q^2, granularity fixed);
   * the server's integer-space accumulator is bit-deterministic under
     arrival order;
-  * wire cost ~ d*log2(q)/8 bytes per client vs 4d for f32.
+  * wire cost ~ d*log2(q)/8 bytes per client vs 4d for f32;
+  * the chunked transport (ISSUE 5): one round with the MTU forcing >= 4
+    chunks per client is bit-identical to the single-frame round, and a
+    lossy round recovers dropped/corrupt chunks at exactly the lost
+    chunks' wire cost (selective retransmit, never a payload resend).
 
     PYTHONPATH=src python examples/federated_dme.py
 """
@@ -65,6 +69,43 @@ print("arrival-order bit-determinism: OK")
 if AggClient(spec, 5, xs[5]).payload() != payloads[5]:
     raise SystemExit("AggClient payload differs from the fleet encoder")
 print("client/fleet payload parity: OK")
+
+# --- chunked transport (ISSUE 5 CI smoke): mtu forces >= 4 chunks/client --
+import dataclasses
+
+from repro.agg.sim import fleet_frames, run_chunked_lossy
+
+chunked_spec = dataclasses.replace(spec, mtu=256)
+frames = fleet_frames(chunked_spec, xs)
+n_chunks = len(frames[0])
+if n_chunks < 4:
+    raise SystemExit(f"mtu=256 only produced {n_chunks} chunks/client")
+server_c = AggServer(chunked_spec, base)
+order = [(c, k) for k in range(n_chunks) for c in range(len(frames))]
+for c, k in (order[i] for i in np.random.RandomState(5).permutation(
+        len(order))):
+    server_c.receive(frames[c][k])
+mean_c, stats_c = server_c.finalize()
+if stats_c.accepted != len(frames):
+    raise SystemExit("chunked round lost clients")
+if not np.array_equal(mean_c, means[0]):
+    raise SystemExit("chunked round mean != single-frame round mean")
+hdr = stats_c.peak_unvalidated_bytes
+print(f"chunked round: {n_chunks} chunks/client (mtu=256), bit-identical "
+      f"to single-frame; peak unvalidated buffer {hdr} B "
+      f"(vs {len(payloads[5])} B monolithic)")
+from repro.core import wire_accounting as WA
+
+if hdr > WA.FRAME_HEADER_BYTES + chunked_spec.mtu:
+    raise SystemExit("transport staged more than one frame of "
+                     "unvalidated bytes")
+
+rep_l = run_chunked_lossy(clients=8, d=2048, bucket=256, mtu=512,
+                          n_drop=2, n_corrupt=1, seed=1)
+print(f"lossy chunked round: {rep_l.retransmit_bytes} B retransmitted for "
+      f"{len(rep_l.mean)}-d payloads (full resend would be "
+      f"{rep_l.full_resend_bytes} B)")
+print("chunked transport: OK")
 
 # --- anchored multi-round service (RoundSpec v2, ISSUE 4 CI smoke) --------
 # Three rounds over a drifting large-norm population: round k+1's anchor is

@@ -12,7 +12,9 @@ compares the guarded entries against the most recent committed
   * ``kernel_lattice_*`` and ``agg_*`` (the aggregation-service round /
     receive paths): fails if us_per_call regresses more than REGRESSION
     (20%) plus a small absolute slack (interpret-mode CPU timings jitter),
-    if the derived wire_compression drops, or if bytes_per_client grows.
+    if the derived wire_compression drops, or if bytes_per_client,
+    chunk_overhead_pct, peak_staging_bytes or reassembly_amplification
+    grow (the chunked-transport rows of bench_agg).
     The wall-clock gate only applies when the baseline was recorded on the
     same machine class (arch + cpu count) — absolute timings are not
     comparable across hardware; the compression/MSE/bytes gates always
@@ -159,6 +161,20 @@ def compare(entries: dict, base: dict, same_machine: bool = True
             if bb and eb and eb > bb:
                 problems.append(f"{name}: bytes_per_client {eb:.0f} grew "
                                 f"past baseline {bb:.0f}")
+            # chunked-transport rows: the header-overhead share, the
+            # transport's peak pre-CRC staging (bounded by one frame,
+            # independent of d — asserted inside bench_agg) and the
+            # reassembly-buffer amplification (1.0 = the transport holds
+            # exactly the pending payload store) must not grow
+            for k in ("chunk_overhead_pct", "peak_staging_bytes",
+                      "reassembly_amplification"):
+                bv = b.get("metrics", {}).get(k)
+                ev = e.get("metrics", {}).get(k)
+                # `is not None`, not truthiness: a 0.0 baseline (body fits
+                # one MTU) must still gate a regression to positive
+                if bv is not None and ev is not None and ev > bv:
+                    problems.append(f"{name}: {k} {ev:g} grew past "
+                                    f"baseline {bv:g}")
         if e["module"] == "bench_dme":
             for k, v in e["metrics"].items():
                 if "mse" not in k:

@@ -2,7 +2,8 @@
 # Tier-1 pre-merge gate (see README.md / ROADMAP.md; run by
 # .github/workflows/ci.yml on every push/PR):
 #
-#   1. lint (scripts/lint.sh: ruff check, format advisory);
+#   1. lint (scripts/lint.sh: ruff check; ruff format gates once the
+#      one-time --migrate-format pass is recorded in ruff.toml);
 #   2. the fast test suite (everything not marked `slow`), fail-fast —
 #      includes the 8-device packed-vs-unpacked wire parity subprocess test;
 #   3. a smoke run of the production quantized collectives on 8 emulated
@@ -11,9 +12,12 @@
 #   4. a smoke run of the federated aggregation service
 #      (examples/federated_dme.py) — a 256-client round over the repro.agg
 #      byte protocol with drops/duplicates/corruption/escalation, asserting
-#      arrival-order bit-determinism, PLUS three anchored multi-round
-#      service rounds (RoundSpec v2) asserting that round k+1's anchor
-#      digest matches round k's published mean and no clients are lost;
+#      arrival-order bit-determinism; a CHUNKED round (v3 transport, MTU
+#      forcing >= 4 chunks/client) asserting bit-identity with the
+#      single-frame round, the bounded transport staging, and the
+#      selective-retransmit wire cost of a lossy round; PLUS three anchored
+#      multi-round service rounds asserting that round k+1's anchor digest
+#      matches round k's published mean and no clients are lost;
 #   5. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
 #      kernel_lattice_* timings + bench_dme accuracy + agg_* service
 #      throughput vs the last committed BENCH_*.json baseline).

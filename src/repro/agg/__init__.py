@@ -6,44 +6,57 @@ lifts the repo's packed lattice wire format (repro.kernels lattice encode/
 decode, repro.dist.collectives payload layout) from shard_map collectives to
 an actual request/response protocol over real ``bytes``:
 
-* :mod:`repro.agg.wire`   — versioned byte-level codec (header + packed
-  uint32 words + f32 sides sidecar + coordinate checksum + CRC);
+* :mod:`repro.agg.transport` — the layered transport stack: ``frame`` (v3
+  self-describing header + per-frame CRC + the RoundSpec contract),
+  ``chunks`` (fixed-MTU splitting, idempotent chunk frames, selective
+  retransmit), ``session`` (out-of-order duplicate-tolerant reassembly with
+  transport staging bounded by one frame, independent of d);
+* :mod:`repro.agg.wire`   — back-compat facade re-exporting the frame-layer
+  API under the historical names;
 * :mod:`repro.agg.client` — encodes a local vector against a round's shared
-  randomness and handles escalation retries;
-* :mod:`repro.agg.server` — streaming accumulator: buffers arriving
-  payloads, drains them through ONE batched Pallas decode, sums in integer
-  coordinate space (bit-deterministic under any arrival order), and NACKs
-  undecodable clients with an escalated bound (RobustAgreement r <- r^2,
-  lattice granularity fixed so retried coordinates stay summable);
+  randomness, chunks it per the round MTU, and handles escalation +
+  selective-retransmit responses;
+* :mod:`repro.agg.server` — streaming accumulator: validates/reassembles
+  arriving frames, drains payloads through ONE batched Pallas decode per
+  color space, sums in integer coordinate space (bit-deterministic under
+  any arrival order), NACKs undecodable clients with an escalated bound
+  (RobustAgreement r <- r^2, lattice granularity fixed) and incomplete
+  reassemblies with their missing chunk indices;
 * :mod:`repro.agg.service` — multi-round coordinator: round k+1's anchor is
   round k's published mean (digest-pinned in the RoundSpec) and its
   per-bucket y comes from round k's decode telemetry
   (repro.core.qstate.update_y) — the anchored QState, threaded across
   rounds;
 * :mod:`repro.agg.sim`    — in-process harness driving hundreds of simulated
-  clients through a server with stragglers, drops, duplicates, corruption
-  and out-of-bound adversarial inputs; :func:`repro.agg.sim.run_rounds`
-  drives the multi-round service over a drifting large-norm population.
+  clients through a server with stragglers, drops, duplicates, corruption,
+  out-of-bound adversarial inputs and chunk-level loss
+  (:func:`repro.agg.sim.run_chunked_lossy` pins the selective-retransmit
+  wire cost byte-for-byte); :func:`repro.agg.sim.run_rounds` drives the
+  multi-round service over a drifting large-norm population.
 """
-from repro.agg.wire import (RoundSpec, Payload, Response, WireError,
-                            TruncatedPayloadError, BadMagicError,
+from repro.agg.wire import (RoundSpec, FrameHeader, Payload, Response,
+                            WireError, TruncatedPayloadError, BadMagicError,
                             VersionMismatchError, CorruptPayloadError,
                             HeaderMismatchError, encode_payload,
-                            decode_payload, encode_response, decode_response,
+                            decode_payload, encode_frame, decode_frame,
+                            encode_response, decode_response,
                             q_at_attempt, y_at_attempt, y_buckets_at_attempt,
                             payload_bytes,
                             STATUS_QUEUED, STATUS_NACK, STATUS_REJECT,
-                            STATUS_ACK)
+                            STATUS_ACK, STATUS_RESEND)
 from repro.agg.client import AggClient
 from repro.agg.server import AggServer, RoundStats
 from repro.agg.service import AggService, ServiceConfig
+from repro.agg.transport import Reassembler, ReassemblyStats
 
 __all__ = [
-    "RoundSpec", "Payload", "Response", "WireError",
+    "RoundSpec", "FrameHeader", "Payload", "Response", "WireError",
     "TruncatedPayloadError", "BadMagicError", "VersionMismatchError",
     "CorruptPayloadError", "HeaderMismatchError", "encode_payload",
-    "decode_payload", "encode_response", "decode_response", "q_at_attempt",
-    "y_at_attempt", "y_buckets_at_attempt", "payload_bytes", "AggClient",
-    "AggServer", "RoundStats", "AggService", "ServiceConfig",
-    "STATUS_QUEUED", "STATUS_NACK", "STATUS_REJECT", "STATUS_ACK",
+    "decode_payload", "encode_frame", "decode_frame", "encode_response",
+    "decode_response", "q_at_attempt", "y_at_attempt",
+    "y_buckets_at_attempt", "payload_bytes", "AggClient", "AggServer",
+    "RoundStats", "AggService", "ServiceConfig", "Reassembler",
+    "ReassemblyStats", "STATUS_QUEUED", "STATUS_NACK", "STATUS_REJECT",
+    "STATUS_ACK", "STATUS_RESEND",
 ]

@@ -1,23 +1,35 @@
-"""Client side of the aggregation protocol: encode + escalation retries.
+"""Client side of the aggregation protocol: encode, chunk, retransmit.
 
 A client holds one local vector for one round.  Encoding runs the same
 fused Pallas path as the shard_map collectives (repro.kernels.ops
 lattice_encode): bucketize (+ optional §6 HD rotation), subtract the round
-anchor *inside the kernel* when the round is anchored (RoundSpec v2:
-``anchor_digest != 0`` — the anchor is round k-1's published mean, so the
-integer coordinates stay ~y/s-sized however large the drifting mean grows),
-dither with the round's shared offset, round to integer lattice
-coordinates, pack the mod-q colors into uint32 words.  The integer
-coordinates ``k = round((x - anchor)/s_b - u)`` are *independent of the
-attempt level* — escalation only widens the color space (q <- q^2, the
-per-bucket granularity fixed), so a retry re-packs the same coordinates at
-more bits per coordinate and the §5 checksum h(k) never changes.
+anchor *inside the kernel* when the round is anchored (the anchor being
+round k-1's published mean, so the integer coordinates stay ~y/s-sized
+however large the drifting mean grows), dither with the round's shared
+offset, round to integer lattice coordinates, pack the mod-q colors into
+uint32 words.  The integer coordinates ``k = round((x - anchor)/s_b - u)``
+are *independent of the attempt level* — escalation only widens the color
+space (q <- q^2, the per-bucket granularity fixed), so a retry re-packs the
+same coordinates at more bits per coordinate and the §5 checksum h(k) never
+changes.
 
-NACK hygiene (v2): a NACK's per-bucket ``y_buckets`` must have exactly
-``spec.nb`` entries.  A length mismatch means the response was corrupted or
-belongs to a different round config — the client treats it as corrupt and
-re-sends its current-attempt payload instead of truncating or broadcasting
-the vector (which would silently desync its escalation state).
+Transport (v3): :meth:`AggClient.frames` serializes the payload through the
+chunk layer — one frame when the body fits the round's MTU (or the round is
+unchunked), else ``ceil(body/mtu)`` independently-CRC'd chunk frames.
+Frames are cached per attempt, so a retransmit re-sends byte-identical
+chunks (idempotent at the server).  :meth:`handle_response` returns the
+list of frames to send next:
+
+* ``STATUS_RESEND`` — the server's reassembly is missing specific chunks;
+  only those frames are returned (selective retransmit — a lost chunk never
+  costs the whole payload again);
+* ``STATUS_NACK`` — decode failure: escalate to the server-directed attempt
+  and return its full chunk sequence.  A NACK whose per-bucket ``y_buckets``
+  length does not match the round's ``nb`` is treated as corrupt — the
+  current-attempt frames are re-sent instead of escalating off it (which
+  would silently desync the escalation state);
+* ``STATUS_ACK`` / ``STATUS_QUEUED`` / terminal ``STATUS_REJECT`` — nothing
+  to send.
 """
 from __future__ import annotations
 
@@ -26,7 +38,9 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.agg import rounds, wire
+from repro.agg import rounds
+from repro.agg.transport import chunks as C
+from repro.agg.transport import frame as wire
 from repro.core import error_detect as ED
 from repro.core import lattice as L
 from repro.kernels import ops as K
@@ -53,11 +67,11 @@ class AggClient:
         # per-coordinate sides for the fused kernel (one s_b per bucket)
         self._s_coord = jnp.repeat(self._sides, spec.cfg.bucket)
         self._check: Optional[int] = None
+        self._frames: "dict[int, list[bytes]]" = {}
 
-    def payload(self, attempt: Optional[int] = None) -> bytes:
-        """Serialize this client's message at an escalation level."""
-        if attempt is None:
-            attempt = self.attempt
+    def _encode(self, attempt: int) -> "tuple[int, np.ndarray]":
+        """(q, packed words) at an escalation level; the §5 checksum over
+        the integer coordinates is computed once (it never changes)."""
         q = wire.q_at_attempt(self.spec.cfg.q, attempt)
         if self._check is None:
             words, k = K.lattice_encode(self._xflat, self._u, self._s_coord,
@@ -69,42 +83,65 @@ class AggClient:
             words = K.lattice_encode(self._xflat, self._u, self._s_coord,
                                      q=q, anchor=self._aflat)
         nw = L.packed_len(self.spec.padded, L.bits_for_q(q))
-        words = np.asarray(words[:nw])
-        return wire.encode_payload(self.spec, self.client_id, attempt, q,
-                                   words, np.asarray(self._sides),
-                                   self._check)
+        return q, np.asarray(words[:nw])
 
-    def handle_response(self, data: bytes) -> Optional[bytes]:
-        """Process a server response; returns the next payload to send.
+    def frames(self, attempt: Optional[int] = None) -> "list[bytes]":
+        """This client's chunk-frame sequence at an escalation level
+        (cached: a retransmit is byte-identical)."""
+        if attempt is None:
+            attempt = self.attempt
+        cached = self._frames.get(attempt)
+        if cached is None:
+            q, words = self._encode(attempt)
+            cached = C.encode_chunks(self.spec, self.client_id, attempt, q,
+                                     words, np.asarray(self._sides),
+                                     self._check)
+            self._frames[attempt] = cached
+        return list(cached)
 
-        Returns None when no further send is needed (ACK/QUEUED, terminal
-        REJECT, or escalation exhausted — ``gave_up`` is set in the latter
-        two cases).  A NACK directing escalation returns the re-encoded
-        payload at the server-directed attempt; a NACK whose per-bucket y
-        vector does not match the round's bucket count is treated as
-        corrupt: the current-attempt payload is re-sent unchanged.
-        """
+    def payload(self, attempt: Optional[int] = None) -> bytes:
+        """The single-frame serialization (unchunked rounds, and chunked
+        rounds whose body fits one MTU)."""
+        frames = self.frames(attempt)
+        if len(frames) != 1:
+            raise ValueError(
+                f"payload spans {len(frames)} chunks at mtu "
+                f"{self.spec.mtu}; use frames()")
+        return frames[0]
+
+    def handle_response(self, data: bytes) -> "list[bytes]":
+        """Process a server response; returns the frames to send next.
+
+        Empty when no further send is needed (ACK/QUEUED, terminal REJECT,
+        or escalation exhausted — ``gave_up`` is set in the latter two
+        cases)."""
         r = wire.decode_response(data)
         if r.client_id != self.client_id or r.round_id != self.spec.round_id:
-            return None
+            return []
         if r.status in (wire.STATUS_ACK, wire.STATUS_QUEUED):
-            self.acked = r.status == wire.STATUS_ACK
-            return None
+            # set on ACK only — a reordered/late chunk QUEUED must never
+            # clear an ACK verdict (it would re-arm the late-NACK guard)
+            self.acked = self.acked or r.status == wire.STATUS_ACK
+            return []
         if r.status == wire.STATUS_REJECT:
             self.gave_up = True
-            return None
+            return []
+        if self.acked or self.gave_up:
+            return []                      # late NACK/RESEND after a verdict
+        if r.status == wire.STATUS_RESEND:
+            if r.attempt_next != self.attempt:
+                return []                  # stale: that attempt is gone
+            return C.select(self.frames(self.attempt), r.missing)
         # NACK: escalate to the server-directed attempt (RobustAgreement:
         # the color space squares, the per-bucket granularity stays fixed)
-        if self.acked or self.gave_up:
-            return None                    # late NACK after a verdict
         if len(r.y_buckets) != self.spec.nb:
             # corrupt/foreign NACK (wrong per-bucket margin count): do not
             # escalate off it — retransmit and let the server re-judge
-            return self.payload(self.attempt)
+            return self.frames(self.attempt)
         if r.attempt_next >= self.spec.max_attempts:
             self.gave_up = True
-            return None
+            return []
         if r.attempt_next <= self.attempt:
-            return None                    # duplicate/stale NACK: the retry
+            return []                      # duplicate/stale NACK: the retry
         self.attempt = r.attempt_next      # it asks for is already in flight
-        return self.payload(self.attempt)
+        return self.frames(self.attempt)

@@ -1,10 +1,23 @@
 """Server side: streaming integer-space accumulator + batched drain.
 
-Arrival path (:meth:`AggServer.receive`): parse/validate the payload bytes
-(framing errors and spec mismatches are counted and REJECTed — including
-truncated, corrupt, version-mismatched and anchor-digest-mismatched
-messages), dedupe by client id, and buffer the *packed words* — the
-8x-compressed form — until a drain.
+Arrival path (:meth:`AggServer.receive`): parse/validate one transport
+frame (framing errors and spec mismatches are counted and REJECTed —
+including truncated, corrupt, version-mismatched, anchor-digest-mismatched
+and MTU-geometry-violating frames), dedupe by client id, and route it by
+its chunk coordinates: a single-frame payload is buffered directly, a chunk
+of a larger payload goes through the transport session layer
+(:class:`repro.agg.transport.session.Reassembler`) — out-of-order and
+duplicate tolerant, committing each validated chunk in place so the
+transport never stages more than one frame (header + MTU) of unvalidated
+bytes, independent of d.  Either way the server buffers the *packed words*
+— the 8x-compressed form — until a drain; a completed reassembly hands the
+drain the same zero-copy Payload view a single frame would have.
+
+Chunked rounds add one response status: a drain that finds a client's
+reassembly still incomplete emits ``STATUS_RESEND`` naming exactly the
+missing chunk indices, so a lost or corrupt chunk costs one chunk frame on
+the retransmit wire — never the payload (asserted byte-for-byte in
+``repro.agg.sim.run_chunked_lossy``).
 
 Drain path (:meth:`AggServer.drain`): all pending payloads of one color
 space q are decoded against the server's decode reference in ONE batched
@@ -52,7 +65,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.agg import rounds, wire
+from repro.agg import rounds
+from repro.agg.transport import frame as wire
+from repro.agg.transport import session as S
 from repro.core import error_detect as ED
 from repro.kernels import ops as K
 from repro.kernels.lattice_decode import DEFAULT_BLOCK_SENDERS
@@ -71,17 +86,27 @@ class RoundStats:
     rejected_spec: int = 0       # well-formed but wrong round/config/anchor
     decode_failures: int = 0     # §5 checksum detections across all drains
     nacks_sent: int = 0
+    resends_sent: int = 0        # chunk-level RESEND responses (v3)
     gave_up: int = 0             # clients dropped after escalation exhausted
     drains: int = 0
     bytes_in: int = 0
     bytes_out: int = 0
+    peak_unvalidated_bytes: int = 0   # largest frame staged before its CRC
     max_dist: float = 0.0        # max |decoded - ref|_inf over accepts
     dist_b: Optional[np.ndarray] = None    # (nb,) per-bucket max distance
     fails_b: Optional[np.ndarray] = None   # (nb,) per-bucket failure counts
 
 
-def _reject(spec: wire.RoundSpec, client_id: int) -> wire.Response:
-    return wire.Response(status=wire.STATUS_REJECT, round_id=spec.round_id,
+def _reject(spec: wire.RoundSpec, client_id: int,
+            round_id: "int | None" = None) -> wire.Response:
+    """``round_id`` defaults to the server's round; spec-mismatch rejects
+    echo the offending frame's round instead, so a REJECT provoked by a
+    delayed previous-round frame is ignored by the same client's
+    current-round protocol object (round_id filter) rather than read as a
+    terminal verdict on the live round."""
+    return wire.Response(status=wire.STATUS_REJECT,
+                         round_id=spec.round_id if round_id is None
+                         else round_id,
                          client_id=client_id, attempt_next=0, q_next=0,
                          y_next=0.0)
 
@@ -164,6 +189,7 @@ class AggServer:
         self._weights = rounds.checksum_weights(spec)     # (padded,)
         self._sides = rounds.sides(spec)                  # (nb,)
         self._pending: dict[int, wire.Payload] = {}
+        self._rx = S.Reassembler(spec)      # chunked-payload session layer
         self._accepted: set[int] = set()
         self._gave_up: set[int] = set()
         self._ksum = jnp.zeros((spec.nb, spec.cfg.bucket), jnp.int32)
@@ -185,37 +211,78 @@ class AggServer:
 
     # ------------------------------------------------------------------ RX
     def receive(self, data: bytes) -> bytes:
-        """Handle one arriving message; returns the response bytes."""
+        """Handle one arriving frame; returns the response bytes."""
         self.stats.received += 1
         self.stats.bytes_in += len(data)
+        # the only bytes ever held before a CRC has vouched for them: this
+        # one frame (<= header + MTU in a chunked round, whatever the d)
+        self.stats.peak_unvalidated_bytes = max(
+            self.stats.peak_unvalidated_bytes, len(data))
         try:
-            p = wire.decode_payload(data)
+            h, chunk = wire.decode_frame(data)
         except wire.WireError:
             self.stats.rejected_wire += 1
             return self._respond(_reject(self.spec, 0xFFFFFFFF))
         try:
-            wire.check_against_spec(p, self.spec)
+            wire.check_frame_against_spec(h, self.spec, len(chunk))
         except wire.HeaderMismatchError:
             self.stats.rejected_spec += 1
-            return self._respond(_reject(self.spec, p.client_id))
-        if p.client_id in self._gave_up:
-            return self._respond(_reject(self.spec, p.client_id))
-        if p.client_id in self._accepted:
+            return self._respond(_reject(self.spec, h.client_id,
+                                         round_id=h.round_id))
+        if h.client_id in self._gave_up:
+            return self._respond(_reject(self.spec, h.client_id))
+        if h.client_id in self._accepted:
             # duplicate delivery of an already-accumulated client: ACK
             # idempotently, never double-count
             self.stats.duplicates += 1
-            return self._respond(self._ack(p.client_id))
+            return self._respond(self._ack(h.client_id))
+        if h.n_chunks == 1:
+            p = wire.payload_from_body(h, chunk)
+        else:
+            event, p = self._rx.add(h, chunk)
+            if event == S.REJECT:
+                # the reassembled body failed its payload-CRC seal (a
+                # forged chunk shared the stream's header): the stream is
+                # dropped but the verdict is NOT terminal — direct a full
+                # rebuild; a REJECT would flip the honest client to gave_up
+                self.stats.resends_sent += 1
+                return self._respond(wire.Response(
+                    status=wire.STATUS_RESEND,
+                    round_id=self.spec.round_id, client_id=h.client_id,
+                    attempt_next=h.attempt, q_next=h.q,
+                    y_next=wire.y_at_attempt(self.spec, h.attempt),
+                    missing=tuple(range(h.n_chunks))))
+            if p is None:                   # PROGRESS / DUPLICATE / STALE
+                if event in (S.DUPLICATE, S.STALE):
+                    self.stats.duplicates += 1
+                # slim ack: mid-reassembly nobody consumes the per-bucket
+                # margins or a missing list, so don't pay O(nb + n_chunks)
+                # response bytes per chunk
+                return self._respond(self._queued(h, slim=True))
+        try:
+            # body-level spec check only — every header field was already
+            # validated per frame by check_frame_against_spec
+            wire.check_sides_against_spec(p, self.spec)
+        except wire.HeaderMismatchError:
+            self.stats.rejected_spec += 1
+            return self._respond(_reject(self.spec, p.client_id))
         prev = self._pending.get(p.client_id)
         if prev is not None and prev.attempt >= p.attempt:
             self.stats.duplicates += 1
         else:
             self._pending[p.client_id] = p
             self.stats.queued += 1
-        return self._respond(wire.Response(
+        return self._respond(self._queued(h))
+
+    def _queued(self, h: wire.FrameHeader,
+                slim: bool = False) -> wire.Response:
+        # no `missing` list here: only STATUS_RESEND consumes it, and
+        # including it per chunk ack would cost O(n_chunks^2) per client
+        return wire.Response(
             status=wire.STATUS_QUEUED, round_id=self.spec.round_id,
-            client_id=p.client_id, attempt_next=p.attempt, q_next=p.q,
-            y_next=wire.y_at_attempt(self.spec, p.attempt),
-            y_buckets=self._margin_tuple(p.attempt)))
+            client_id=h.client_id, attempt_next=h.attempt, q_next=h.q,
+            y_next=wire.y_at_attempt(self.spec, h.attempt),
+            y_buckets=() if slim else self._margin_tuple(h.attempt))
 
     def _ack(self, client_id: int) -> wire.Response:
         return wire.Response(status=wire.STATUS_ACK,
@@ -234,6 +301,11 @@ class AggServer:
         return len(self._pending)
 
     @property
+    def transport_stats(self) -> S.ReassemblyStats:
+        """The session layer's reassembly telemetry (chunked rounds)."""
+        return self._rx.stats
+
+    @property
     def accepted_clients(self) -> frozenset:
         return frozenset(self._accepted)
 
@@ -245,7 +317,7 @@ class AggServer:
         case — drains in exactly one launch).
         """
         if not self._pending:
-            return []
+            return self._resend_requests()
         self.stats.drains += 1
         by_q: dict[int, list[wire.Payload]] = {}
         for p in self._pending.values():
@@ -297,12 +369,14 @@ class AggServer:
             for p, good in zip(plist, ok):
                 if good:
                     self._accepted.add(p.client_id)
+                    self._rx.discard(p.client_id)   # stale chunk sessions
                     responses.append(self._respond(self._ack(p.client_id)))
                     continue
                 self.stats.decode_failures += 1
                 nxt = p.attempt + 1
                 if p.q >= wire.Q_CAP or nxt >= self.spec.max_attempts:
                     self._gave_up.add(p.client_id)
+                    self._rx.discard(p.client_id)
                     self.stats.gave_up += 1
                     responses.append(
                         self._respond(_reject(self.spec, p.client_id)))
@@ -314,7 +388,22 @@ class AggServer:
                     q_next=wire.q_at_attempt(self.spec.cfg.q, nxt),
                     y_next=wire.y_at_attempt(self.spec, nxt),
                     y_buckets=self._margin_tuple(nxt))))
-        return responses
+        return responses + self._resend_requests()
+
+    def _resend_requests(self) -> list[bytes]:
+        """Chunk-level NACKs for every still-incomplete reassembly: each
+        names exactly the missing chunk indices, so the retransmit wire
+        cost is per lost chunk, never per payload."""
+        out = []
+        for cid, (attempt, missing) in self._rx.incomplete().items():
+            self.stats.resends_sent += 1
+            out.append(self._respond(wire.Response(
+                status=wire.STATUS_RESEND, round_id=self.spec.round_id,
+                client_id=cid, attempt_next=attempt,
+                q_next=wire.q_at_attempt(self.spec.cfg.q, attempt),
+                y_next=wire.y_at_attempt(self.spec, attempt),
+                y_buckets=self._margin_tuple(attempt), missing=missing)))
+        return out
 
     # ------------------------------------------------------------ FINALIZE
     def finalize(self) -> tuple[np.ndarray, RoundStats]:

@@ -51,6 +51,8 @@ class ServiceConfig:
     max_attempts: int = 4
     anchored: bool = True       # False: every round keeps the zero anchor
                                 # (the historical raw-input protocol)
+    mtu: int = 0                # transport chunk size in bytes (0: one
+                                # frame per payload; see agg.transport)
     y_decay: float = 0.75       # per-round relaxation toward measured dist
     y_escalate: float = 2.0     # per-bucket escalation on decode failure
     y_floor: float = 1e-6
@@ -95,7 +97,7 @@ class AggService:
             y0=float(self.y.max()), seed=self.cfg.seed,
             max_attempts=self.cfg.max_attempts,
             y_buckets=tuple(float(v) for v in self.y),
-            anchor_digest=digest)
+            anchor_digest=digest, mtu=self.cfg.mtu)
         return self._spec, (self.anchor if digest else None)
 
     def make_server(self) -> AggServer:

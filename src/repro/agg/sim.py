@@ -16,7 +16,13 @@ failure modes a deployment sees:
 * **out-of-bound adversarial inputs** — vectors violating the round's
   distance bound; detected by the §5 coordinate checksum
   (repro.core.error_detect) and recovered through the r <- r^2 escalation
-  handshake, or dropped when even the q-cap margin cannot cover them.
+  handshake, or dropped when even the q-cap margin cannot cover them;
+* **chunked transport** (``SimConfig.mtu > 0``) — every payload is split
+  into MTU-sized chunk frames delivered interleaved across clients; the
+  server reassembles out of order and the round mean is bit-identical to
+  the single-frame round.  :func:`run_chunked_lossy` drops/corrupts
+  individual chunks and asserts the wire-byte delta of recovery is exactly
+  the lost chunks' frames — selective retransmit, never a payload resend.
 
 The attempt-0 fleet is encoded in ONE fused kernel launch
 (:func:`fleet_payloads` stacks all clients into a single flat vector), so a
@@ -31,10 +37,12 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.agg import rounds, wire
+from repro.agg import rounds
 from repro.agg.client import AggClient
 from repro.agg.server import AggServer, RoundStats
 from repro.agg.service import AggService, ServiceConfig
+from repro.agg.transport import chunks as C
+from repro.agg.transport import frame as wire
 from repro.core import error_detect as ED
 from repro.core import lattice as L
 from repro.core import rotation as R
@@ -62,12 +70,14 @@ class SimConfig:
     max_attempts: int = 4
     seed: int = 0
     round_id: int = 1
+    mtu: int = 0               # chunked transport when > 0 (bytes per chunk)
 
     def spec(self) -> wire.RoundSpec:
         return wire.RoundSpec(
             round_id=self.round_id, d=self.d,
             cfg=QSyncConfig(q=self.q, bucket=self.bucket, rotate=self.rotate),
-            y0=self.y0, seed=self.seed, max_attempts=self.max_attempts)
+            y0=self.y0, seed=self.seed, max_attempts=self.max_attempts,
+            mtu=self.mtu)
 
 
 @dataclasses.dataclass
@@ -83,14 +93,15 @@ class SimReport:
     bytes_per_client: float       # attempt-0 payload size incl. header
 
 
-def fleet_payloads(spec: wire.RoundSpec, xs: np.ndarray,
-                   anchor=None) -> list[bytes]:
-    """Encode all S clients' attempt-0 payloads in one fused kernel launch.
+def fleet_encode(spec: wire.RoundSpec, xs: np.ndarray, anchor=None
+                 ) -> "tuple[np.ndarray, np.ndarray, np.ndarray]":
+    """Encode all S clients' attempt-0 bodies in one fused kernel launch.
 
     Stacks the bucketized fleet into a single flat vector (per-client word
     segments stay uint32-aligned because padded d is a multiple of the
     bucket size), encodes once — with the round anchor subtracted in-kernel
-    for anchored rounds — and splits words/checksums per client.
+    for anchored rounds — and splits words/checksums per client.  Returns
+    (words (S, nw) uint32, sides (nb,) f32, checks (S,) uint32).
     """
     rounds.check_anchor(spec, anchor)
     S = xs.shape[0]
@@ -116,9 +127,32 @@ def fleet_payloads(spec: wire.RoundSpec, xs: np.ndarray,
     weights = rounds.checksum_weights(spec)
     checks = np.asarray(ED.coord_checksum(k.reshape(S, spec.padded),
                                           weights, axis=-1))
-    sides_np = np.asarray(sides)
+    return words, np.asarray(sides), checks
+
+
+def fleet_frames(spec: wire.RoundSpec, xs: np.ndarray,
+                 anchor=None) -> "list[list[bytes]]":
+    """Every client's attempt-0 chunk-frame sequence (one frame per client
+    when the round is unchunked), bit-identical to AggClient.frames()."""
+    words, sides_np, checks = fleet_encode(spec, xs, anchor)
+    return [C.encode_chunks(spec, i, 0, spec.cfg.q, words[i], sides_np,
+                            int(checks[i])) for i in range(xs.shape[0])]
+
+
+def fleet_payloads(spec: wire.RoundSpec, xs: np.ndarray,
+                   anchor=None) -> list[bytes]:
+    """Single-frame attempt-0 payloads (rounds whose body fits one frame).
+
+    Refuses a spec whose MTU chunks the payload — a single frame would be
+    silently REJECTed by every server (n_chunks mismatch); use
+    :func:`fleet_frames`."""
+    if spec.n_chunks() != 1:
+        raise ValueError(
+            f"spec chunks payloads into {spec.n_chunks()} frames at mtu "
+            f"{spec.mtu}; use fleet_frames()")
+    words, sides_np, checks = fleet_encode(spec, xs, anchor)
     return [wire.encode_payload(spec, i, 0, spec.cfg.q, words[i], sides_np,
-                                int(checks[i])) for i in range(S)]
+                                int(checks[i])) for i in range(xs.shape[0])]
 
 
 def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
@@ -140,7 +174,7 @@ def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
         xs[i] += 1e6 * cfg.y0 * rng.choice([-1.0, 1.0], d).astype(np.float32)
 
     server = AggServer(spec, base)
-    payloads = fleet_payloads(spec, xs)
+    frames = fleet_frames(spec, xs)
 
     # delivery plan: drops / stragglers / duplicates over the benign fleet
     benign = [i for i in range(S) if i not in set(adv + extreme)]
@@ -155,6 +189,21 @@ def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
     dup = rng.choice(wave1, size=int(round(cfg.duplicate * S)),
                      replace=False) if wave1 else []
 
+    def deliver(clients) -> None:
+        """Chunk-interleaved delivery: chunk k of every client goes out
+        before chunk k+1 of any (the arrival pattern a real fan-in sees);
+        unchunked rounds degenerate to one frame per client."""
+        k = 0
+        while True:
+            sent = False
+            for i in clients:
+                if k < len(frames[i]):
+                    server.receive(frames[i][k])
+                    sent = True
+            if not sent:
+                return
+            k += 1
+
     def damaged(data: bytes, kind: str) -> bytes:
         if kind == "corrupt":
             b = bytearray(data)
@@ -162,13 +211,15 @@ def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
             return bytes(b)
         return data[: rng.randint(8, len(data) - 1)]
 
+    def any_frame(i: int) -> bytes:
+        return frames[i][rng.randint(len(frames[i]))]
+
     # wave 1: the bulk of the fleet, shuffled, plus damaged frames
-    for i in wave1:
-        server.receive(payloads[i])
+    deliver(wave1)
     for _ in range(cfg.corrupt):
-        server.receive(damaged(payloads[rng.choice(wave1)], "corrupt"))
+        server.receive(damaged(any_frame(rng.choice(wave1)), "corrupt"))
     for _ in range(cfg.truncate):
-        server.receive(damaged(payloads[rng.choice(wave1)], "truncate"))
+        server.receive(damaged(any_frame(rng.choice(wave1)), "truncate"))
 
     retry_clients: dict[int, AggClient] = {}
     escalated: set[int] = set()
@@ -177,22 +228,21 @@ def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
         out = []
         for rb in responses:
             r = wire.decode_response(rb)
-            if r.status != wire.STATUS_NACK:
+            if r.status not in (wire.STATUS_NACK, wire.STATUS_RESEND):
                 continue
             c = retry_clients.setdefault(
                 r.client_id, AggClient(spec, r.client_id, xs[r.client_id]))
-            escalated.add(r.client_id)
-            p = c.handle_response(rb)
-            if p is not None:
-                out.append(p)
+            if r.status == wire.STATUS_NACK:
+                escalated.add(r.client_id)
+            out.extend(c.handle_response(rb))
         return out
 
     retries = route(server.drain())
     # wave 2: stragglers, duplicates and first-round escalation retries
-    for i in stragglers:
-        server.receive(payloads[i])
+    deliver(stragglers)
     for i in dup:
-        server.receive(payloads[i])
+        for f in frames[i]:
+            server.receive(f)
     for p in retries:
         server.receive(p)
     retries = route(server.drain())
@@ -213,6 +263,120 @@ def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
         dropped_clients=frozenset(set(range(S)) - set(acc)),
         drains=stats.drains,
         bytes_per_client=float(wire.payload_bytes(spec)))
+
+
+# ---------------------------------------------------------------------------
+# Lossy chunked transport: selective retransmit, byte-for-byte
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LossyReport:
+    """Wire accounting of a chunked round that lost/corrupted chunks."""
+    n_chunks_per_client: int
+    bytes_clean: int           # client->server bytes of the lossless round
+    bytes_total: int           # ... of the lossy round incl. retransmits
+    retransmit_bytes: int      # RESEND-directed chunk frames only
+    lost_frame_bytes: int      # the frames that were dropped/corrupted
+    full_resend_bytes: int     # what v2 would have paid (whole payloads)
+    mean: np.ndarray
+    mean_clean: np.ndarray
+    stats: RoundStats
+
+
+def run_chunked_lossy(clients: int = 8, d: int = 4096, bucket: int = 512,
+                      mtu: int = 512, n_drop: int = 2, n_corrupt: int = 1,
+                      seed: int = 0) -> LossyReport:
+    """One chunked round where individual chunks are dropped or corrupted.
+
+    Asserts the tentpole's retransmit-cost contract: recovery costs exactly
+    the lost chunks' frames on the wire (per-chunk NACK + selective
+    retransmit) — never a full-payload resend — and the recovered round
+    mean is bit-identical to the lossless round's.
+    """
+    rng = np.random.RandomState(seed)
+    spec = wire.RoundSpec(round_id=1, d=d,
+                          cfg=QSyncConfig(q=16, bucket=bucket), y0=0.5,
+                          seed=seed, mtu=mtu)
+    base = rng.randn(d).astype(np.float32)
+    xs = base[None] + 0.02 * rng.randn(clients, d).astype(np.float32)
+    frames = fleet_frames(spec, xs)
+    nc = len(frames[0])
+    assert nc >= 2, f"mtu {mtu} does not chunk a {spec.body_bytes()}B body"
+    bytes_clean = sum(len(f) for fs in frames for f in fs)
+
+    # the reference lossless round
+    ref = AggServer(spec, base)
+    for fs in frames:
+        for f in fs:
+            ref.receive(f)
+    mean_clean, _ = ref.finalize()
+
+    # loss plan: distinct (client, chunk) victims; corrupt frames are
+    # delivered damaged (same length), dropped frames never arrive
+    victims = [(int(c), int(k)) for c, k in
+               zip(rng.choice(clients, n_drop + n_corrupt, replace=False),
+                   rng.randint(0, nc, n_drop + n_corrupt))]
+    drop, corrupt = set(victims[:n_drop]), set(victims[n_drop:])
+    lost_frame_bytes = sum(len(frames[c][k]) for c, k in drop | corrupt)
+
+    server = AggServer(spec, base)
+    bytes_total = 0
+    for k in range(nc):                     # chunk-interleaved fan-in
+        for c in range(clients):
+            f = frames[c][k]
+            if (c, k) in drop:
+                continue
+            if (c, k) in corrupt:
+                b = bytearray(f)
+                b[rng.randint(len(b))] ^= 0xFF
+                f = bytes(b)
+            bytes_total += len(f)
+            server.receive(f)
+
+    # drain: complete clients decode; incomplete ones get chunk NACKs
+    # naming exactly the missing indices
+    retransmit_bytes = 0
+    clients_obj: dict[int, AggClient] = {}
+    resps = server.drain()
+    while True:
+        resend = []
+        for rb in resps:
+            r = wire.decode_response(rb)
+            if r.status != wire.STATUS_RESEND:
+                continue
+            c = clients_obj.setdefault(
+                r.client_id, AggClient(spec, r.client_id, xs[r.client_id]))
+            out = c.handle_response(rb)
+            assert [wire.decode_frame(f)[0].chunk_index for f in out] == \
+                list(r.missing), "retransmit is not the missing set"
+            resend.extend(out)
+        if not resend:
+            break
+        for f in resend:
+            retransmit_bytes += len(f)
+            bytes_total += len(f)
+            server.receive(f)
+        resps = server.drain()
+
+    mean, stats = server.finalize()
+    affected = {c for c, _ in drop | corrupt}
+    full_resend_bytes = len(affected) * sum(len(f) for f in frames[0])
+    rep = LossyReport(
+        n_chunks_per_client=nc, bytes_clean=bytes_clean,
+        bytes_total=bytes_total, retransmit_bytes=retransmit_bytes,
+        lost_frame_bytes=lost_frame_bytes,
+        full_resend_bytes=full_resend_bytes, mean=mean,
+        mean_clean=mean_clean, stats=stats)
+    # the wire-byte contract: what recovery cost is exactly the lost
+    # chunks' frames — and strictly less than v2's whole-payload resends
+    assert rep.retransmit_bytes == rep.lost_frame_bytes, rep
+    dropped_bytes = sum(len(frames[c][k]) for c, k in drop)
+    assert rep.bytes_total == \
+        rep.bytes_clean - dropped_bytes + rep.retransmit_bytes, rep
+    assert rep.retransmit_bytes < rep.full_resend_bytes, rep
+    assert stats.accepted == clients, stats
+    assert np.array_equal(rep.mean, rep.mean_clean), "chunked != lossless"
+    return rep
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +406,7 @@ class MultiRoundConfig:
     spread0: float = 0.05      # round-0 client noise around the mean
     concentrate: float = 0.7   # spread multiplier per round (< 1: converge)
     anchored: bool = True
+    mtu: int = 0               # chunked transport when > 0 (bytes per chunk)
     y_decay: float = 0.75
     seed: int = 0
 
@@ -275,7 +440,8 @@ def run_rounds(cfg: MultiRoundConfig = MultiRoundConfig()
     anchor0 = mu + (cfg.y0 / 4) * rng.randn(cfg.d).astype(np.float32)
     svc = AggService(ServiceConfig(
         d=cfg.d, q=cfg.q, bucket=cfg.bucket, y0=cfg.y0, seed=cfg.seed,
-        anchored=cfg.anchored, y_decay=cfg.y_decay), anchor0=anchor0)
+        anchored=cfg.anchored, mtu=cfg.mtu, y_decay=cfg.y_decay),
+        anchor0=anchor0)
     outcomes = []
     spread = cfg.spread0
     for _ in range(cfg.rounds):
@@ -285,9 +451,10 @@ def run_rounds(cfg: MultiRoundConfig = MultiRoundConfig()
         spec, anchor = svc.begin_round()
         y_mean = float(np.mean(spec.y_np()))
         server = svc.make_server()
-        payloads = fleet_payloads(spec, xs, anchor=anchor)
+        frames = fleet_frames(spec, xs, anchor=anchor)
         for i in rng.permutation(cfg.clients):
-            server.receive(payloads[i])
+            for f in frames[i]:
+                server.receive(f)
         # escalation ladder: route NACKs through the per-client protocol
         # object (q <- q^2, per-bucket granularity fixed) until quiescent
         retry_clients: dict[int, AggClient] = {}
@@ -296,15 +463,13 @@ def run_rounds(cfg: MultiRoundConfig = MultiRoundConfig()
             retries = []
             for rb in resps:
                 r = wire.decode_response(rb)
-                if r.status != wire.STATUS_NACK:
+                if r.status not in (wire.STATUS_NACK, wire.STATUS_RESEND):
                     continue
                 c = retry_clients.setdefault(
                     r.client_id,
                     AggClient(spec, r.client_id, xs[r.client_id],
                               anchor=anchor))
-                p = c.handle_response(rb)
-                if p is not None:
-                    retries.append(p)
+                retries.extend(c.handle_response(rb))
             if not retries:
                 break
             for p in retries:

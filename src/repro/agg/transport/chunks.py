@@ -1,0 +1,66 @@
+"""Chunk layer: fixed-MTU splitting of a packed payload body into frames.
+
+A payload body larger than the round's MTU is split into
+``ceil(body/mtu)`` chunks; every chunk except the last carries exactly
+``mtu`` bytes, so chunk k always covers ``body[k*mtu : k*mtu + mtu]`` and a
+receiver can place any chunk without having seen the others.  Each chunk is
+wrapped in its own self-describing v3 frame (full header + per-frame CRC):
+independently validatable, idempotently re-sendable, and individually
+retransmittable — a corrupt or dropped byte costs ONE chunk frame on the
+wire, never the payload (the server's STATUS_RESEND response names exactly
+the missing chunk indices; see :mod:`repro.agg.transport.session`).
+
+The byte geometry (chunk count, spans, per-frame overhead) delegates to
+:mod:`repro.core.wire_accounting`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+from repro.agg.transport import frame as F
+from repro.core import wire_accounting as WA
+
+
+def chunk_frames(h0: F.FrameHeader, body: bytes, mtu: int) -> "list[bytes]":
+    """Frame a complete body as its chunk sequence under an MTU.
+
+    ``h0`` supplies the payload-level header fields; n_chunks, chunk_index
+    and payload_crc are (re)derived here so the chunk coordinates can never
+    disagree with the body actually framed.
+    """
+    nc = WA.n_chunks(len(body), mtu)
+    pcrc = zlib.crc32(body)
+    frames = []
+    for i in range(nc):
+        off, ln = WA.chunk_span(len(body), mtu, i)
+        h = dataclasses.replace(h0, n_chunks=nc, chunk_index=i,
+                                payload_crc=pcrc)
+        frames.append(F.encode_frame(h, body[off:off + ln]))
+    return frames
+
+
+def encode_chunks(spec: F.RoundSpec, client_id: int, attempt: int, q: int,
+                  words: np.ndarray, sides: np.ndarray,
+                  check: int) -> "list[bytes]":
+    """Serialize one client message as its chunk-frame sequence (one frame
+    when the body fits the MTU or the round is unchunked — in which case
+    the single frame is byte-identical to :func:`frame.encode_payload`,
+    whose header builder this delegates to)."""
+    h0, body = F.build_payload(spec, client_id, attempt, q, words, sides,
+                               check)
+    return chunk_frames(h0, body, spec.mtu)
+
+
+def select(frames: "list[bytes]", missing: "tuple[int, ...]"
+           ) -> "list[bytes]":
+    """The selective-retransmit set: only the frames a STATUS_RESEND names.
+
+    Out-of-range indices mean the response is corrupt or belongs to a
+    different attempt's geometry — fall back to re-sending everything
+    (idempotent, so over-sending is safe; under-sending would deadlock)."""
+    if not missing or any(i >= len(frames) for i in missing):
+        return list(frames)
+    return [frames[i] for i in missing]

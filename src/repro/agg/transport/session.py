@@ -1,0 +1,208 @@
+"""Session layer: out-of-order, duplicate-tolerant chunk reassembly.
+
+One :class:`Reassembler` serves one round.  Within a client, concurrent
+chunk streams are keyed by ``(attempt, payload_crc)`` — every frame of one
+payload carries the same body seal, so chunks of different payloads can
+NEVER be spliced together, and a forged or cross-wired frame for a client
+id opens (at worst) its own doomed sub-session instead of capturing the
+honest client's: first-writer-wins livelock is structurally impossible.
+At most :data:`MAX_SESSIONS_PER_CLIENT` sub-sessions are kept per client
+(the honest stream plus one interloper); beyond that the least-complete,
+oldest stream is evicted — an evicted honest stream rebuilds through the
+drain's RESEND retransmits, which always follow the client's
+most-complete open stream.
+
+Each CRC-validated chunk is committed *in place* into its stream's
+preallocated body buffer (chunk k always lives at ``k * mtu``), so the
+transport keeps NO reorder stash: the only bytes ever staged before
+validation are the single frame currently being processed (<= frame header
++ MTU), independent of the vector length d.  The body buffer itself is not
+transport overhead — it is byte-for-byte the packed payload the server
+must hold for the batched drain anyway (the completed
+:class:`~repro.agg.transport.frame.Payload` views the same buffer,
+zero-copy), exactly like the v2 single-frame pending store; under
+impersonation the cap bounds it at MAX_SESSIONS_PER_CLIENT bodies.
+
+Reassembly state machine, per (client, attempt, payload_crc) stream:
+
+    EMPTY --chunk--> PARTIAL --last chunk + payload_crc ok--> COMPLETE
+      PARTIAL --duplicate index-->        PARTIAL   [counted, dropped]
+      PARTIAL --higher-attempt stream-->  evicted   [escalation resets]
+      PARTIAL --foreign payload_crc-->    (separate stream)  [conflict]
+      PARTIAL --group over cap-->         least-complete evicted
+      COMPLETE --payload CRC mismatch-->  EMPTY     [retryable: RESEND all]
+
+A completed stream retires the client's whole group (any other partial is
+an interloper or a superseded duplicate; the server's pending-payload
+dedupe absorbs re-deliveries).  A completed body that fails its end-to-end
+``payload_crc`` seal (only reachable when a forged chunk shared an honest
+stream's exact header) is dropped and reported retryable — the caller
+answers ``STATUS_RESEND`` for every chunk rather than a terminal REJECT,
+so a forged frame can never flip an honest client to gave-up.
+Missing-chunk NACKs are derived from :meth:`Reassembler.incomplete` at
+drain time, so retransmits carry *only* the absent indices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional
+
+from repro.agg.transport import frame as F
+
+# honest stream + one interloper; beyond that, evict the least complete
+MAX_SESSIONS_PER_CLIENT = 2
+
+# add() events
+COMPLETE = "complete"      # last chunk landed; payload verified + returned
+PROGRESS = "progress"      # chunk committed; more outstanding
+DUPLICATE = "duplicate"    # chunk index already committed (idempotent)
+STALE = "stale"            # below the client's newest in-flight attempt:
+                           # dropped — a stale stream must never exist (it
+                           # would capture RESEND targeting / a cap slot)
+REJECT = "reject"          # reassembled body failed the payload-CRC seal
+                           # (stream dropped; retryable via RESEND-all)
+
+
+@dataclasses.dataclass
+class ReassemblyStats:
+    """Transport-layer telemetry of one round's reassembly."""
+    chunks: int = 0              # chunk frames fed to add()
+    completed: int = 0           # payloads fully reassembled + verified
+    duplicates: int = 0
+    stale: int = 0               # chunks below the client's newest attempt
+    conflicts: int = 0           # foreign streams opened alongside another
+    evictions: int = 0           # streams dropped by the per-client cap
+    rejects: int = 0             # payload-CRC seal failures at completion
+    resets: int = 0              # streams superseded by a higher attempt
+    buffer_bytes: int = 0        # bytes currently held by open streams
+    peak_buffer_bytes: int = 0   # high-water mark of open-stream bytes
+
+
+@dataclasses.dataclass
+class _Stream:
+    header: F.FrameHeader        # first-seen header (chunk_index-normalized)
+    buf: bytearray
+    have: set
+    born: int                    # arrival order, for eviction tie-breaks
+
+    # a chunk belongs to this stream iff it agrees on every header field
+    # except its own position — payload_crc keys the body, so two
+    # different payloads can never merge
+    def matches(self, h: F.FrameHeader) -> bool:
+        return dataclasses.replace(h, chunk_index=0) == self.header
+
+    @property
+    def progress(self) -> int:
+        return len(self.have)
+
+
+class Reassembler:
+    """Per-round chunk reassembly keyed by client id."""
+
+    def __init__(self, spec: F.RoundSpec):
+        self.spec = spec
+        self._groups: "dict[int, list[_Stream]]" = {}
+        self._born = 0
+        self.stats = ReassemblyStats()
+
+    def _drop(self, client_id: int, s: _Stream) -> None:
+        self._groups[client_id].remove(s)
+        self.stats.buffer_bytes -= len(s.buf)
+        if not self._groups[client_id]:
+            del self._groups[client_id]
+
+    def _open(self, h: F.FrameHeader) -> _Stream:
+        group = self._groups.setdefault(h.client_id, [])
+        # escalation supersedes: a new attempt's stream retires all
+        # lower-attempt partials of this client
+        for s in [s for s in group if s.header.attempt < h.attempt]:
+            self.stats.resets += 1
+            self._drop(h.client_id, s)
+        group = self._groups.setdefault(h.client_id, [])
+        if group:
+            self.stats.conflicts += 1
+        if len(group) >= MAX_SESSIONS_PER_CLIENT:
+            victim = min(group, key=lambda s: (s.progress, s.born))
+            self.stats.evictions += 1
+            self._drop(h.client_id, victim)
+            group = self._groups.setdefault(h.client_id, [])
+        self._born += 1
+        s = _Stream(header=dataclasses.replace(h, chunk_index=0),
+                    buf=bytearray(h.body_len), have=set(), born=self._born)
+        group.append(s)
+        self.stats.buffer_bytes += h.body_len
+        self.stats.peak_buffer_bytes = max(self.stats.peak_buffer_bytes,
+                                           self.stats.buffer_bytes)
+        return s
+
+    def add(self, h: F.FrameHeader, chunk: bytes
+            ) -> "tuple[str, Optional[F.Payload]]":
+        """Commit one validated chunk; returns (event, payload-or-None).
+
+        The caller has already run :func:`frame.decode_frame` (per-frame
+        CRC) and :func:`frame.check_frame_against_spec` (round membership +
+        MTU geometry), so everything arriving here is a well-formed chunk of
+        *some* payload of this round.
+        """
+        self.stats.chunks += 1
+        group = self._groups.get(h.client_id, [])
+        if any(s.header.attempt > h.attempt for s in group):
+            # drop, don't open: a lower-attempt stream alongside the
+            # escalated one could out-progress it, capture the client's
+            # single RESEND slot (incomplete() is per client) and deadlock
+            # the escalation — and it would burn a cap slot
+            self.stats.stale += 1
+            return STALE, None
+        s = next((s for s in group if s.matches(h)), None)
+        if s is None:
+            s = self._open(h)
+        if h.chunk_index in s.have:
+            self.stats.duplicates += 1
+            return DUPLICATE, None
+        # only multi-chunk frames reach the session (single frames bypass
+        # it in the server), and those exist only under a positive MTU
+        off = h.chunk_index * self.spec.mtu
+        s.buf[off:off + len(chunk)] = chunk
+        s.have.add(h.chunk_index)
+        if len(s.have) < h.n_chunks:
+            return PROGRESS, None
+        # complete: seal the body end to end before it can reach the drain
+        # (crc32 hashes the bytearray in place — no body-sized copy)
+        if zlib.crc32(s.buf) != h.payload_crc:
+            self.stats.rejects += 1
+            self._drop(h.client_id, s)   # retryable: caller RESENDs all
+            return REJECT, None
+        self.stats.completed += 1
+        self.discard(h.client_id)        # retire the whole group
+        return COMPLETE, F.payload_from_body(s.header, s.buf)
+
+    def missing(self, client_id: int) -> "tuple[int, ...]":
+        """Outstanding chunk indices across ALL of a client's open streams
+        (they share one attempt — stale ones are dropped, higher ones
+        evict).  The union matters: following only the most-complete
+        stream would let a forged stream that out-progresses the honest
+        one capture the client's single RESEND slot and livelock it; with
+        the union, the honest stream's gaps are always named too, its
+        retransmits merge into it, and it completes regardless of what an
+        interloper does."""
+        group = self._groups.get(client_id)
+        if not group:
+            return ()
+        have_all = set.intersection(*(s.have for s in group))
+        return tuple(i for i in range(group[0].header.n_chunks)
+                     if i not in have_all)
+
+    def incomplete(self) -> "dict[int, tuple]":
+        """client_id -> (attempt, missing indices) of every open client."""
+        return {cid: (g[0].header.attempt, self.missing(cid))
+                for cid, g in sorted(self._groups.items())}
+
+    def discard(self, client_id: int) -> None:
+        """Drop a client's open streams (accepted / gave-up clients)."""
+        for s in list(self._groups.get(client_id, [])):
+            self._drop(client_id, s)
+
+    @property
+    def open_sessions(self) -> int:
+        return sum(len(g) for g in self._groups.values())

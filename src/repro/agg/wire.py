@@ -1,377 +1,40 @@
-"""Versioned byte-level codec for the federated-DME aggregation protocol.
+"""Back-compat facade over the layered transport stack.
 
-Client payload layout, RoundSpec v2 (little-endian):
+The monolithic v2 codec that used to live here was refactored into
+:mod:`repro.agg.transport` (ISSUE 5):
 
-    offset  size  field
-    0       4     magic         b"DMEA"
-    4       2     version       WIRE_VERSION (2)
-    6       2     flags         bit 0: rotate (HD pre-rotation, paper §6)
-                                bit 1: anchored (encoded x - anchor)
-    8       4     round_id
-    12      4     client_id
-    16      4     attempt       escalation level (0 on first send)
-    20      4     q             color classes at this attempt (q0^(2^attempt))
-    24      4     d             unpadded vector length
-    28      4     bucket        coordinates per bucket (power of two)
-    32      4     seed          round's shared-randomness seed (dither u)
-    36      4     rot_seed      shared Hadamard-diagonal seed
-    40      4     n_words       packed uint32 word count
-    44      4     nb            bucket count (= padded d / bucket)
-    48      4     check         coordinate checksum h(k) (core.error_detect)
-    52      4     anchor_digest CRC-32 of the round anchor (0 = unanchored)
-    56      4     crc           CRC-32 of header (crc field zeroed) + body
-    60      4*n_words   packed color words (bits_for_q(q) bits/coordinate)
-    ...     4*nb        f32 sides sidecar (one lattice side per bucket)
+* :mod:`repro.agg.transport.frame`   — v3 header/CRC codec, RoundSpec,
+  responses, escalation math (the old ``wire`` API, now chunk-aware);
+* :mod:`repro.agg.transport.chunks`  — fixed-MTU splitting + selective
+  retransmit;
+* :mod:`repro.agg.transport.session` — out-of-order server-side reassembly;
 
-The payload body is exactly the packed wire format of the shard_map
-collectives (repro.dist.collectives): uint32 words from the fused Pallas
-encode plus the per-bucket sides sidecar — with v2 the sides may differ
-*per bucket* (the round's per-bucket ``y`` state from the previous round's
-telemetry).  The header adds what a real transport needs — versioning,
-round/client identity, integrity (CRC), the §5-style decode-failure
-detection checksum over the integer lattice coordinates (h(k) = <a, k> mod
-2^32, shared odd weights; see repro.core.error_detect), and the anchor
-digest: anchored clients encode ``x - anchor`` (the anchor being round k-1's
-published mean) inside the fused Pallas kernel, and a payload whose digest
-does not match the round's anchor is REJECTed — a client quantizing against
-a stale anchor would otherwise decode to garbage lattice points that still
-pass framing checks.
-
-Server responses (v2) carry the per-bucket decode margins:
-
-    magic b"DMER" | version u16 | status u16 | round_id u32 | client_id u32
-    | attempt_next u32 | q_next u32 | y_next f32 | nb u32
-    | y_buckets f32*nb | crc u32
-
-A NACK's ``y_buckets`` is the per-bucket margin at the directed escalation
-level; the client validates its length against the round's ``nb`` and treats
-a mismatch as a corrupt response (re-sends the current payload) instead of
-truncating or broadcasting it.
-
-Escalation follows RobustAgreement (paper Alg. 5) with the *lattice
-granularity held fixed*: the round pins the side s0 = 2*y0/(q0-1) and each
-retry squares the color space, q <- q^2 (capped at 2^16), which widens the
-decode margin y_a = s0*(q_a-1)/2 without moving the lattice — so integer
-coordinates from different attempts remain summable and the server's
-integer-space accumulation stays bit-deterministic.
+with all byte arithmetic delegated to :mod:`repro.core.wire_accounting`.
+Every name the v2 module exported is re-exported here unchanged, so
+``from repro.agg import wire`` call sites keep working; new transport-aware
+code should import :mod:`repro.agg.transport` directly.
 """
-from __future__ import annotations
+from repro.agg.transport.frame import (  # noqa: F401
+    MAGIC_PAYLOAD, MAGIC_RESPONSE, WIRE_VERSION, Q_CAP, FLAG_ROTATE,
+    FLAG_ANCHORED, FRAME_HEADER_BYTES, STATUS_QUEUED, STATUS_ACK,
+    STATUS_NACK, STATUS_REJECT, STATUS_RESEND, WireError,
+    TruncatedPayloadError, BadMagicError, VersionMismatchError,
+    CorruptPayloadError, HeaderMismatchError, RoundSpec, FrameHeader,
+    Payload, Response, q_at_attempt, y_at_attempt, y_buckets_at_attempt,
+    payload_bytes, encode_frame, decode_frame, payload_from_body,
+    build_payload, encode_payload, decode_payload, check_frame_against_spec,
+    check_against_spec, check_sides_against_spec, encode_response,
+    decode_response)
 
-import dataclasses
-import struct
-import zlib
-
-import numpy as np
-
-from repro.core import lattice as L
-from repro.dist.collectives import (QSyncConfig, flat_size_padded,
-                                    _ROTATION_SEED)
-
-MAGIC_PAYLOAD = b"DMEA"
-MAGIC_RESPONSE = b"DMER"
-WIRE_VERSION = 2
-Q_CAP = 1 << 16                   # largest packable color space (16 bits)
-
-FLAG_ROTATE = 1 << 0
-FLAG_ANCHORED = 1 << 1
-
-_HEADER = struct.Struct("<4sHH12I")
-# response header up to and including nb; followed by nb f32 margins + crc
-_RESPONSE_HEAD = struct.Struct("<4sHHIIIIfI")
-
-# response statuses
-STATUS_QUEUED = 0     # payload buffered; verdict at the next drain
-STATUS_ACK = 1        # payload decoded and accumulated
-STATUS_NACK = 2       # decode failure detected: retry at (attempt+1, q_next)
-STATUS_REJECT = 3     # malformed/mismatched payload: not retryable as-is
-
-
-class WireError(ValueError):
-    """Base class for payload parse/validation failures."""
-
-
-class TruncatedPayloadError(WireError):
-    pass
-
-
-class BadMagicError(WireError):
-    pass
-
-
-class VersionMismatchError(WireError):
-    pass
-
-
-class CorruptPayloadError(WireError):
-    pass
-
-
-class HeaderMismatchError(WireError):
-    """Payload is well-formed but does not match the round's spec."""
-
-
-@dataclasses.dataclass(frozen=True)
-class RoundSpec:
-    """Static per-round protocol contract (distributed out of band).
-
-    The lattice granularity of the round is pinned per bucket by
-    (y_buckets, cfg.q): s_b = 2*y_b/(cfg.q - 1) (uniformly y0 when
-    ``y_buckets`` is None — the v1-compatible case).  Escalation squares q
-    with the sides fixed, so the attempt-a decode margin per bucket is
-    y_a,b = s_b*(q_a - 1)/2.
-
-    v2 additions: ``y_buckets`` — the round's per-bucket distance bounds
-    (the multi-round service feeds the previous round's telemetry through
-    repro.core.qstate.update_y); ``anchor_digest`` — CRC-32 of the round
-    anchor vector (round k-1's published mean; 0 = unanchored).  Clients
-    encode ``x - anchor`` and the server REJECTs payloads whose digest does
-    not match (stale-anchor clients are not silently mis-decoded).
-    """
-    round_id: int
-    d: int
-    cfg: QSyncConfig = QSyncConfig()
-    y0: float = 1.0
-    seed: int = 0
-    # defaulting to the collectives' shared diagonal seed keeps the agg
-    # bucket pipeline bit-identical to the shard_map star collective
-    rot_seed: int = _ROTATION_SEED
-    max_attempts: int = 4
-    y_buckets: "tuple[float, ...] | None" = None
-    anchor_digest: int = 0
-
-    def __post_init__(self):
-        if self.y_buckets is not None and len(self.y_buckets) != self.nb:
-            raise ValueError(
-                f"y_buckets has {len(self.y_buckets)} entries for "
-                f"{self.nb} buckets")
-
-    @property
-    def padded(self) -> int:
-        return flat_size_padded(self.d, self.cfg)
-
-    @property
-    def nb(self) -> int:
-        return self.padded // self.cfg.bucket
-
-    @property
-    def anchored(self) -> bool:
-        return self.anchor_digest != 0
-
-    @property
-    def side(self) -> float:
-        """The uniform lattice side s0 (granularity never escalates).  With
-        per-bucket bounds this is the *largest* side (y0 is kept as the
-        uniform summary; sides_np() is the authoritative per-bucket array).
-        """
-        return 2.0 * self.y0 / (self.cfg.q - 1)
-
-    def y_np(self) -> np.ndarray:
-        """(nb,) f32 per-bucket distance bounds of the round."""
-        if self.y_buckets is None:
-            return np.full((self.nb,), self.y0, np.float32)
-        return np.asarray(self.y_buckets, np.float32)
-
-    def sides_np(self) -> np.ndarray:
-        """(nb,) f32 per-bucket lattice sides s_b = 2*y_b/(q-1)."""
-        return (self.y_np() * np.float32(2.0 / (self.cfg.q - 1))
-                ).astype(np.float32)
-
-
-def q_at_attempt(q0: int, attempt: int) -> int:
-    """RobustAgreement color-space schedule: q0^(2^attempt), capped at 2^16."""
-    q = q0
-    for _ in range(attempt):
-        if q >= Q_CAP:
-            return Q_CAP
-        q = q * q
-    return min(q, Q_CAP)
-
-
-def y_at_attempt(spec: RoundSpec, attempt: int) -> float:
-    """Largest decode margin at an escalation level: y_a = s0*(q_a - 1)/2
-    (the scalar summary; per-bucket margins via y_buckets_at_attempt)."""
-    return spec.side * (q_at_attempt(spec.cfg.q, attempt) - 1) / 2.0
-
-
-def y_buckets_at_attempt(spec: RoundSpec, attempt: int) -> np.ndarray:
-    """(nb,) per-bucket decode margins at an escalation level."""
-    q = q_at_attempt(spec.cfg.q, attempt)
-    return (spec.sides_np() * np.float32((q - 1) / 2.0)).astype(np.float32)
-
-
-@dataclasses.dataclass(frozen=True)
-class Payload:
-    """Parsed client payload (validated framing; numpy views of the body)."""
-    round_id: int
-    client_id: int
-    attempt: int
-    q: int
-    d: int
-    bucket: int
-    seed: int
-    rot_seed: int
-    rotate: bool
-    check: int
-    words: np.ndarray          # (n_words,) uint32
-    sides: np.ndarray          # (nb,) f32
-    anchor_digest: int = 0
-    anchored: bool = False
-
-    @property
-    def nb(self) -> int:
-        return self.sides.shape[0]
-
-
-@dataclasses.dataclass(frozen=True)
-class Response:
-    status: int
-    round_id: int
-    client_id: int
-    attempt_next: int
-    q_next: int
-    y_next: float
-    y_buckets: "tuple[float, ...]" = ()    # per-bucket margins (NACK/QUEUED)
-
-
-def payload_bytes(spec: RoundSpec, attempt: int = 0) -> int:
-    """Exact on-the-wire size of one client payload at an attempt level
-    (header + CRC word + packed words + sides sidecar)."""
-    q = q_at_attempt(spec.cfg.q, attempt)
-    return (_HEADER.size + 4 + 4 * L.packed_len(spec.padded, L.bits_for_q(q))
-            + 4 * spec.nb)
-
-
-def encode_payload(spec: RoundSpec, client_id: int, attempt: int, q: int,
-                   words: np.ndarray, sides: np.ndarray, check: int) -> bytes:
-    """Serialize one client message to transportable bytes."""
-    words = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
-    sides = np.ascontiguousarray(np.asarray(sides, dtype=np.float32))
-    flags = (FLAG_ROTATE if spec.cfg.rotate else 0) \
-        | (FLAG_ANCHORED if spec.anchored else 0)
-    body = words.tobytes() + sides.tobytes()
-    head0 = _HEADER.pack(MAGIC_PAYLOAD, WIRE_VERSION, flags, spec.round_id,
-                         client_id, attempt, q, spec.d, spec.cfg.bucket,
-                         spec.seed, spec.rot_seed, words.shape[0],
-                         sides.shape[0], int(check) & 0xFFFFFFFF,
-                         spec.anchor_digest & 0xFFFFFFFF)
-    crc = zlib.crc32(body, zlib.crc32(head0))
-    return head0 + struct.pack("<I", crc) + body
-
-
-def decode_payload(data: bytes) -> Payload:
-    """Parse + integrity-check a payload; raises WireError subclasses."""
-    hsize = _HEADER.size + 4                       # header + crc word
-    if len(data) < hsize:
-        raise TruncatedPayloadError(
-            f"payload of {len(data)} bytes is shorter than the "
-            f"{hsize}-byte header")
-    (magic, version, flags, round_id, client_id, attempt, q, d, bucket,
-     seed, rot_seed, n_words, nb, check,
-     anchor_digest) = _HEADER.unpack_from(data, 0)
-    if magic != MAGIC_PAYLOAD:
-        raise BadMagicError(f"bad magic {magic!r}")
-    if version != WIRE_VERSION:
-        raise VersionMismatchError(
-            f"wire version {version} != supported {WIRE_VERSION}")
-    (crc,) = struct.unpack_from("<I", data, _HEADER.size)
-    body = data[hsize:]
-    want = 4 * n_words + 4 * nb
-    if len(body) < want:
-        raise TruncatedPayloadError(
-            f"body has {len(body)} bytes, header promises {want}")
-    if len(body) != want:
-        raise CorruptPayloadError(
-            f"body has {len(body)} bytes, header promises {want}")
-    if zlib.crc32(body, zlib.crc32(data[:_HEADER.size])) != crc:
-        raise CorruptPayloadError("CRC mismatch")
-    # header self-consistency (cheap sanity; spec matching is the server's)
-    if q < 2 or q > Q_CAP or bucket < 1 or (bucket & (bucket - 1)):
-        raise CorruptPayloadError(f"inconsistent header: q={q} "
-                                  f"bucket={bucket}")
-    padded = nb * bucket
-    if d > padded or padded - d >= bucket:
-        raise CorruptPayloadError(
-            f"inconsistent header: d={d} vs nb*bucket={padded}")
-    if n_words != L.packed_len(padded, L.bits_for_q(q)):
-        raise CorruptPayloadError(
-            f"inconsistent header: {n_words} words for {padded} coords "
-            f"at q={q}")
-    anchored = bool(flags & FLAG_ANCHORED)
-    if anchored != (anchor_digest != 0):
-        raise CorruptPayloadError(
-            f"inconsistent header: anchored flag {anchored} vs "
-            f"digest {anchor_digest}")
-    words = np.frombuffer(body, dtype="<u4", count=n_words)
-    sides = np.frombuffer(body, dtype="<f4", offset=4 * n_words, count=nb)
-    return Payload(round_id=round_id, client_id=client_id, attempt=attempt,
-                   q=q, d=d, bucket=bucket, seed=seed, rot_seed=rot_seed,
-                   rotate=bool(flags & FLAG_ROTATE), check=check,
-                   words=words, sides=sides, anchor_digest=anchor_digest,
-                   anchored=anchored)
-
-
-def check_against_spec(p: Payload, spec: RoundSpec) -> None:
-    """Raise HeaderMismatchError when a payload doesn't belong to a round."""
-    if p.round_id != spec.round_id:
-        raise HeaderMismatchError(
-            f"round {p.round_id} != current {spec.round_id}")
-    want_q = q_at_attempt(spec.cfg.q, p.attempt)
-    mism = [
-        f"{k}: got {got}, want {want}" for k, got, want in (
-            ("d", p.d, spec.d),
-            ("bucket", p.bucket, spec.cfg.bucket),
-            ("rotate", p.rotate, spec.cfg.rotate),
-            ("seed", p.seed, spec.seed),
-            ("rot_seed", p.rot_seed, spec.rot_seed),
-            ("q", p.q, want_q),
-        ) if got != want]
-    if p.attempt >= spec.max_attempts:
-        mism.append(f"attempt {p.attempt} >= max {spec.max_attempts}")
-    # anchor agreement: a client that encoded against a stale/foreign anchor
-    # produced coordinates on a shifted lattice — its checksum is self-
-    # consistent, so only the digest stops it from corrupting the mean
-    if p.anchor_digest != (spec.anchor_digest & 0xFFFFFFFF):
-        mism.append(f"anchor digest {p.anchor_digest:#x} != round "
-                    f"{spec.anchor_digest:#x}")
-    # the sidecar must carry the round's pinned per-bucket granularity: a
-    # client built against different bounds would otherwise be accepted (its
-    # checksum is self-consistent) yet scaled by the *round's* sides at
-    # finalize, silently corrupting the mean
-    if not np.array_equal(p.sides, spec.sides_np()):
-        mism.append("sides sidecar != round per-bucket sides (y mismatch)")
-    if mism:
-        raise HeaderMismatchError("; ".join(mism))
-
-
-def encode_response(r: Response) -> bytes:
-    yb = np.asarray(r.y_buckets, np.float32)
-    head0 = _RESPONSE_HEAD.pack(MAGIC_RESPONSE, WIRE_VERSION, r.status,
-                                r.round_id, r.client_id, r.attempt_next,
-                                r.q_next, r.y_next, yb.shape[0])
-    body = head0 + yb.tobytes()
-    return body + struct.pack("<I", zlib.crc32(body))
-
-
-def decode_response(data: bytes) -> Response:
-    hsize = _RESPONSE_HEAD.size
-    if len(data) < hsize + 4:
-        raise TruncatedPayloadError(
-            f"response of {len(data)} bytes < {hsize + 4}")
-    (magic, version, status, round_id, client_id, attempt_next, q_next,
-     y_next, nb) = _RESPONSE_HEAD.unpack_from(data, 0)
-    if magic != MAGIC_RESPONSE:
-        raise BadMagicError(f"bad magic {magic!r}")
-    if version != WIRE_VERSION:
-        raise VersionMismatchError(
-            f"wire version {version} != supported {WIRE_VERSION}")
-    if len(data) != hsize + 4 * nb + 4:
-        raise CorruptPayloadError(
-            f"response has {len(data)} bytes, header promises "
-            f"{hsize + 4 * nb + 4}")
-    (crc,) = struct.unpack_from("<I", data, hsize + 4 * nb)
-    if zlib.crc32(data[:hsize + 4 * nb]) != crc:
-        raise CorruptPayloadError("response CRC mismatch")
-    yb = np.frombuffer(data, dtype="<f4", offset=hsize, count=nb)
-    return Response(status=status, round_id=round_id, client_id=client_id,
-                    attempt_next=attempt_next, q_next=q_next, y_next=y_next,
-                    y_buckets=tuple(float(v) for v in yb))
+__all__ = [
+    "MAGIC_PAYLOAD", "MAGIC_RESPONSE", "WIRE_VERSION", "Q_CAP",
+    "FLAG_ROTATE", "FLAG_ANCHORED", "FRAME_HEADER_BYTES", "STATUS_QUEUED",
+    "STATUS_ACK", "STATUS_NACK", "STATUS_REJECT", "STATUS_RESEND",
+    "WireError", "TruncatedPayloadError", "BadMagicError",
+    "VersionMismatchError", "CorruptPayloadError", "HeaderMismatchError",
+    "RoundSpec", "FrameHeader", "Payload", "Response", "q_at_attempt",
+    "y_at_attempt", "y_buckets_at_attempt", "payload_bytes", "encode_frame",
+    "decode_frame", "payload_from_body", "build_payload", "encode_payload",
+    "decode_payload", "check_frame_against_spec", "check_against_spec",
+    "check_sides_against_spec", "encode_response", "decode_response",
+]

@@ -14,4 +14,5 @@ from repro.core import error_detect
 from repro.core import sublinear
 from repro.core import bucketing
 from repro.core import qstate
+from repro.core import wire_accounting
 from repro.core.qstate import QState

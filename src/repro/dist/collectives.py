@@ -82,10 +82,11 @@ the trainer (y <- y * escalate, the SPMD form of RobustAgreement's
 ``r <- r^2``).
 
 Wire accounting (:func:`wire_bytes_butterfly`, :func:`wire_bytes_allgather`,
-:func:`wire_bytes_rh`) is built on :func:`repro.core.lattice.wire_bytes` —
-packed colors at ``bits_for_q(q)`` bits per coordinate plus the per-bucket
-sides sidecar, and matches the actual packed payload byte-for-byte
-(asserted in tests).
+:func:`wire_bytes_rh`) delegates to :mod:`repro.core.wire_accounting` — the
+repo's single wire-byte definition (packed colors at ``bits_for_q(q)`` bits
+per coordinate plus the per-bucket sides sidecar), shared with the FSDP
+accounting and the agg transport framing, and matches the actual packed
+payload byte-for-byte (asserted in tests).
 """
 from __future__ import annotations
 
@@ -100,6 +101,7 @@ from repro.core import bucketing as B
 from repro.core import lattice as L
 from repro.core import qstate as QS
 from repro.core import rotation as R
+from repro.core import wire_accounting as WA
 from repro.core.qstate import QState
 from repro.kernels import ops as K
 
@@ -592,22 +594,25 @@ def _payload_bytes(n: int, cfg: QSyncConfig) -> int:
     packed=True: packed-color words + 4B/bucket sides sidecar — the *actual*
     collective payload (words.nbytes + sides.nbytes), asserted in tests.
     packed=False: the unpacked uint32 color buffer the jnp fallback moves
-    (no sidecar; sides stay local)."""
+    (no sidecar; sides stay local).  Delegates to the repo's one wire-byte
+    definition (repro.core.wire_accounting), like the agg transport."""
     padded = flat_size_padded(n, cfg)
-    if not cfg.packed:
-        return 4 * padded
-    return L.wire_bytes(padded, cfg.bits) + 4 * (padded // cfg.bucket)
+    return WA.collective_payload_bytes(padded, cfg.bits,
+                                       padded // cfg.bucket, cfg.packed)
 
 
 def wire_bytes_butterfly(n: int, world: int, cfg: QSyncConfig) -> int:
     """Recursive doubling: log2(world) rounds, one full payload each."""
-    rounds = max(int(np.log2(world)), 0) if world > 1 else 0
-    return rounds * _payload_bytes(n, cfg)
+    padded = flat_size_padded(n, cfg)
+    return WA.butterfly_bytes(padded, cfg.bits, padded // cfg.bucket, world,
+                              cfg.packed)
 
 
 def wire_bytes_allgather(n: int, world: int, cfg: QSyncConfig) -> int:
     """Ring all-gather of every rank's payload: (world-1) forwarded chunks."""
-    return max(world - 1, 0) * _payload_bytes(n, cfg)
+    padded = flat_size_padded(n, cfg)
+    return WA.allgather_bytes(padded, cfg.bits, padded // cfg.bucket, world,
+                              cfg.packed)
 
 
 def wire_bytes_rh(n: int, world: int, cfg: QSyncConfig) -> int:
@@ -616,13 +621,5 @@ def wire_bytes_rh(n: int, world: int, cfg: QSyncConfig) -> int:
     the uint32 color buffer); the payload halves every round, summing to
     ~one full payload."""
     padded = flat_size_padded(n, cfg)
-    nb = padded // cfg.bucket
-    rounds = max(int(np.log2(world)), 0) if world > 1 else 0
-    total = 0
-    for r in range(rounds):
-        seg = padded >> (r + 1)
-        if cfg.packed:
-            total += L.wire_bytes(seg, cfg.bits) + 4 * (nb >> (r + 1))
-        else:
-            total += 4 * seg
-    return total
+    return WA.rh_bytes(padded, cfg.bits, padded // cfg.bucket, world,
+                       cfg.packed)

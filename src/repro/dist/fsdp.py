@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import wire_accounting as WA
 from repro.core.qstate import QState
 from repro.dist.collectives import (QSyncConfig, butterfly_allreduce_mean,
                                     flat_size_padded, rh_reduce_scatter_mean,
@@ -125,13 +126,14 @@ def wire_bytes_bwd(m: int, sizes: "list[int]", cfg: FSDPConfig) -> int:
     sidecar); anchored mode runs the full-length butterfly per axis
     (log2(ws) full payloads each — the common output doubles as the next
     anchor).  sync="fp32": ring psum_scatter moving (ws-1)/ws of the
-    segment as f32 per axis.
+    segment as f32 per axis.  All byte arithmetic delegates to
+    repro.core.wire_accounting (the repo's one definition).
     """
     dp = int(np.prod(sizes))
     total, cur = 0, m
     if cfg.sync == "fp32":
         for ws in sizes:
-            total += 4 * (cur - cur // ws)
+            total += WA.fp32_ring_reduce_scatter_bytes(cur, ws)
             cur //= ws
         return total
     b = _effective_bucket(cfg.qcfg, m, dp)

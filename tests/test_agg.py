@@ -57,7 +57,7 @@ def test_wire_roundtrip_fuzz(d, q, bucket):
         attempt = int(rng.randint(0, 4))
         cid = int(rng.randint(0, 1 << 31))
         data = wire.encode_payload(spec, cid, attempt, q, words, sides, check)
-        assert len(data) == 60 + 4 * nw + 4 * nb      # 56B header + 4B CRC
+        assert len(data) == 72 + 4 * nw + 4 * nb      # 68B header + 4B CRC
         if attempt == 0 and q == spec.cfg.q:
             assert len(data) == wire.payload_bytes(spec, 0)
         p = wire.decode_payload(data)
@@ -78,7 +78,7 @@ def _payload():
 
 def test_wire_rejects_truncation():
     _, data = _payload()
-    for cut in (0, 10, 51, 59, 60, len(data) - 1):
+    for cut in (0, 10, 51, 71, 72, len(data) - 1):
         with pytest.raises(wire.TruncatedPayloadError):
             wire.decode_payload(data[:cut])
 
@@ -111,13 +111,13 @@ def test_wire_rejects_bad_magic_and_version():
 
 def test_wire_rejects_inconsistent_header():
     spec, data = _payload()
-    # lie about n_words (offset 40 in the 56-byte header), recomputing the
+    # lie about n_words (offset 40 in the 68-byte header), recomputing the
     # CRC so only the header consistency check can catch it
     b = bytearray(data)
     b[40:44] = struct.pack("<I", 7)
-    body = bytes(b[60:])
-    crc = zlib.crc32(body, zlib.crc32(bytes(b[:56])))
-    b[56:60] = struct.pack("<I", crc)
+    body = bytes(b[72:])
+    crc = zlib.crc32(body, zlib.crc32(bytes(b[:68])))
+    b[68:72] = struct.pack("<I", crc)
     with pytest.raises(wire.CorruptPayloadError):
         wire.decode_payload(bytes(b))
 
@@ -128,9 +128,9 @@ def test_wire_rejects_anchored_flag_digest_mismatch():
     spec, data = _payload()
     b = bytearray(data)
     b[52:56] = struct.pack("<I", 0xDEADBEEF)      # digest without the flag
-    body = bytes(b[60:])
-    crc = zlib.crc32(body, zlib.crc32(bytes(b[:56])))
-    b[56:60] = struct.pack("<I", crc)
+    body = bytes(b[72:])
+    crc = zlib.crc32(body, zlib.crc32(bytes(b[:68])))
+    b[68:72] = struct.pack("<I", crc)
     with pytest.raises(wire.CorruptPayloadError):
         wire.decode_payload(bytes(b))
 
@@ -335,8 +335,8 @@ def test_server_escalation_recovers_and_gives_up():
     resps = server.drain()
     while resps:
         retries = [p for rb in resps
-                   for p in [clients[wire.decode_response(rb).client_id]
-                             .handle_response(rb)] if p is not None]
+                   for p in clients[wire.decode_response(rb).client_id]
+                   .handle_response(rb)]
         if not retries:
             break
         for p in retries:
@@ -384,15 +384,15 @@ def test_client_handles_ack_nack_reject():
                 float(v) for v in
                 wire.y_buckets_at_attempt(spec, attempt_next))[:nb]))
 
-    assert c.handle_response(resp(wire.STATUS_ACK)) is None and c.acked
+    assert c.handle_response(resp(wire.STATUS_ACK)) == [] and c.acked
     c.acked = False
     retry = c.handle_response(resp(wire.STATUS_NACK, 1))
-    assert retry is not None and c.attempt == 1
-    assert wire.decode_payload(retry).q == 256
+    assert len(retry) == 1 and c.attempt == 1
+    assert wire.decode_payload(retry[0]).q == 256
     # a duplicated/stale NACK must not flip gave_up: its retry is in flight
-    assert c.handle_response(resp(wire.STATUS_NACK, 1)) is None
+    assert c.handle_response(resp(wire.STATUS_NACK, 1)) == []
     assert not c.gave_up and c.attempt == 1
-    assert c.handle_response(resp(wire.STATUS_NACK, 3)) is None  # >= max
+    assert c.handle_response(resp(wire.STATUS_NACK, 3)) == []  # >= max
     assert c.gave_up
 
 
@@ -415,11 +415,11 @@ def test_client_rejects_nack_with_wrong_y_vector_length():
 
     for bad_nb in (0, spec.nb - 1, spec.nb + 3):
         out = c.handle_response(nack(1, bad_nb))
-        assert out == current                 # retransmit, don't escalate
+        assert out == [current]               # retransmit, don't escalate
         assert c.attempt == 0 and not c.gave_up
     # a well-formed NACK still escalates
     out = c.handle_response(nack(1, spec.nb))
-    assert out is not None and c.attempt == 1
+    assert len(out) == 1 and c.attempt == 1
 
 
 # ---------------------------------------------------------------------------
@@ -603,8 +603,11 @@ def _run_8dev(code: str, timeout=900):
 def test_server_mean_bit_identical_to_star_8dev():
     """ISSUE 3 acceptance: the aggregation server's round mean equals
     allgather_allreduce_mean bitwise for the same inputs/seeds (rotated and
-    unrotated), invariant to client arrival order."""
+    unrotated), invariant to client arrival order — and (ISSUE 5) the
+    mtu-chunked transport is bit-identical to both: the same round carried
+    as out-of-order interleaved chunk frames yields the same mean."""
     out = _run_8dev("""
+        import dataclasses
         from functools import partial
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
@@ -639,6 +642,19 @@ def test_server_mean_bit_identical_to_star_8dev():
                                          np.asarray(xs[i])).payload())
             mean, _ = server.finalize()
             assert np.array_equal(mean, star[0]), rotate
+            # the same round over the chunked transport (>= 4 chunks per
+            # client, frames interleaved across clients and shuffled)
+            cspec = dataclasses.replace(spec, mtu=1024)
+            frames = [(int(i), f) for i in range(8)
+                      for f in AggClient(cspec, int(i),
+                                         np.asarray(xs[i])).frames()]
+            assert len(frames) >= 4 * 8, len(frames)
+            cserver = AggServer(cspec, np.asarray(xs[3]))
+            for j in np.random.RandomState(2).permutation(len(frames)):
+                cserver.receive(frames[int(j)][1])
+            cmean, cstats = cserver.finalize()
+            assert cstats.accepted == 8, cstats
+            assert np.array_equal(cmean, star[0]), rotate
         print("SERVER_STAR_PARITY_OK")
     """)
     assert "SERVER_STAR_PARITY_OK" in out
