@@ -7,7 +7,15 @@ The chunked rows additionally assert the ISSUE 5 acceptance bound: the
 transport's peak reassembly staging (bytes buffered before a CRC vouched
 for them) is bounded by ``mtu * inflight_clients`` — in fact by ONE frame,
 header + mtu — and is independent of d, while v2's monolithic frame staged
-the whole payload."""
+the whole payload.
+
+The ``agg_engine_openloop`` row (ISSUE 6) drives the continuous-round
+engine and the lockstep coordinator over the IDENTICAL Poisson arrival
+trace on a virtual clock and asserts the engine's rounds/sec is strictly
+higher; the virtual-clock metrics (rounds_per_s, speedup, p50/p99 round
+latency, anchor staleness) are machine-independent and gated
+unconditionally by scripts/bench_ci.py, while us_per_call (the wall cost
+of simulating the whole trace) gets the usual same-machine timing gate."""
 import time
 
 import numpy as np
@@ -15,7 +23,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.agg import wire
 from repro.agg.server import AggServer
-from repro.agg.sim import fleet_frames, fleet_payloads
+from repro.agg.sim import (OpenLoopConfig, fleet_frames, fleet_payloads,
+                           run_lockstep, run_open_loop)
 from repro.core import wire_accounting as WA
 from repro.dist.collectives import QSyncConfig
 
@@ -132,6 +141,35 @@ def chunked_rounds():
         f"peak transport staging must be independent of d: {peaks}"
 
 
+def engine_openloop():
+    """Continuous-round engine vs lockstep on the identical arrival trace.
+
+    All throughput/latency/staleness numbers are VIRTUAL-clock (event-time)
+    quantities — deterministic for a fixed trace, identical on any machine
+    — so bench_ci gates them unconditionally.  The first (untimed) run
+    warms the jit caches for the open-loop shapes; the timed run measures
+    the wall cost of pushing the whole trace through the engine."""
+    cfg = OpenLoopConfig()
+    run_open_loop(cfg, check_parity=False)        # warm the jit caches
+    t0 = time.perf_counter()
+    rep = run_open_loop(cfg, check_parity=False)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    lock = run_lockstep(cfg)
+    speedup = rep.rounds_per_s / lock.rounds_per_s
+    # the ISSUE 6 acceptance: overlap must buy real throughput
+    assert speedup > 1.0, (rep.rounds_per_s, lock.rounds_per_s)
+    assert rep.max_live_rounds >= 3, rep.max_live_rounds
+    emit("agg_engine_openloop", wall_us,
+         f"clients={rep.clients_arrived};rounds={rep.rounds};"
+         f"rounds_per_s={rep.rounds_per_s:.2f};"
+         f"lockstep_rounds_per_s={lock.rounds_per_s:.2f};"
+         f"speedup={speedup:.2f}x;"
+         f"p50_round_ms={rep.p50_latency * 1e3:.1f};"
+         f"p99_round_ms={rep.p99_latency * 1e3:.1f};"
+         f"staleness_ms={rep.mean_staleness * 1e3:.1f};"
+         f"max_live_rounds={rep.max_live_rounds}")
+
+
 def main():
     spec0, _, _ = _make_round(8)
     bpc = wire.payload_bytes(spec0)
@@ -147,6 +185,7 @@ def main():
             emit(f"agg_receive_c{n}", us_rx,
                  f"d={D};receive_only_per_payload")
     chunked_rounds()
+    engine_openloop()
 
 
 if __name__ == "__main__":

@@ -175,6 +175,25 @@ def compare(entries: dict, base: dict, same_machine: bool = True
                 if bv is not None and ev is not None and ev > bv:
                     problems.append(f"{name}: {k} {ev:g} grew past "
                                     f"baseline {bv:g}")
+            # virtual-clock engine metrics (agg_engine_openloop): event-time
+            # quantities, deterministic for the trace and identical on any
+            # machine, so they gate regardless of same_machine.  Latency/
+            # staleness must not grow, throughput/speedup must not drop,
+            # beyond the policy-tuning tolerance.
+            for k in ("p50_round_ms", "p99_round_ms", "staleness_ms"):
+                bv = b.get("metrics", {}).get(k)
+                ev = e.get("metrics", {}).get(k)
+                if bv is not None and ev is not None and \
+                        ev > bv * (1 + REGRESSION):
+                    problems.append(f"{name}: {k} {ev:g}ms grew past "
+                                    f"baseline {bv:g}ms (> +{REGRESSION:.0%})")
+            for k in ("rounds_per_s", "speedup"):
+                bv = b.get("metrics", {}).get(k)
+                ev = e.get("metrics", {}).get(k)
+                if bv is not None and ev is not None and \
+                        ev < bv * (1 - REGRESSION):
+                    problems.append(f"{name}: {k} {ev:g} dropped below "
+                                    f"baseline {bv:g} (> -{REGRESSION:.0%})")
         if e["module"] == "bench_dme":
             for k, v in e["metrics"].items():
                 if "mse" not in k:

@@ -18,9 +18,17 @@
 #      selective-retransmit wire cost of a lossy round; PLUS three anchored
 #      multi-round service rounds asserting that round k+1's anchor digest
 #      matches round k's published mean and no clients are lost;
-#   5. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
+#   5. a smoke run of the continuous-round engine under open-loop load
+#      (examples/open_loop_agg.py) — Poisson arrivals + flash crowd +
+#      churn/loss/stragglers on a virtual clock: >= 3 rounds concurrently
+#      live, every published mean bit-identical to a lockstep replay of
+#      that round's accepted clients, no terminal verdict for any benign
+#      client, and engine rounds/sec strictly above the lockstep
+#      coordinator on the identical arrival trace;
+#   6. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
 #      kernel_lattice_* timings + bench_dme accuracy + agg_* service
-#      throughput vs the last committed BENCH_*.json baseline).
+#      throughput + the engine's virtual-clock latency/staleness/speedup
+#      vs the last committed BENCH_*.json baseline).
 #
 # The `slow` suite (tests/test_multidevice.py, tests/test_trainer.py) runs
 # the same way without `-m "not slow"`; it is required before releases and
@@ -42,6 +50,9 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 
 echo "== tier-1: federated aggregation smoke (repro.agg protocol) =="
 python examples/federated_dme.py
+
+echo "== tier-1: open-loop continuous-round engine smoke =="
+python examples/open_loop_agg.py
 
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
     echo "== tier-1: benchmark regression gate =="

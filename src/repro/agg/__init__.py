@@ -26,7 +26,13 @@ an actual request/response protocol over real ``bytes``:
   round k's published mean (digest-pinned in the RoundSpec) and its
   per-bucket y comes from round k's decode telemetry
   (repro.core.qstate.update_y) — the anchored QState, threaded across
-  rounds;
+  rounds — plus the round life-cycle state machine
+  (OPEN -> SEALING -> DRAINED -> PUBLISHED);
+* :mod:`repro.agg.engine` — the event-driven continuous-round loop over the
+  service: several live rounds at once (frames routed by their
+  self-describing header), quorum-or-deadline cutover, overlapping drain,
+  straggler deadlines feeding the RESEND budget, and admission
+  control/backpressure via non-terminal ``STATUS_RETRY``;
 * :mod:`repro.agg.sim`    — in-process harness driving hundreds of simulated
   clients through a server with stragglers, drops, duplicates, corruption,
   out-of-bound adversarial inputs and chunk-level loss
@@ -43,10 +49,12 @@ from repro.agg.wire import (RoundSpec, FrameHeader, Payload, Response,
                             q_at_attempt, y_at_attempt, y_buckets_at_attempt,
                             payload_bytes,
                             STATUS_QUEUED, STATUS_NACK, STATUS_REJECT,
-                            STATUS_ACK, STATUS_RESEND)
+                            STATUS_ACK, STATUS_RESEND, STATUS_RETRY,
+                            peek_route)
 from repro.agg.client import AggClient
 from repro.agg.server import AggServer, RoundStats
-from repro.agg.service import AggService, ServiceConfig
+from repro.agg.service import (AggService, Round, RoundState, ServiceConfig)
+from repro.agg.engine import AggEngine, EngineConfig, PublishedRound
 from repro.agg.transport import Reassembler, ReassemblyStats
 
 __all__ = [
@@ -56,7 +64,8 @@ __all__ = [
     "decode_payload", "encode_frame", "decode_frame", "encode_response",
     "decode_response", "q_at_attempt", "y_at_attempt",
     "y_buckets_at_attempt", "payload_bytes", "AggClient", "AggServer",
-    "RoundStats", "AggService", "ServiceConfig", "Reassembler",
+    "RoundStats", "AggService", "Round", "RoundState", "ServiceConfig",
+    "AggEngine", "EngineConfig", "PublishedRound", "Reassembler",
     "ReassemblyStats", "STATUS_QUEUED", "STATUS_NACK", "STATUS_REJECT",
-    "STATUS_ACK", "STATUS_RESEND",
+    "STATUS_ACK", "STATUS_RESEND", "STATUS_RETRY", "peek_route",
 ]

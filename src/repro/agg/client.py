@@ -28,6 +28,11 @@ list of frames to send next:
   length does not match the round's ``nb`` is treated as corrupt — the
   current-attempt frames are re-sent instead of escalating off it (which
   would silently desync the escalation state);
+* ``STATUS_RETRY`` — non-terminal admission verdict (sealed round, full
+  pending store, or a rolled-over round): nothing is sent now, but
+  ``retry_round`` records where admission is currently open so the driver
+  can back off and re-send, or re-enroll in the named round with a fresh
+  ``AggClient`` built from that round's spec;
 * ``STATUS_ACK`` / ``STATUS_QUEUED`` / terminal ``STATUS_REJECT`` — nothing
   to send.
 """
@@ -59,6 +64,13 @@ class AggClient:
         self.attempt = 0
         self.acked = False
         self.gave_up = False
+        # round-rollover handling (v3 continuous rounds): set by a
+        # non-terminal STATUS_RETRY — the round id currently open for
+        # admission (self.spec.round_id: re-send the same frames after
+        # backoff; a different round: this round is over for us, re-enroll
+        # there with a fresh AggClient built from that round's spec;
+        # 0/None: no hint).  Never terminal: gave_up stays False.
+        self.retry_round: Optional[int] = None
         self._xflat = rounds.bucketize(jnp.asarray(x), spec).reshape(-1)
         self._aflat = (rounds.bucketize(jnp.asarray(anchor), spec).reshape(-1)
                        if spec.anchored else None)
@@ -122,6 +134,12 @@ class AggClient:
             # set on ACK only — a reordered/late chunk QUEUED must never
             # clear an ACK verdict (it would re-arm the late-NACK guard)
             self.acked = self.acked or r.status == wire.STATUS_ACK
+            return []
+        if r.status == wire.STATUS_RETRY:
+            # admission backpressure / round rollover: non-terminal.  The
+            # driver decides when to re-send (same round) or where to
+            # re-enroll (q_next names the round open for admission).
+            self.retry_round = r.q_next or None
             return []
         if r.status == wire.STATUS_REJECT:
             self.gave_up = True

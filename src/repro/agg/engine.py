@@ -1,0 +1,300 @@
+"""Event-driven continuous-round aggregation engine (ISSUE 6 tentpole).
+
+The lockstep coordinator treated a round as a roster: a fixed set of
+clients, drained when everyone landed — so one straggler stalled the mean
+every other client was waiting to anchor against.  Here a round is a
+*time/quorum window over whoever shows up* (the JetStream continuous-
+batching shape: interleaved intake and drain slots; the client-sampling
+regime of Suresh et al. 2017): the engine keeps several live
+:class:`~repro.agg.service.Round` instances keyed by ``round_id``, routes
+every arriving frame by its self-describing header
+(:func:`repro.agg.transport.frame.peek_route` — no trust needed, a lying
+header just fails its CRC at the server it routes to), and turns rounds
+over on **quorum-or-deadline** instead of client count:
+
+* the OPEN round admits newcomers; the moment ``quorum`` distinct clients
+  are admitted — or ``round_deadline`` elapses with at least
+  ``min_clients`` — it **seals** and the next round opens immediately, so
+  frames addressed to round k+1 are accepted while round k is still
+  sealing/draining;
+* SEALING rounds serve only their admitted clients (outstanding chunks,
+  selective retransmits, escalation retries — the overlapping drain); an
+  admitted client idle past ``straggler_deadline`` consumes one unit of a
+  per-client ``STATUS_RESEND`` budget (``max_resends``), after which it is
+  **expired**: its state is dropped without a verdict and the round can
+  drain without it;
+* rounds **publish strictly in round-id order** — when every admitted
+  client resolves, or at ``drain_deadline`` after the seal, whichever
+  comes first — and each published mean feeds the service QState (the
+  anchor chain);
+* **admission control + backpressure**: the per-round pending store is
+  bounded (``max_pending``), and the live-round window is bounded
+  (``max_live_rounds`` — the oldest round is force-published rather than
+  letting the window grow).  A frame that cannot be admitted — new client
+  after the seal, store full, or a round no longer (or not yet) live —
+  draws a non-terminal ``STATUS_RETRY`` naming the round currently open
+  for admission.  No admission decision is ever a terminal verdict: a
+  client can only reach ``gave_up`` by exhausting its own escalation
+  ladder (PR 5's invariant, extended to time).
+
+The correctness gate is unchanged since PR 3: every published round mean
+is bit-identical to ``allgather_allreduce_mean`` over that round's
+accepted clients, under any arrival order, chunking, loss and
+overlapping-round interleaving — the engine only decides *which* clients
+make a round, never *how* they are summed (integer accumulation stays
+exact and order-free).
+
+The engine is clock-agnostic: every entry point takes ``now`` (the sim
+passes virtual seconds, a deployment would pass a monotonic wall clock),
+and all policy fires from ``receive``/``advance`` — there are no threads
+and no timers, so behavior is deterministic and replayable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.agg import wire
+from repro.agg.server import RoundStats
+from repro.agg.service import AggService, Round, RoundState
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Cutover / drain / admission policy of the continuous-round engine."""
+    quorum: int = 64              # seal the open round at this many distinct
+                                  # admitted clients (the fast path)
+    round_deadline: float = 1.0   # ... or after this long open (the slow
+                                  # path), whichever comes first
+    min_clients: int = 1          # a deadline cutover needs at least this
+                                  # many admitted clients; an emptier round
+                                  # re-arms instead of spinning
+    straggler_deadline: float = 0.25  # per-client idle time in a sealing
+                                      # round before the RESEND budget is
+                                      # tapped (and, exhausted, the client
+                                      # expires)
+    max_resends: int = 2          # deadline-driven STATUS_RESEND budget per
+                                  # client per round
+    drain_deadline: float = 1.0   # max time a round may seal/drain before
+                                  # it is force-published without its
+                                  # unresolved stragglers
+    max_pending: Optional[int] = None  # per-round pending-store cap
+                                       # (admission backpressure)
+    max_live_rounds: int = 3      # live (unpublished) round window; the
+                                  # oldest is force-published past this
+
+
+@dataclasses.dataclass
+class PublishedRound:
+    """One published round's outcome + latency/staleness telemetry."""
+    round_id: int
+    spec: wire.RoundSpec
+    anchor: Optional[np.ndarray]    # what clients encoded against (None:
+                                    # unanchored round)
+    mean: np.ndarray
+    stats: RoundStats
+    accepted: frozenset             # client ids in the published mean
+    opened_at: float
+    sealed_at: float
+    published_at: float
+    anchor_round: int               # round whose mean this round anchored
+                                    # against (0 = warm start)
+    staleness: float                # published_at - anchor's publish time
+                                    # (0.0 for warm-start anchors): how old
+                                    # the anchor was when this mean shipped
+
+    @property
+    def latency(self) -> float:
+        """Open -> published round latency (driver clock units)."""
+        return self.published_at - self.opened_at
+
+    @property
+    def staleness_rounds(self) -> int:
+        """Anchor lag in rounds (0 for warm-start anchors)."""
+        return self.round_id - self.anchor_round if self.anchor_round else 0
+
+
+class AggEngine:
+    """The continuous-round event loop over an :class:`AggService`.
+
+    Usage (the sim's open-loop driver)::
+
+        eng = AggEngine(AggService(cfg), EngineConfig(...), now=0.0)
+        for event_time, frame in arrivals:
+            responses += eng.receive(frame, now=event_time)
+        responses += eng.advance(now)       # fire time-based policy
+        ... eng.published holds the in-order PublishedRound record ...
+    """
+
+    def __init__(self, svc: AggService, cfg: EngineConfig, now: float = 0.0):
+        if cfg.max_live_rounds < 2:
+            raise ValueError("max_live_rounds must be >= 2 (one sealing + "
+                             "one open) for overlapping intake")
+        self.svc = svc
+        self.cfg = cfg
+        self.live: "dict[int, Round]" = {}
+        self._order: "list[Round]" = []      # oldest ... newest (== open)
+        self.published: "list[PublishedRound]" = []
+        self.max_live_seen = 1
+        self.retried_unknown_round = 0       # engine-level RETRYs (frames
+                                             # for dead/future rounds)
+        self._activity: "dict[tuple[int, int], float]" = {}
+        self._resends: "dict[tuple[int, int], int]" = {}
+        self._publish_times: "dict[int, float]" = {}
+        self._open_new(now)
+
+    # ------------------------------------------------------------- STATE
+    @property
+    def open_round(self) -> Round:
+        """The single round currently admitting new clients."""
+        return self._order[-1]
+
+    @property
+    def live_rounds(self) -> int:
+        return len(self._order)
+
+    def _open_new(self, now: float) -> None:
+        rnd = self.svc.open_round(now=now, max_pending=self.cfg.max_pending)
+        self.live[rnd.round_id] = rnd
+        self._order.append(rnd)
+
+    # ---------------------------------------------------------------- RX
+    def receive(self, data: bytes, now: float) -> "list[bytes]":
+        """Route one frame; returns every response generated (the frame's
+        own, plus any cutover/drain verdicts the event fired)."""
+        out = self.advance(now)
+        peek = wire.peek_route(data)
+        if peek is None:
+            # not even a v3 frame prefix: let the open round's server
+            # produce the proper wire REJECT (and count it)
+            out.append(self.open_round.server.receive(data))
+            return out
+        round_id, client_id = peek
+        rnd = self.live.get(round_id)
+        if rnd is None:
+            # a round already published (straggler outliving its round) or
+            # not yet opened (reordered future traffic): non-terminal —
+            # point the client at the round open for admission
+            self.retried_unknown_round += 1
+            out.append(wire.encode_response(wire.Response(
+                status=wire.STATUS_RETRY, round_id=round_id,
+                client_id=client_id, attempt_next=0,
+                q_next=self.open_round.round_id, y_next=0.0)))
+            return out
+        out.append(rnd.server.receive(data))
+        self._activity[(round_id, client_id)] = now
+        if (rnd is self.open_round
+                and rnd.server.admitted_count >= self.cfg.quorum):
+            out.extend(self.cutover(now))
+        return out
+
+    # ------------------------------------------------------------ EVENTS
+    def advance(self, now: float) -> "list[bytes]":
+        """Fire every due time-based event: straggler deadlines and drains
+        on sealing rounds, in-order publishing, and deadline cutover."""
+        out = self._service_sealing(now)
+        self._publish_pass(now)
+        rnd = self.open_round
+        if now - rnd.opened_at >= self.cfg.round_deadline:
+            if rnd.server.admitted_count >= self.cfg.min_clients:
+                out.extend(self.cutover(now))
+            else:
+                rnd.opened_at = now          # nobody showed up: re-arm
+        return out
+
+    def cutover(self, now: float) -> "list[bytes]":
+        """Seal the open round (quorum or deadline met) and open the next.
+
+        The seal-time drain pushes every decodable payload into the
+        accumulator and sends the escalation NACKs / chunk RESENDs that
+        start the overlapping-drain phase."""
+        rnd = self.open_round
+        rnd.seal(now, next_round_id=rnd.round_id + 1)
+        out = rnd.server.drain()
+        self._publish_pass(now)
+        while len(self._order) >= self.cfg.max_live_rounds:
+            self._publish(self._order[0], now)   # window full: oldest out
+        self._open_new(now)
+        # earlier sealed rounds' RETRY hints follow the admission window
+        for r in self._order[:-1]:
+            r.server.seal(self.open_round.round_id)
+        self.max_live_seen = max(self.max_live_seen, len(self._order))
+        return out
+
+    def _service_sealing(self, now: float) -> "list[bytes]":
+        """Drains + straggler deadlines for every sealing round."""
+        out = []
+        for rnd in self._order[:-1]:
+            if rnd.state is not RoundState.SEALING:
+                continue
+            if rnd.server.pending:
+                # straggler payloads that completed since the last event:
+                # decode them now so their verdicts (and any escalation)
+                # go out before the drain deadline
+                out.extend(rnd.server.drain())
+            for cid in sorted(rnd.server.unresolved):
+                key = (rnd.round_id, cid)
+                last = self._activity.get(key, rnd.sealed_at)
+                if now - last < self.cfg.straggler_deadline:
+                    continue
+                spent = self._resends.get(key, 0)
+                if spent >= self.cfg.max_resends:
+                    rnd.server.expire_client(cid)     # no verdict: the
+                    continue                          # client may re-enroll
+                self._resends[key] = spent + 1
+                self._activity[key] = now
+                rr = rnd.server.resend_request(cid)
+                if rr is not None:
+                    out.append(rr)
+        return out
+
+    def _publish_pass(self, now: float) -> None:
+        """Publish every head-of-line round that is drained (or past its
+        drain deadline) — strictly in round-id order."""
+        while self._order:
+            head = self._order[0]
+            if head.state is RoundState.OPEN:
+                break
+            if not head.server.unresolved:
+                if head.state is RoundState.SEALING:
+                    head.mark_drained(now)
+                self._publish(head, now)
+            elif now - head.sealed_at >= self.cfg.drain_deadline:
+                self._publish(head, now)     # force: expires stragglers
+            else:
+                break
+
+    def _publish(self, rnd: Round, now: float) -> None:
+        anchor = rnd.client_anchor
+        mean, stats = self.svc.publish_round(rnd, now)
+        self.live.pop(rnd.round_id)
+        self._order.remove(rnd)
+        self._publish_times[rnd.round_id] = now
+        stale = (now - self._publish_times[rnd.anchor_round]
+                 if rnd.anchor_round in self._publish_times else 0.0)
+        self.published.append(PublishedRound(
+            round_id=rnd.round_id, spec=rnd.spec, anchor=anchor, mean=mean,
+            stats=stats, accepted=rnd.server.accepted_clients,
+            opened_at=rnd.opened_at, sealed_at=rnd.sealed_at,
+            published_at=now, anchor_round=rnd.anchor_round,
+            staleness=stale))
+        for key in [k for k in self._activity if k[0] == rnd.round_id]:
+            del self._activity[key]
+        for key in [k for k in self._resends if k[0] == rnd.round_id]:
+            del self._resends[key]
+
+    # ---------------------------------------------------------- SHUTDOWN
+    def flush(self, now: float) -> "list[PublishedRound]":
+        """End of traffic: seal + force-publish every live round, in order
+        (the open round included — its admitted clients get one last
+        drain).  Returns the full published history."""
+        rnd = self.open_round
+        if rnd.server.admitted_count:
+            rnd.seal(now, next_round_id=rnd.round_id + 1)
+            rnd.server.drain()
+        for r in list(self._order):
+            if r.state is not RoundState.OPEN:
+                self._publish(r, now)
+        return self.published

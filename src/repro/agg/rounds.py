@@ -12,6 +12,7 @@ definition in :mod:`repro.core.bucketing` (shared with the collectives).
 """
 from __future__ import annotations
 
+import struct
 import zlib
 from typing import Optional
 
@@ -26,6 +27,19 @@ from repro.core import lattice as L
 from repro.core import rotation as R
 
 Array = jax.Array
+
+
+def fold_seed(seed: int, round_id: int) -> int:
+    """Round k's wire seed: ``fold(service seed, round_id)``.
+
+    The multi-round service pins this into ``RoundSpec.seed`` so no two
+    rounds ever share a dither draw even if a driver replays round ids into
+    fresh specs, while a replay of the SAME (seed, round_id) pair stays
+    bit-stable.  Masked to 31 bits: the wire field is u32 and
+    ``jax.random.PRNGKey`` must accept it without x64.
+    """
+    return zlib.crc32(struct.pack("<II", seed & 0xFFFFFFFF,
+                                  round_id & 0xFFFFFFFF)) & 0x7FFFFFFF
 
 
 def round_key(spec: W.RoundSpec) -> Array:

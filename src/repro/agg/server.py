@@ -51,6 +51,18 @@ the directed level (v2).  When the color space is already at the 2^16
 packing cap (or max_attempts is reached) the client is REJECTed and
 excluded from the round.
 
+Continuous-round intake (ISSUE 6): the server is no longer a lockstep batch
+— :meth:`AggServer.seal` closes the round to NEW clients at cutover while
+already-admitted clients keep full service (outstanding chunks, selective
+retransmits, escalation retries — the overlapping drain), and ``max_pending``
+bounds the pending store (staged payloads + open reassembly streams).  A
+frame past the seal or the cap draws a non-terminal ``STATUS_RETRY`` naming
+the round currently open for admission — never a verdict, so admission
+timing can never flip an honest client to gave-up.
+:meth:`AggServer.expire_client` lets the engine's straggler deadline drop an
+unresolved client's state without a verdict, and :attr:`AggServer.unresolved`
+is the drain condition the engine's round life-cycle machine watches.
+
 Finalize: mean = ((ksum / count) + u) * s_b (+ anchor), unbucketized — the
 same integer-space averaging expression as ``allgather_allreduce_mean``,
 against which the acceptance test pins bit-identity.
@@ -87,6 +99,11 @@ class RoundStats:
     decode_failures: int = 0     # §5 checksum detections across all drains
     nacks_sent: int = 0
     resends_sent: int = 0        # chunk-level RESEND responses (v3)
+    retried: int = 0             # non-terminal RETRY responses (sealed round
+                                 # / pending store full — admission control)
+    expired: int = 0             # admitted clients dropped by the engine's
+                                 # straggler deadline (state discarded; no
+                                 # terminal verdict was sent)
     gave_up: int = 0             # clients dropped after escalation exhausted
     drains: int = 0
     bytes_in: int = 0
@@ -109,6 +126,20 @@ def _reject(spec: wire.RoundSpec, client_id: int,
                          else round_id,
                          client_id=client_id, attempt_next=0, q_next=0,
                          y_next=0.0)
+
+
+def _retry(round_id: int, client_id: int, attempt: int,
+           open_round_id: int) -> wire.Response:
+    """The non-terminal admission verdict: round sealed to new clients or
+    pending store full.  Echoes the frame's round (so the sender's protocol
+    object sees it) and names the round currently open for admission in
+    ``q_next`` (0 = unknown) — the client re-sends after backoff or
+    re-enrolls there.  NEVER terminal: ``gave_up`` cannot be provoked by
+    timing, only by the client's own escalation exhausting (PR 5's
+    invariant, extended to admission)."""
+    return wire.Response(status=wire.STATUS_RETRY, round_id=round_id,
+                         client_id=client_id, attempt_next=attempt,
+                         q_next=open_round_id, y_next=0.0)
 
 
 @partial(jax.jit, static_argnames=("q", "bucket"))
@@ -172,12 +203,23 @@ class AggServer:
     the round anchor itself (validated against ``spec.anchor_digest``).
     """
 
-    def __init__(self, spec: wire.RoundSpec, anchor):
+    def __init__(self, spec: wire.RoundSpec, anchor,
+                 max_pending: "int | None" = None):
+        """``max_pending``: admission cap — the largest number of distinct
+        un-drained clients allowed to hold buffered server state (pending
+        payloads + open reassembly streams) at once.  A frame from a NEW
+        client beyond the cap draws a non-terminal ``STATUS_RETRY``
+        (backpressure), never a verdict; ``None`` = unbounded (the
+        historical lockstep behavior)."""
         if np.shape(anchor) != (spec.d,):
             raise ValueError(
                 f"anchor has shape {np.shape(anchor)}, spec.d={spec.d}")
         rounds.check_anchor(spec, anchor if spec.anchored else None)
         self.spec = spec
+        self.max_pending = max_pending
+        self._sealed = False
+        self._next_round_id = 0     # admission hint for RETRY after seal
+        self._admitted: set[int] = set()
         self._anchor_b = rounds.bucketize(jnp.asarray(anchor), spec)
         if spec.anchored:
             # clients encoded x - anchor: decode in anchor-relative space
@@ -236,6 +278,20 @@ class AggServer:
             # idempotently, never double-count
             self.stats.duplicates += 1
             return self._respond(self._ack(h.client_id))
+        if h.client_id not in self._admitted:
+            # intake gate — BEFORE any buffered state is created for the
+            # client, so a sealed or saturated round never opens a
+            # reassembly stream it would have to carry
+            if self._sealed:
+                self.stats.retried += 1
+                return self._respond(_retry(h.round_id, h.client_id,
+                                            h.attempt, self._next_round_id))
+            if (self.max_pending is not None
+                    and self.occupancy >= self.max_pending):
+                self.stats.retried += 1
+                return self._respond(_retry(h.round_id, h.client_id,
+                                            h.attempt, self.spec.round_id))
+            self._admitted.add(h.client_id)
         if h.n_chunks == 1:
             p = wire.payload_from_body(h, chunk)
         else:
@@ -294,6 +350,56 @@ class AggServer:
         out = wire.encode_response(r)
         self.stats.bytes_out += len(out)
         return out
+
+    # ----------------------------------------------------------- LIFECYCLE
+    def seal(self, next_round_id: int = 0) -> None:
+        """Stop admitting NEW clients (round cutover).
+
+        Already-admitted clients keep full service — outstanding chunks,
+        selective retransmits and escalation retries all still land (the
+        overlapping drain); a frame from anyone else draws a non-terminal
+        ``STATUS_RETRY`` pointing at ``next_round_id`` (the round now open
+        for admission).  Idempotent."""
+        self._sealed = True
+        self._next_round_id = next_round_id
+
+    @property
+    def sealed(self) -> bool:
+        return self._sealed
+
+    @property
+    def admitted_count(self) -> int:
+        """Distinct clients admitted into the round (quorum input)."""
+        return len(self._admitted)
+
+    @property
+    def unresolved(self) -> frozenset:
+        """Admitted clients with no outcome yet (not accepted, not
+        escalation-exhausted) — empty means the round is fully drained."""
+        return frozenset(self._admitted - self._accepted - self._gave_up)
+
+    @property
+    def occupancy(self) -> int:
+        """Distinct clients currently holding buffered server state (the
+        bounded pending store: staged payloads + open reassembly streams).
+        Accepted clients have been folded into the integer accumulator and
+        hold nothing."""
+        return len(set(self._pending) | self._rx.open_clients())
+
+    def expire_client(self, client_id: int) -> None:
+        """Drop a straggler's state without a verdict (engine deadline).
+
+        The client's pending payload / reassembly streams are discarded and
+        its admission slot freed, so the round can drain without it.  No
+        response is generated — expiry is not a protocol outcome, and the
+        client is free to enroll in a later round."""
+        if (client_id not in self._admitted or client_id in self._accepted
+                or client_id in self._gave_up):
+            return                  # only unresolved stragglers expire
+        self._pending.pop(client_id, None)
+        self._rx.discard(client_id)
+        self._admitted.discard(client_id)
+        self.stats.expired += 1
 
     # --------------------------------------------------------------- DRAIN
     @property
@@ -390,20 +496,32 @@ class AggServer:
                     y_buckets=self._margin_tuple(nxt))))
         return responses + self._resend_requests()
 
+    def _resend_for(self, cid: int, attempt: int, missing: tuple) -> bytes:
+        self.stats.resends_sent += 1
+        return self._respond(wire.Response(
+            status=wire.STATUS_RESEND, round_id=self.spec.round_id,
+            client_id=cid, attempt_next=attempt,
+            q_next=wire.q_at_attempt(self.spec.cfg.q, attempt),
+            y_next=wire.y_at_attempt(self.spec, attempt),
+            y_buckets=self._margin_tuple(attempt), missing=missing))
+
     def _resend_requests(self) -> list[bytes]:
         """Chunk-level NACKs for every still-incomplete reassembly: each
         names exactly the missing chunk indices, so the retransmit wire
         cost is per lost chunk, never per payload."""
-        out = []
-        for cid, (attempt, missing) in self._rx.incomplete().items():
-            self.stats.resends_sent += 1
-            out.append(self._respond(wire.Response(
-                status=wire.STATUS_RESEND, round_id=self.spec.round_id,
-                client_id=cid, attempt_next=attempt,
-                q_next=wire.q_at_attempt(self.spec.cfg.q, attempt),
-                y_next=wire.y_at_attempt(self.spec, attempt),
-                y_buckets=self._margin_tuple(attempt), missing=missing)))
-        return out
+        return [self._resend_for(cid, attempt, missing)
+                for cid, (attempt, missing) in self._rx.incomplete().items()]
+
+    def resend_request(self, client_id: int) -> "Optional[bytes]":
+        """A targeted RESEND for ONE client's incomplete reassembly — the
+        engine's straggler deadline taps the RESEND budget per client
+        without re-NACKing everyone else mid-drain.  None when the client
+        has no open incomplete stream (a staged payload just needs a
+        drain; a NACKed-and-silent client has nothing to retransmit)."""
+        info = self._rx.incomplete().get(client_id)
+        if info is None:
+            return None
+        return self._resend_for(client_id, *info)
 
     # ------------------------------------------------------------ FINALIZE
     def finalize(self) -> tuple[np.ndarray, RoundStats]:

@@ -1,23 +1,48 @@
-"""Multi-round aggregation service: anchored QState threaded across rounds.
+"""Multi-round aggregation service: anchored QState + round life-cycle.
 
-The missing piece between single-round :class:`repro.agg.server.AggServer`
-and a deployable service: round k+1's protocol contract is *derived from
-round k's outcome*.
+Two layers live here (ISSUE 6 split):
 
-  * **anchor** — round k+1's anchor is round k's published mean (the
-    paper's distance-dependent regime: clients encode ``x - mean_{k-1}``,
-    so the wire cost depends on how far the population moved, never on
-    ``|mean|``).  The anchor is pinned in the RoundSpec by its CRC-32
-    digest; a client encoding against a stale anchor is REJECTed rather
-    than silently mis-decoded.
-  * **per-bucket y** — round k+1's distance bounds come from round k's
-    decode telemetry through :func:`repro.core.qstate.update_y`: buckets
-    implicated in decode failures escalate (RobustAgreement per bucket),
-    clean buckets relax toward the observed distances — so the granularity
-    tightens as the population concentrates, round over round, without any
-    out-of-band tuning.
+**QState keeper** — :class:`AggService` owns everything that persists
+ACROSS rounds: round k+1's protocol contract is *derived from the latest
+published round's outcome*.
 
-Usage::
+  * **anchor** — round k+1's anchor is the latest published mean (the
+    paper's distance-dependent regime: clients encode ``x - mean``, so the
+    wire cost depends on how far the population moved, never on ``|mean|``).
+    The anchor is pinned in the RoundSpec by its CRC-32 digest; a client
+    encoding against a stale anchor is REJECTed rather than silently
+    mis-decoded.  Under the continuous-round engine, round k+1 opens while
+    round k is still draining, so its anchor is round k-1's mean — the
+    anchor lags by exactly the number of concurrently-live rounds minus
+    one, and :attr:`Round.anchor_round` records the lag for the staleness
+    telemetry.
+  * **per-bucket y** — distance bounds come from published decode telemetry
+    through :func:`repro.core.qstate.update_y`: buckets implicated in
+    decode failures escalate (RobustAgreement per bucket), clean buckets
+    relax toward the observed distances.
+  * **per-round seed** — every round's wire seed is
+    ``rounds.fold_seed(cfg.seed, round_id)``, so no two rounds ever share a
+    dither draw while a replay of the same round stays bit-stable.
+
+**Round life-cycle state machine** — :class:`Round` walks one round through
+
+    OPEN ──seal──> SEALING ──all admitted resolved──> DRAINED ──> PUBLISHED
+
+  * ``OPEN``      — admitting new clients (intake).
+  * ``SEALING``   — closed to NEW clients at cutover (quorum or deadline,
+    the engine's policy); already-admitted clients keep full service:
+    outstanding chunks, selective retransmits and escalation retries all
+    still land (the overlapping drain).
+  * ``DRAINED``   — every admitted client resolved (accepted /
+    escalation-exhausted / expired by the straggler deadline); the round
+    mean is now determined.
+  * ``PUBLISHED`` — finalized; the mean fed back into the QState.  Rounds
+    publish strictly in round-id order (the anchor chain is sequential).
+
+Transitions are one-way and guarded — an illegal transition raises, so a
+driver bug cannot silently publish a half-drained round.
+
+Lockstep usage (one round at a time, the historical API)::
 
     svc = AggService(ServiceConfig(d=4096, bucket=512, y0=0.5))
     for _ in range(rounds):
@@ -25,10 +50,15 @@ Usage::
         server = svc.make_server()
         ... feed payloads from AggClient(spec, cid, x, anchor=anchor) ...
         mean, stats = svc.end_round(server)
+
+Continuous usage (overlapping rounds) goes through
+:class:`repro.agg.engine.AggEngine`, which drives ``open_round`` /
+``publish_round`` directly off quorum, deadline and straggler events.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Optional
 
 import numpy as np
@@ -66,6 +96,99 @@ class ServiceConfig:
         return flat_size_padded(self.d, self.qcfg) // self.bucket
 
 
+class RoundState(enum.Enum):
+    OPEN = "open"            # admitting new clients
+    SEALING = "sealing"      # cut over: draining admitted clients only
+    DRAINED = "drained"      # every admitted client resolved
+    PUBLISHED = "published"  # mean finalized and fed into the QState
+
+
+class Round:
+    """One aggregation round's life-cycle around its :class:`AggServer`.
+
+    Created by :meth:`AggService.open_round`; the engine (or the legacy
+    lockstep wrappers) drives the transitions.  Timestamps are whatever
+    clock the driver passes (the sim uses virtual seconds) and feed the
+    p50/p99 round-latency and staleness telemetry.
+    """
+
+    def __init__(self, spec: wire.RoundSpec, anchor: np.ndarray,
+                 server: AggServer, anchor_round: int, opened_at: float = 0.0):
+        self.spec = spec
+        self.anchor = anchor              # the server's reference vector
+        self.server = server
+        self.anchor_round = anchor_round  # round whose published mean this
+                                          # round anchors against (0 = warm
+                                          # start / zero anchor)
+        self.state = RoundState.OPEN
+        self.opened_at = opened_at
+        self.sealed_at: Optional[float] = None
+        self.drained_at: Optional[float] = None
+        self.published_at: Optional[float] = None
+        self.mean: Optional[np.ndarray] = None
+        self.stats: Optional[RoundStats] = None
+
+    @property
+    def round_id(self) -> int:
+        return self.spec.round_id
+
+    @property
+    def client_anchor(self) -> "Optional[np.ndarray]":
+        """What clients must encode against (None in unanchored rounds)."""
+        return self.anchor if self.spec.anchored else None
+
+    def _expect(self, state: RoundState) -> None:
+        if self.state is not state:
+            raise RuntimeError(
+                f"round {self.round_id}: illegal transition from "
+                f"{self.state.value} (expected {state.value})")
+
+    def seal(self, now: float = 0.0, next_round_id: int = 0) -> None:
+        """OPEN -> SEALING: stop admitting new clients (cutover).
+
+        ``next_round_id`` is the round now open for admission — late
+        newcomers' non-terminal RETRY responses point there."""
+        self._expect(RoundState.OPEN)
+        self.server.seal(next_round_id)
+        self.state = RoundState.SEALING
+        self.sealed_at = now
+
+    def mark_drained(self, now: float = 0.0) -> None:
+        """SEALING -> DRAINED: every admitted client has an outcome."""
+        self._expect(RoundState.SEALING)
+        if self.server.unresolved:
+            raise RuntimeError(
+                f"round {self.round_id}: {len(self.server.unresolved)} "
+                f"admitted clients still unresolved")
+        self.state = RoundState.DRAINED
+        self.drained_at = now
+
+    def publish(self, now: float = 0.0) -> "tuple[np.ndarray, RoundStats]":
+        """Walk whatever remains of the life-cycle and finalize.
+
+        From OPEN/SEALING this is the forced path (legacy lockstep end, or
+        the engine's drain deadline): still-unresolved stragglers are
+        expired WITHOUT a verdict — their state is dropped, they were never
+        accepted, and they may enroll in a later round — then the mean over
+        the accepted clients is finalized.  Idempotent once PUBLISHED."""
+        if self.state is RoundState.PUBLISHED:
+            return self.mean, self.stats
+        if self.state is RoundState.OPEN:
+            self.seal(now)
+        if self.state is RoundState.SEALING:
+            # staged payloads get decoded (and their senders a verdict)
+            # before anyone is written off as a straggler
+            self.server.drain()
+            for cid in self.server.unresolved:
+                self.server.expire_client(cid)
+            self.mark_drained(now)
+        self._expect(RoundState.DRAINED)
+        self.mean, self.stats = self.server.finalize()
+        self.state = RoundState.PUBLISHED
+        self.published_at = now
+        return self.mean, self.stats
+
+
 class AggService:
     """Coordinates successive anchored rounds of federated DME."""
 
@@ -74,64 +197,94 @@ class AggService:
         previous model state in a federated-learning deployment); None
         starts from the zero anchor."""
         self.cfg = cfg
-        self.round_id = 0
+        self.round_id = 0               # last round OPENED
+        self.published_id = 0           # last round PUBLISHED (in order)
         self.y = np.full((cfg.nb,), cfg.y0, np.float32)
         self.anchor: Optional[np.ndarray] = (
             None if anchor0 is None else np.asarray(anchor0, np.float32))
+        self.anchor_round = 0           # round that produced self.anchor
         self.history: list[RoundStats] = []
-        self._spec: Optional[wire.RoundSpec] = None
+        self._legacy: Optional[Round] = None
 
-    # ----------------------------------------------------------- ROUND API
-    def begin_round(self) -> "tuple[wire.RoundSpec, Optional[np.ndarray]]":
-        """Open round k+1: returns (spec, anchor vector or None).
+    # ------------------------------------------------------ LIFECYCLE API
+    def open_round(self, now: float = 0.0,
+                   max_pending: "int | None" = None) -> Round:
+        """Open round k+1 against the CURRENT QState and return its Round.
 
-        The spec (RoundSpec v2) carries the per-bucket sides derived from
-        the tracked y state and the digest of the anchor — both published
-        out of band to the fleet along with the anchor itself.
-        """
+        May be called while earlier rounds are still sealing/draining (the
+        engine's overlapping intake) — the new round simply anchors against
+        the latest *published* mean, and :attr:`Round.anchor_round` records
+        the lag.  ``max_pending`` bounds the server's pending store
+        (admission control)."""
         self.round_id += 1
         digest = (rounds.anchor_digest(self.anchor)
                   if self.cfg.anchored and self.anchor is not None else 0)
-        self._spec = wire.RoundSpec(
+        spec = wire.RoundSpec(
             round_id=self.round_id, d=self.cfg.d, cfg=self.cfg.qcfg,
-            y0=float(self.y.max()), seed=self.cfg.seed,
+            y0=float(self.y.max()),
+            # per-round seed: fold the round id in (no cross-round dither
+            # reuse; replays of the same round stay bit-stable)
+            seed=rounds.fold_seed(self.cfg.seed, self.round_id),
             max_attempts=self.cfg.max_attempts,
             y_buckets=tuple(float(v) for v in self.y),
             anchor_digest=digest, mtu=self.cfg.mtu)
-        return self._spec, (self.anchor if digest else None)
-
-    def make_server(self) -> AggServer:
-        """The round's server.
-
-        Anchored: decodes in anchor-relative space (the round anchor,
-        digest-checked).  Unanchored: the previous round's mean still serves
-        as the *decode reference* (the historical protocol — clients encode
-        raw x and the reference realizes the distance bound server-side),
-        so an anchored-vs-unanchored comparison isolates the encode-side
-        anchoring.
-        """
-        assert self._spec is not None, "begin_round() first"
+        # anchored: decode in anchor-relative space.  Unanchored: the last
+        # published mean still serves as the *decode reference* (clients
+        # encode raw x; the reference realizes the distance bound server-
+        # side), so anchored-vs-unanchored isolates encode-side anchoring.
         ref = (self.anchor if self.anchor is not None
                else np.zeros((self.cfg.d,), np.float32))
-        return AggServer(self._spec, ref)
+        server = AggServer(spec, ref, max_pending=max_pending)
+        return Round(spec, ref, server, anchor_round=self.anchor_round,
+                     opened_at=now)
 
-    def end_round(self, server: AggServer
-                  ) -> "tuple[np.ndarray, RoundStats]":
-        """Close the round: finalize, advance the QState.
+    def publish_round(self, rnd: Round, now: float = 0.0
+                      ) -> "tuple[np.ndarray, RoundStats]":
+        """Publish a round and advance the QState.
 
         anchor <- the round mean (when anchored); y <- per-bucket update
         from the round's decode telemetry (escalate failed buckets, relax
-        clean ones toward the measured distances).
-        """
-        assert self._spec is not None, "begin_round() first"
-        mean, stats = server.finalize()
+        clean ones toward the measured distances).  Rounds MUST publish in
+        round-id order — the anchor chain is sequential, and an
+        out-of-order publish would silently re-anchor later rounds against
+        an older mean than their spec digest promises."""
+        if rnd.round_id != self.published_id + 1:
+            raise RuntimeError(
+                f"round {rnd.round_id} published out of order (last "
+                f"published {self.published_id})")
+        mean, stats = rnd.publish(now)
         # the published mean always becomes the next reference; with
         # cfg.anchored it is additionally pinned (digest) and subtracted
         # client-side
         self.anchor = np.asarray(mean, np.float32)
+        self.anchor_round = rnd.round_id
         self.y = np.asarray(QS.update_y(
             self.y, stats.fails_b, stats.dist_b, decay=self.cfg.y_decay,
             escalate=self.cfg.y_escalate, floor=self.cfg.y_floor), np.float32)
         self.history.append(stats)
-        self._spec = None
+        self.published_id = rnd.round_id
         return mean, stats
+
+    # ------------------------------------------- LOCKSTEP (one-round) API
+    def begin_round(self) -> "tuple[wire.RoundSpec, Optional[np.ndarray]]":
+        """Open round k+1 lockstep-style: returns (spec, anchor or None).
+
+        The spec carries the per-bucket sides derived from the tracked y
+        state and the digest of the anchor — both published out of band to
+        the fleet along with the anchor itself."""
+        self._legacy = self.open_round()
+        return self._legacy.spec, self._legacy.client_anchor
+
+    def make_server(self) -> AggServer:
+        """The open lockstep round's server."""
+        assert self._legacy is not None, "begin_round() first"
+        return self._legacy.server
+
+    def end_round(self, server: AggServer
+                  ) -> "tuple[np.ndarray, RoundStats]":
+        """Close the lockstep round: finalize, advance the QState."""
+        assert self._legacy is not None, "begin_round() first"
+        assert server is self._legacy.server, \
+            "end_round() got a server from a different round"
+        rnd, self._legacy = self._legacy, None
+        return self.publish_round(rnd)

@@ -24,6 +24,20 @@ failure modes a deployment sees:
   individual chunks and asserts the wire-byte delta of recovery is exactly
   the lost chunks' frames — selective retransmit, never a payload resend.
 
+The continuous-round engine gets its own **open-loop driver**
+(:func:`run_open_loop`): client arrivals are a Poisson process at a
+configured offered load (plus flash crowds and churn) on a virtual clock,
+frames travel with per-frame network delays and loss, and the engine's
+quorum/deadline/straggler policy runs purely off event times — so the
+p50/p99 round latency, rounds/sec and published-mean staleness it reports
+are machine-independent and CI-gateable.  Every published round is
+replayed through a fresh lockstep server over exactly its accepted
+clients and asserted bit-identical (arrival order, chunk interleaving,
+loss and overlapping-round interleaving all provably cannot move the
+mean).  :func:`run_lockstep` runs the SAME arrival trace through the
+legacy one-round-at-a-time coordinator on the same virtual clock — the
+rounds/sec baseline the engine's overlap is measured against.
+
 The attempt-0 fleet is encoded in ONE fused kernel launch
 (:func:`fleet_payloads` stacks all clients into a single flat vector), so a
 512-client round is fast enough for the CI suite; retries go through the
@@ -33,12 +47,15 @@ tests/test_agg.py).
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.agg import rounds
 from repro.agg.client import AggClient
+from repro.agg.engine import AggEngine, EngineConfig, PublishedRound
 from repro.agg.server import AggServer, RoundStats
 from repro.agg.service import AggService, ServiceConfig
 from repro.agg.transport import chunks as C
@@ -487,3 +504,390 @@ def run_rounds(cfg: MultiRoundConfig = MultiRoundConfig()
             anchor_digest=spec.anchor_digest))
         spread *= cfg.concentrate
     return outcomes
+
+
+# ---------------------------------------------------------------------------
+# Open-loop continuous rounds: Poisson arrivals driving the AggEngine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OpenLoopConfig:
+    """Offered-load model + engine policy for the open-loop driver.
+
+    Times are virtual seconds: the sim's clock is an event queue, so the
+    latency/staleness/throughput metrics depend only on the trace and the
+    policy — never on the machine running the sim.
+    """
+    d: int = 256
+    q: int = 16
+    bucket: int = 64
+    y0: float = 0.5
+    mtu: int = 64                  # small MTU: payloads chunk into ~3 frames
+    max_attempts: int = 4
+    # offered load
+    rate: float = 250.0            # Poisson arrivals per virtual second
+    duration: float = 0.5          # arrival window
+    flash_at: "tuple[float, ...]" = (0.25,)   # flash-crowd instants
+    flash_size: int = 32           # simultaneous arrivals per flash
+    churn_frac: float = 0.06      # clients that vanish after one chunk
+    straggle_frac: float = 0.12   # clients whose chunks trickle in late
+    adversarial: int = 3          # out-of-bound inputs (escalate to recover)
+    spread: float = 0.02
+    base_scale: float = 2.0
+    # network model
+    net_delay: float = 0.004       # one-way frame latency scale
+    straggle_delay: float = 0.12   # extra per-chunk delay for stragglers
+    loss: float = 0.03             # per-frame loss probability
+    nudge_delay: float = 0.06      # client-side full-resend timer (covers
+                                   # the all-chunks-lost corner)
+    # engine policy
+    quorum: int = 24
+    round_deadline: float = 0.08
+    straggler_deadline: float = 0.04
+    drain_deadline: float = 0.2
+    max_resends: int = 2
+    max_pending: "int | None" = None
+    max_live_rounds: int = 4
+    tick: float = 0.01             # advance() cadence between arrivals
+    max_enrolls: int = 3           # per-client re-enrollment budget after
+                                   # non-terminal RETRYs
+    seed: int = 0
+
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(
+            quorum=self.quorum, round_deadline=self.round_deadline,
+            min_clients=1, straggler_deadline=self.straggler_deadline,
+            max_resends=self.max_resends, drain_deadline=self.drain_deadline,
+            max_pending=self.max_pending,
+            max_live_rounds=self.max_live_rounds)
+
+    def service_config(self) -> ServiceConfig:
+        return ServiceConfig(d=self.d, q=self.q, bucket=self.bucket,
+                             y0=self.y0, seed=self.seed, anchored=True,
+                             mtu=self.mtu, max_attempts=self.max_attempts)
+
+
+@dataclasses.dataclass
+class _Trace:
+    """One offered-load realization, shared by the engine and lockstep
+    drivers so their throughput is compared on identical traffic."""
+    xs: np.ndarray                       # (N, d) client vectors by cid
+    arrivals: "list[tuple[float, int]]"  # (t, cid), time-sorted
+    straggler: frozenset
+    churn: frozenset
+    adversarial: frozenset
+
+
+def _make_trace(cfg: OpenLoopConfig) -> _Trace:
+    rng = np.random.RandomState(cfg.seed)
+    times = []
+    t = float(rng.exponential(1.0 / cfg.rate))
+    while t < cfg.duration:
+        times.append(t)
+        t += float(rng.exponential(1.0 / cfg.rate))
+    for t0 in cfg.flash_at:
+        # a flash crowd: flash_size arrivals inside ~one network delay
+        times.extend(t0 + cfg.net_delay * rng.rand(cfg.flash_size))
+    times.sort()
+    n = len(times)
+    base = cfg.base_scale * rng.randn(cfg.d).astype(np.float32)
+    xs = base[None] + cfg.spread * rng.randn(n, cfg.d).astype(np.float32)
+    perm = rng.permutation(n)
+    adv = frozenset(int(i) for i in perm[:cfg.adversarial])
+    rest = [int(i) for i in perm[cfg.adversarial:]]
+    n_churn = int(round(cfg.churn_frac * n))
+    n_strag = int(round(cfg.straggle_frac * n))
+    churn = frozenset(rest[:n_churn])
+    strag = frozenset(rest[n_churn:n_churn + n_strag])
+    for i in adv:
+        # past the attempt-0 margin, recoverable by one escalation
+        xs[i] += (10.0 * cfg.y0
+                  * rng.choice([-1.0, 1.0], cfg.d).astype(np.float32))
+    return _Trace(xs=xs, arrivals=[(float(t), i) for i, t in enumerate(times)],
+                  straggler=strag, churn=churn, adversarial=adv)
+
+
+@dataclasses.dataclass
+class OpenLoopReport:
+    """Virtual-clock outcome of one open-loop run (all times in virtual
+    seconds — machine-independent, CI-gateable)."""
+    rounds: int                   # rounds published
+    clients_arrived: int
+    accepted_total: int
+    expired_total: int            # straggler-deadline expiries
+    retried_total: int            # non-terminal RETRY responses clients saw
+    resends_total: int            # STATUS_RESEND responses sent
+    max_live_rounds: int          # peak concurrently-live rounds observed
+    p50_latency: float            # open -> published round latency
+    p99_latency: float
+    mean_staleness: float         # anchor age at publish, averaged
+    max_staleness_rounds: int     # worst anchor lag in rounds
+    makespan: float               # first open -> last publish
+    rounds_per_s: float
+    published: "list[PublishedRound]"
+
+
+def replay_published_round(trace: _Trace, pr: PublishedRound) -> np.ndarray:
+    """Re-aggregate a published round lockstep-style over EXACTLY its
+    accepted clients (sorted ids, in-order chunks, no loss) and assert the
+    mean is bit-identical — the engine's arrival order, chunk interleaving,
+    loss pattern and overlapping-round interleaving provably did not move
+    the published mean."""
+    ref = (pr.anchor if pr.anchor is not None
+           else np.zeros((pr.spec.d,), np.float32))
+    server = AggServer(pr.spec, ref)
+    clis = {}
+    for cid in sorted(pr.accepted):
+        c = AggClient(pr.spec, cid, trace.xs[cid], anchor=pr.anchor)
+        clis[cid] = c
+        for f in c.frames():
+            server.receive(f)
+    resps = server.drain()
+    while True:
+        retries = []
+        for rb in resps:
+            r = wire.decode_response(rb)
+            if r.status not in (wire.STATUS_NACK, wire.STATUS_RESEND):
+                continue
+            retries.extend(clis[r.client_id].handle_response(rb))
+        if not retries:
+            break
+        for f in retries:
+            server.receive(f)
+        resps = server.drain()
+    mean, _ = server.finalize()
+    assert server.accepted_clients == pr.accepted, \
+        (server.accepted_clients, pr.accepted)
+    assert np.array_equal(mean, pr.mean), \
+        f"round {pr.round_id}: engine mean != lockstep replay"
+    return mean
+
+
+def run_open_loop(cfg: OpenLoopConfig = OpenLoopConfig(),
+                  check_parity: bool = True) -> OpenLoopReport:
+    """Drive the continuous-round engine with open-loop Poisson arrivals.
+
+    Clients enroll against whatever round is open when they arrive, their
+    chunk frames travel with per-frame delays (stragglers trickle), frames
+    are lost at the configured rate, and every response is routed back to
+    the sender's protocol object — NACK escalation, selective retransmit
+    and non-terminal RETRY re-enrollment all run over the real bytes.  The
+    engine's cutover/straggler/publish policy fires purely off event
+    times.  Asserts, for every published round, bit-identical replay
+    parity, and that no benign client ever drew a terminal verdict.
+    """
+    trace = _make_trace(cfg)
+    svc = AggService(cfg.service_config())
+    eng = AggEngine(svc, cfg.engine_config(), now=0.0)
+    rng = np.random.RandomState(cfg.seed + 1)
+    heap: list = []
+    seq = itertools.count()
+
+    def push(t: float, kind: str, data) -> None:
+        heapq.heappush(heap, (t, next(seq), kind, data))
+
+    for t, cid in trace.arrivals:
+        push(t, "enroll", cid)
+    last_arrival = trace.arrivals[-1][0]
+    horizon = (last_arrival + cfg.round_deadline + cfg.drain_deadline
+               + cfg.straggler_deadline * (cfg.max_resends + 2) + 0.2)
+    k = 1
+    while k * cfg.tick < horizon:           # bounded tick train: advance()
+        push(k * cfg.tick, "tick", None)    # fires even in arrival gaps
+        k += 1
+
+    active: "dict[int, AggClient]" = {}
+    enrolls: "dict[int, int]" = {}
+    retried_seen = 0
+    benign_rejects = 0
+
+    def send_frames(t: float, cid: int, frs: "list[bytes]") -> None:
+        extra = cfg.straggle_delay if cid in trace.straggler else 0.0
+        for kf, f in enumerate(frs):
+            dt = cfg.net_delay * (0.5 + rng.rand()) + extra * (kf + rng.rand())
+            push(t + dt, "frame", f)
+
+    def enroll(t: float, cid: int) -> None:
+        if enrolls.get(cid, 0) >= cfg.max_enrolls:
+            return
+        enrolls[cid] = enrolls.get(cid, 0) + 1
+        rnd = eng.open_round
+        c = AggClient(rnd.spec, cid, trace.xs[cid], anchor=rnd.client_anchor)
+        active[cid] = c
+        frs = c.frames()
+        if cid in trace.churn:
+            frs = frs[:1]                   # vanish after the first chunk
+        send_frames(t, cid, frs)
+        if cid not in trace.churn:
+            push(t + cfg.nudge_delay, "nudge", cid)
+
+    def route(t: float, resps: "list[bytes]") -> None:
+        nonlocal retried_seen, benign_rejects
+        for rb in resps:
+            r = wire.decode_response(rb)
+            c = active.get(r.client_id)
+            if c is None or r.round_id != c.spec.round_id:
+                continue                    # stale round: client moved on
+            if r.client_id in trace.churn:
+                continue                    # churned: never responds
+            if r.status == wire.STATUS_RETRY:
+                retried_seen += 1
+            if (r.status == wire.STATUS_REJECT
+                    and r.client_id not in trace.adversarial):
+                benign_rejects += 1
+            out = c.handle_response(rb)
+            if out:
+                send_frames(t, r.client_id, out)
+            if c.retry_round is not None:
+                # non-terminal admission verdict: back off one tick, then
+                # re-enroll wherever admission is open by then
+                c.retry_round = None
+                push(t + cfg.tick, "enroll", r.client_id)
+
+    t_last = 0.0
+    while heap:
+        t, _, kind, data = heapq.heappop(heap)
+        t_last = max(t_last, t)
+        if kind == "enroll":
+            enroll(t, data)
+        elif kind == "frame":
+            if rng.rand() < cfg.loss:
+                continue                    # lost on the wire
+            route(t, eng.receive(data, t))
+        elif kind == "tick":
+            route(t, eng.advance(t))
+        elif kind == "nudge":
+            c = active.get(data)
+            if (c is not None and not c.acked and not c.gave_up
+                    and c.retry_round is None):
+                send_frames(t, data, c.frames(c.attempt))
+    t_end = max(horizon, t_last) + cfg.tick
+    eng.advance(t_end)
+    eng.flush(t_end)
+
+    assert benign_rejects == 0, \
+        f"{benign_rejects} terminal verdicts reached benign clients"
+    for cid, c in active.items():
+        if cid not in trace.adversarial:
+            assert not c.gave_up, f"benign client {cid} gave up"
+    if check_parity:
+        for pr in eng.published:
+            replay_published_round(trace, pr)
+
+    pubs = eng.published
+    lat = np.array([pr.latency for pr in pubs]) if pubs else np.zeros(1)
+    stale = np.array([pr.staleness for pr in pubs]) if pubs else np.zeros(1)
+    makespan = (pubs[-1].published_at - pubs[0].opened_at) if pubs else 0.0
+    return OpenLoopReport(
+        rounds=len(pubs), clients_arrived=len(trace.arrivals),
+        accepted_total=sum(len(pr.accepted) for pr in pubs),
+        expired_total=sum(pr.stats.expired for pr in pubs),
+        retried_total=(retried_seen
+                       + sum(pr.stats.retried for pr in pubs)),
+        resends_total=sum(pr.stats.resends_sent for pr in pubs),
+        max_live_rounds=eng.max_live_seen,
+        p50_latency=float(np.percentile(lat, 50)),
+        p99_latency=float(np.percentile(lat, 99)),
+        mean_staleness=float(stale.mean()),
+        max_staleness_rounds=max((pr.staleness_rounds for pr in pubs),
+                                 default=0),
+        makespan=float(makespan),
+        rounds_per_s=(len(pubs) / makespan if makespan > 0 else 0.0),
+        published=pubs)
+
+
+@dataclasses.dataclass
+class LockstepReport:
+    """The same offered load through the one-round-at-a-time coordinator."""
+    rounds: int
+    makespan: float
+    rounds_per_s: float
+    mean_round_time: float
+    queue_delay_max: float     # worst arrival-to-admission wait
+
+
+def run_lockstep(cfg: OpenLoopConfig = OpenLoopConfig()) -> LockstepReport:
+    """The lockstep baseline over the SAME arrival trace, same policy knobs.
+
+    One round at a time: while round k drains, arrivals QUEUE — nobody can
+    enroll until k publishes (the structural cost the engine's overlapping
+    intake removes).  The round seals at quorum-or-deadline like the
+    engine, but then must wait for its slowest enrolled client — a churned
+    client costs the full ``drain_deadline`` timeout with every other
+    client's admission blocked behind it.  Aggregation itself runs the real
+    byte protocol (lossless in-order delivery; delivery *times* model the
+    same per-chunk network delays as the open-loop driver), so the two
+    drivers' rounds/sec differ by coordination structure only.
+    """
+    trace = _make_trace(cfg)
+    svc = AggService(cfg.service_config())
+    arrivals = trace.arrivals
+    n = len(arrivals)
+    t_of = {cid: t for t, cid in arrivals}
+    i = 0
+    t = 0.0
+    round_times: "list[float]" = []
+    queue_delay_max = 0.0
+    nf = None
+    while i < n:
+        t_open = max(t, arrivals[i][0])
+        roster = []
+        j = i
+        while (j < n and len(roster) < cfg.quorum
+               and arrivals[j][0] <= t_open + cfg.round_deadline):
+            roster.append(arrivals[j][1])
+            j += 1
+        t_seal = (max(t_open, arrivals[j - 1][0]) if len(roster) == cfg.quorum
+                  else t_open + cfg.round_deadline)
+        spec, anchor = svc.begin_round()
+        server = svc.make_server()
+        if nf is None:
+            nf = spec.n_chunks()
+        # virtual drain time: every enrolled client must land (or time out)
+        t_drain = t_seal
+        for cid in roster:
+            queue_delay_max = max(queue_delay_max, t_open - t_of[cid])
+            if cid in trace.churn:
+                done = t_seal + cfg.drain_deadline     # waited out in full
+            else:
+                done = t_of[cid] + nf * cfg.net_delay
+                if cid in trace.straggler:
+                    done += nf * cfg.straggle_delay
+                if cid in trace.adversarial:
+                    # one escalation handshake: NACK out, full resend back
+                    done += 2 * cfg.net_delay + nf * cfg.net_delay
+                done = min(done, t_seal + cfg.drain_deadline)
+            t_drain = max(t_drain, done)
+        # the actual aggregation (instantaneous on the virtual clock —
+        # compute cost is measured separately, in wall time, by the bench)
+        clis: "dict[int, AggClient]" = {}
+        for cid in sorted(roster):
+            if cid in trace.churn:
+                continue
+            c = AggClient(spec, cid, trace.xs[cid], anchor=anchor)
+            clis[cid] = c
+            for f in c.frames():
+                server.receive(f)
+        resps = server.drain()
+        while True:
+            retries = []
+            for rb in resps:
+                r = wire.decode_response(rb)
+                if r.status not in (wire.STATUS_NACK, wire.STATUS_RESEND):
+                    continue
+                retries.extend(clis[r.client_id].handle_response(rb))
+            if not retries:
+                break
+            for f in retries:
+                server.receive(f)
+            resps = server.drain()
+        svc.end_round(server)
+        round_times.append(t_drain - t_open)
+        t = t_drain
+        i = j
+    makespan = t - arrivals[0][0] if round_times else 0.0
+    return LockstepReport(
+        rounds=len(round_times), makespan=float(makespan),
+        rounds_per_s=(len(round_times) / makespan if makespan > 0 else 0.0),
+        mean_round_time=float(np.mean(round_times)) if round_times else 0.0,
+        queue_delay_max=float(queue_delay_max))

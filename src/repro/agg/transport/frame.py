@@ -98,6 +98,15 @@ STATUS_ACK = 1        # payload decoded and accumulated
 STATUS_NACK = 2       # decode failure detected: retry at (attempt+1, q_next)
 STATUS_REJECT = 3     # malformed/mismatched payload: not retryable as-is
 STATUS_RESEND = 4     # reassembly incomplete: retransmit the missing chunks
+STATUS_RETRY = 5      # NON-terminal "not now": the round is sealed to new
+                      # clients, the pending store is full, or the frame's
+                      # round is no longer (or not yet) live.  round_id
+                      # echoes the offending frame's round so the sender's
+                      # protocol object sees it; q_next carries the round id
+                      # currently open for admission (0 = unknown) — re-send
+                      # after backoff, or re-enroll there.  The response
+                      # wire format is unchanged from v3; the status value
+                      # is additive.
 
 
 class WireError(ValueError):
@@ -318,6 +327,26 @@ def encode_frame(h: FrameHeader, chunk: bytes) -> bytes:
     head0 = _pack_header(h)
     crc = zlib.crc32(chunk, zlib.crc32(head0))
     return head0 + struct.pack("<I", crc) + chunk
+
+
+_PEEK = struct.Struct("<4sHHII")      # magic | version | flags | round | cid
+
+
+def peek_route(data: bytes) -> "tuple[int, int] | None":
+    """Cheap (round_id, client_id) peek for event-loop routing — no CRC.
+
+    Returns None when the prefix cannot even be a v3 frame (short / bad
+    magic / wrong version); the caller then falls through to the full
+    decoder, which produces the proper wire REJECT.  A corrupted-but-
+    plausible round_id merely routes the frame to a server that will fail
+    its CRC — routing never needs to be trusted, only cheap.
+    """
+    if len(data) < _PEEK.size:
+        return None
+    magic, version, _, round_id, client_id = _PEEK.unpack_from(data, 0)
+    if magic != MAGIC_PAYLOAD or version != WIRE_VERSION:
+        return None
+    return round_id, client_id
 
 
 def decode_frame(data: bytes) -> "tuple[FrameHeader, bytes]":

@@ -198,6 +198,11 @@ class Reassembler:
         return {cid: (g[0].header.attempt, self.missing(cid))
                 for cid, g in sorted(self._groups.items())}
 
+    def open_clients(self) -> frozenset:
+        """Client ids with at least one open (incomplete) stream — the
+        reassembly half of the server's bounded pending store."""
+        return frozenset(self._groups)
+
     def discard(self, client_id: int) -> None:
         """Drop a client's open streams (accepted / gave-up clients)."""
         for s in list(self._groups.get(client_id, [])):

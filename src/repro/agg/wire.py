@@ -17,11 +17,11 @@ code should import :mod:`repro.agg.transport` directly.
 from repro.agg.transport.frame import (  # noqa: F401
     MAGIC_PAYLOAD, MAGIC_RESPONSE, WIRE_VERSION, Q_CAP, FLAG_ROTATE,
     FLAG_ANCHORED, FRAME_HEADER_BYTES, STATUS_QUEUED, STATUS_ACK,
-    STATUS_NACK, STATUS_REJECT, STATUS_RESEND, WireError,
+    STATUS_NACK, STATUS_REJECT, STATUS_RESEND, STATUS_RETRY, WireError,
     TruncatedPayloadError, BadMagicError, VersionMismatchError,
     CorruptPayloadError, HeaderMismatchError, RoundSpec, FrameHeader,
     Payload, Response, q_at_attempt, y_at_attempt, y_buckets_at_attempt,
-    payload_bytes, encode_frame, decode_frame, payload_from_body,
+    payload_bytes, encode_frame, decode_frame, peek_route, payload_from_body,
     build_payload, encode_payload, decode_payload, check_frame_against_spec,
     check_against_spec, check_sides_against_spec, encode_response,
     decode_response)
@@ -30,6 +30,7 @@ __all__ = [
     "MAGIC_PAYLOAD", "MAGIC_RESPONSE", "WIRE_VERSION", "Q_CAP",
     "FLAG_ROTATE", "FLAG_ANCHORED", "FRAME_HEADER_BYTES", "STATUS_QUEUED",
     "STATUS_ACK", "STATUS_NACK", "STATUS_REJECT", "STATUS_RESEND",
+    "STATUS_RETRY", "peek_route",
     "WireError", "TruncatedPayloadError", "BadMagicError",
     "VersionMismatchError", "CorruptPayloadError", "HeaderMismatchError",
     "RoundSpec", "FrameHeader", "Payload", "Response", "q_at_attempt",

@@ -1,0 +1,496 @@
+"""Event-driven continuous-round engine (ISSUE 6): round life-cycle state
+machine guards, per-round seed folding, quorum/deadline cutover, the
+round-boundary races (late straggler vs late newcomer, future-round frames,
+duplicates spanning rounds), admission backpressure, straggler expiry, the
+open-loop Poisson sim with replay parity, the engine-vs-lockstep throughput
+ordering, and the 8-device star-collective bit-parity of an engine-published
+round (subprocess, like tests/test_agg.py)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.agg import rounds, sim, wire
+from repro.agg.client import AggClient
+from repro.agg.engine import AggEngine, EngineConfig
+from repro.agg.server import AggServer
+from repro.agg.service import AggService, RoundState, ServiceConfig
+
+
+D, BUCKET = 256, 64
+
+
+def _svc(**kw):
+    base = dict(d=D, bucket=BUCKET, y0=1.0, seed=3, anchored=True)
+    base.update(kw)
+    return AggService(ServiceConfig(**base))
+
+
+def _eng(svc=None, **kw):
+    svc = svc or _svc()
+    base = dict(quorum=2, round_deadline=1.0, straggler_deadline=0.2,
+                max_resends=1, drain_deadline=5.0, max_live_rounds=3)
+    base.update(kw)
+    return AggEngine(svc, EngineConfig(**base), now=0.0)
+
+
+def _xs(n, seed=0, scale=0.1):
+    return scale * np.random.RandomState(seed).randn(n, D).astype(np.float32)
+
+
+def _client(rnd, cid, x):
+    return AggClient(rnd.spec, cid, x, anchor=rnd.client_anchor)
+
+
+def _replay(spec, anchor, xs_by_cid) -> np.ndarray:
+    """Lockstep reference: same accepted set, sorted order, no engine."""
+    ref = anchor if anchor is not None else np.zeros((spec.d,), np.float32)
+    server = AggServer(spec, ref)
+    for cid in sorted(xs_by_cid):
+        for f in AggClient(spec, cid, xs_by_cid[cid], anchor=anchor).frames():
+            server.receive(f)
+    mean, _ = server.finalize()
+    assert server.accepted_clients == frozenset(xs_by_cid)
+    return mean
+
+
+# ---------------------------------------------------------------------------
+# Per-round seed fold (satellite: no cross-round dither reuse)
+# ---------------------------------------------------------------------------
+
+def test_fold_seed_no_reuse_and_replay_stable():
+    """Consecutive rounds draw DIFFERENT wire seeds (and dithers); replaying
+    the same (service seed, round id) is bit-stable."""
+    assert rounds.fold_seed(3, 1) != rounds.fold_seed(3, 2)
+    assert rounds.fold_seed(3, 1) == rounds.fold_seed(3, 1)
+    assert rounds.fold_seed(3, 1) != rounds.fold_seed(4, 1)
+    assert 0 <= rounds.fold_seed(2**32 - 1, 2**32 - 1) < 2**31
+    svc = _svc()
+    xs = _xs(2)
+    specs = []
+    for _ in range(3):
+        rnd = svc.open_round()
+        specs.append(rnd.spec)
+        for cid in (0, 1):
+            for f in _client(rnd, cid, xs[cid]).frames():
+                rnd.server.receive(f)
+        svc.publish_round(rnd)
+    assert len({s.seed for s in specs}) == 3
+    for a, b in zip(specs, specs[1:]):
+        assert not np.array_equal(np.asarray(rounds.dither(a)),
+                                  np.asarray(rounds.dither(b)))
+    # replay: a fresh service with the same config re-derives the same
+    # per-round seeds (and so the same dithers), bit for bit
+    svc2 = _svc()
+    for s in specs:
+        rnd = svc2.open_round()
+        assert rnd.spec.seed == s.seed == rounds.fold_seed(3, s.round_id)
+        assert np.array_equal(np.asarray(rounds.dither(rnd.spec)),
+                              np.asarray(rounds.dither(s)))
+        svc2.publish_round(rnd)
+
+
+# ---------------------------------------------------------------------------
+# Round life-cycle state machine
+# ---------------------------------------------------------------------------
+
+def test_round_state_machine_guards():
+    svc = _svc()
+    rnd = svc.open_round()
+    assert rnd.state is RoundState.OPEN
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        rnd.mark_drained()                 # OPEN -> DRAINED is not a step
+    rnd.seal(now=1.0, next_round_id=2)
+    assert rnd.state is RoundState.SEALING and rnd.server.sealed
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        rnd.seal()                         # seal is one-way
+    rnd.mark_drained(now=2.0)              # nobody admitted: trivially drained
+    mean, stats = rnd.publish(now=3.0)
+    assert rnd.state is RoundState.PUBLISHED
+    m2, _ = rnd.publish(now=9.0)           # idempotent, timestamps keep
+    assert np.array_equal(mean, m2) and rnd.published_at == 3.0
+
+
+def test_round_publish_forces_unresolved_expiry():
+    """publish() from SEALING expires stragglers rather than raising, while
+    mark_drained() (the engine's clean path) refuses to lie."""
+    svc = _svc()
+    rnd = svc.open_round()
+    x = _xs(1)[0]
+    rnd.server.receive(_client(rnd, 7, x).frames()[0])  # staged, undrained
+    rnd.seal()
+    with pytest.raises(RuntimeError, match="unresolved"):
+        rnd.mark_drained()
+    rnd.publish()
+    # the staged payload was decodable: publish drains before expiring
+    assert rnd.server.accepted_clients == frozenset({7})
+
+
+def test_service_rejects_out_of_order_publish():
+    svc = _svc()
+    r1, r2 = svc.open_round(), svc.open_round()
+    assert (r1.round_id, r2.round_id) == (1, 2)
+    with pytest.raises(RuntimeError, match="out of order"):
+        svc.publish_round(r2)
+    svc.publish_round(r1)
+    svc.publish_round(r2)
+    assert svc.published_id == 2
+
+
+def test_anchor_lag_recorded_for_overlapping_rounds():
+    """Round k+1 opened while round k drains anchors against round k-1's
+    mean — the staleness the engine reports."""
+    svc = _svc()
+    r1 = svc.open_round()
+    r2 = svc.open_round()          # overlapping: r1 not yet published
+    assert r2.anchor_round == 0    # warm start; r1's mean not available
+    svc.publish_round(r1)
+    r3 = svc.open_round()
+    assert r3.anchor_round == 1
+
+
+# ---------------------------------------------------------------------------
+# Cutover: quorum-or-deadline
+# ---------------------------------------------------------------------------
+
+def test_quorum_cutover_before_deadline():
+    """Quorum met long before the deadline: the round seals immediately —
+    the deadline is a backstop, not a wait."""
+    eng = _eng()                   # quorum=2, deadline=1.0
+    xs = _xs(2)
+    r1 = eng.open_round
+    for cid in (0, 1):
+        eng.receive(_client(r1, cid, xs[cid]).payload(), now=0.1)
+    assert r1.state is RoundState.PUBLISHED and r1.sealed_at == 0.1
+    assert eng.open_round.round_id == 2
+    pr = eng.published[0]
+    assert pr.accepted == frozenset({0, 1})
+    assert np.array_equal(pr.mean, _replay(pr.spec, pr.anchor,
+                                           {0: xs[0], 1: xs[1]}))
+
+
+def test_deadline_cutover_and_empty_round_rearm():
+    eng = _eng(quorum=5)
+    xs = _xs(1)
+    r1 = eng.open_round
+    # empty round at the deadline: re-arms instead of publishing nothing
+    eng.advance(now=1.5)
+    assert r1.state is RoundState.OPEN and r1.opened_at == 1.5
+    eng.receive(_client(r1, 0, xs[0]).payload(), now=1.6)
+    assert r1.state is RoundState.OPEN          # quorum not met, no deadline
+    eng.advance(now=2.6)                        # deadline with 1 >= min_clients
+    assert r1.state is RoundState.PUBLISHED
+    assert eng.published[0].accepted == frozenset({0})
+
+
+# ---------------------------------------------------------------------------
+# Round-boundary races (satellite 3)
+# ---------------------------------------------------------------------------
+
+def _chunked_eng(**kw):
+    svc = _svc(mtu=100)            # 144B body -> 2 chunks
+    return svc, _eng(svc, **kw)
+
+
+def test_race_admitted_straggler_lands_after_cutover():
+    """A client admitted before the seal whose last chunk arrives AFTER the
+    cutover is still accepted — and the published mean (bit-identical to
+    the lockstep replay) includes it."""
+    svc, eng = _chunked_eng(quorum=3)
+    xs = _xs(3)
+    r1 = eng.open_round
+    clients = {cid: _client(r1, cid, xs[cid]) for cid in range(3)}
+    for cid in (0, 1):
+        for f in clients[cid].frames():
+            eng.receive(f, now=0.1)
+    # client 2: first chunk only -> admitted (quorum!), second chunk late
+    f0, f1 = clients[2].frames()
+    eng.receive(f0, now=0.1)       # 3rd admission: quorum -> cutover
+    assert r1.state is RoundState.SEALING
+    assert r1.server.unresolved == frozenset({2})
+    eng.receive(f1, now=0.15)      # lands in the SEALED round
+    eng.advance(now=0.16)          # drain + in-order publish
+    assert r1.state is RoundState.PUBLISHED
+    pr = eng.published[0]
+    assert pr.accepted == frozenset({0, 1, 2})
+    assert np.array_equal(pr.mean, _replay(pr.spec, pr.anchor,
+                                           {c: xs[c] for c in range(3)}))
+
+
+def test_race_newcomer_after_cutover_gets_nonterminal_retry():
+    """A NEW client's frame for round k arriving after the cutover draws
+    STATUS_RETRY pointing at the open round — never a terminal verdict."""
+    eng = _eng()
+    xs = _xs(3)
+    r1 = eng.open_round
+    for cid in (0, 1):
+        eng.receive(_client(r1, cid, xs[cid]).payload(), now=0.1)
+    # round 1 published at quorum; round 2 is open.  A newcomer still
+    # addressing round 1 hits the engine-level unknown-round path:
+    late = _client(r1, 9, xs[2])
+    out = eng.receive(late.payload(), now=0.2)
+    r = wire.decode_response(out[-1])
+    assert r.status == wire.STATUS_RETRY
+    assert (r.round_id, r.client_id, r.q_next) == (1, 9, 2)
+    assert late.handle_response(out[-1]) == []
+    assert not late.gave_up and late.retry_round == 2
+    # re-enrolling in the named round succeeds
+    r2 = eng.open_round
+    eng.receive(_client(r2, 9, xs[2]).payload(), now=0.3)
+    assert 9 in r2.server.unresolved
+    # sealed-but-live round, same race: server-level RETRY, same contract
+    svc2, eng2 = _chunked_eng(quorum=2)
+    r1b = eng2.open_round
+    c0, c1 = _client(r1b, 0, xs[0]), _client(r1b, 1, xs[1])
+    eng2.receive(c0.frames()[0], now=0.1)
+    eng2.receive(c1.frames()[0], now=0.1)      # quorum -> seal; both unresolved
+    assert r1b.state is RoundState.SEALING
+    out = eng2.receive(_client(r1b, 5, xs[2]).frames()[0], now=0.12)
+    r = wire.decode_response(out[-1])
+    assert r.status == wire.STATUS_RETRY and r.q_next == 2
+    assert r1b.server.stats.retried == 1
+
+
+def test_race_future_round_frame_before_open():
+    """A frame addressed to round k+1 before that round exists draws a
+    non-terminal RETRY naming the currently-open round."""
+    import dataclasses
+    eng = _eng()
+    xs = _xs(1)
+    r1 = eng.open_round
+    future_spec = dataclasses.replace(r1.spec, round_id=5)
+    c = AggClient(future_spec, 3, xs[0], anchor=r1.client_anchor)
+    out = eng.receive(c.payload(), now=0.1)
+    r = wire.decode_response(out[-1])
+    assert r.status == wire.STATUS_RETRY
+    assert (r.round_id, r.q_next) == (5, 1)
+    assert eng.retried_unknown_round == 1
+    assert not c.gave_up
+    assert r1.server.admitted_count == 0       # never touched round 1
+
+
+def test_race_duplicate_client_spanning_two_rounds():
+    """Duplicate of an accepted payload: while its round is still live ->
+    idempotent ACK; after its round published -> non-terminal RETRY.  The
+    published mean counts the client exactly once either way."""
+    svc, eng = _chunked_eng(quorum=3)
+    xs = _xs(3)
+    r1 = eng.open_round
+    clients = {cid: _client(r1, cid, xs[cid]) for cid in range(3)}
+    for cid in (0, 1):
+        for f in clients[cid].frames():
+            eng.receive(f, now=0.1)
+    eng.receive(clients[2].frames()[0], now=0.1)   # quorum; 2 unresolved
+    eng.advance(now=0.11)                          # drain: 0,1 accepted
+    assert r1.state is RoundState.SEALING
+    # duplicate of accepted client 0 while round 1 still live (sealing)
+    out = eng.receive(clients[0].frames()[0], now=0.12)
+    r = wire.decode_response(out[-1])
+    assert (r.status, r.round_id) == (wire.STATUS_ACK, 1)
+    eng.receive(clients[2].frames()[1], now=0.15)
+    eng.advance(now=0.16)
+    assert r1.state is RoundState.PUBLISHED
+    # duplicate of the same client after its round published
+    out = eng.receive(clients[0].frames()[0], now=0.2)
+    r = wire.decode_response(out[-1])
+    assert r.status == wire.STATUS_RETRY and r.q_next == 2
+    pr = eng.published[0]
+    assert pr.accepted == frozenset({0, 1, 2})     # counted exactly once
+    assert np.array_equal(pr.mean, _replay(pr.spec, pr.anchor,
+                                           {c: xs[c] for c in range(3)}))
+
+
+def test_race_quorum_met_deadline_unexpired_ordering():
+    """Quorum and deadline racing: whichever fires first seals the round,
+    and the other firing later is a no-op on the already-sealed round."""
+    eng = _eng(quorum=2, round_deadline=1.0)
+    xs = _xs(2)
+    r1 = eng.open_round
+    eng.receive(_client(r1, 0, xs[0]).payload(), now=0.9)
+    eng.receive(_client(r1, 1, xs[1]).payload(), now=0.95)  # quorum seals
+    assert r1.sealed_at == 0.95
+    eng.advance(now=1.05)           # round-1 deadline passes post-publish:
+    eng.advance(now=1.2)            # must not re-seal / double-publish
+    assert eng.published[0].round_id == 1 and len(eng.published) == 1
+    assert eng.open_round.round_id == 2
+
+
+# ---------------------------------------------------------------------------
+# Admission control: backpressure + straggler expiry
+# ---------------------------------------------------------------------------
+
+def test_backpressure_pending_store_cap_is_nonterminal():
+    """max_pending bounds distinct clients with buffered state; the frame
+    past the cap draws RETRY naming the SAME round (still open), and the
+    client is admitted once the store drains — no verdict anywhere."""
+    svc = _svc(mtu=100)
+    spec_rnd = svc.open_round(max_pending=1)
+    server = spec_rnd.server
+    xs = _xs(2)
+    a = AggClient(spec_rnd.spec, 0, xs[0], anchor=spec_rnd.client_anchor)
+    b = AggClient(spec_rnd.spec, 1, xs[1], anchor=spec_rnd.client_anchor)
+    server.receive(a.frames()[0])              # open stream: occupancy 1
+    r = wire.decode_response(server.receive(b.frames()[0]))
+    assert r.status == wire.STATUS_RETRY
+    assert r.q_next == spec_rnd.round_id       # same round: back off, retry
+    assert server.stats.retried == 1 and server.admitted_count == 1
+    server.receive(a.frames()[1])              # A completes -> staged
+    server.drain()                             # A accepted -> occupancy 0
+    for f in b.frames():
+        r = wire.decode_response(server.receive(f))
+        assert r.status != wire.STATUS_RETRY
+    server.drain()
+    assert server.accepted_clients == frozenset({0, 1})
+
+
+def test_straggler_expiry_feeds_resend_budget_then_drops():
+    """An admitted client that stops mid-payload: each straggler deadline
+    taps the RESEND budget (targeted retransmit request), and once spent
+    the client is EXPIRED — no terminal verdict, round publishes without
+    it, and the client can re-enroll in the next round."""
+    svc, eng = _chunked_eng(quorum=2, straggler_deadline=0.2, max_resends=1)
+    xs = _xs(2)
+    r1 = eng.open_round
+    good = _client(r1, 0, xs[0])
+    lost = _client(r1, 1, xs[1])
+    for f in good.frames():
+        eng.receive(f, now=0.1)
+    eng.receive(lost.frames()[0], now=0.1)     # quorum -> seal; 1 unresolved
+    assert r1.server.unresolved == frozenset({1})
+    out = eng.advance(now=0.35)                # 1st deadline: RESEND budget
+    resends = [wire.decode_response(o) for o in out
+               if wire.decode_response(o).status == wire.STATUS_RESEND]
+    assert [r.client_id for r in resends] == [1]
+    assert resends[0].missing == (1,)          # names exactly the lost chunk
+    assert r1.state is RoundState.SEALING      # still waiting
+    eng.advance(now=0.6)                       # 2nd deadline: budget spent
+    assert r1.state is RoundState.PUBLISHED
+    pr = eng.published[0]
+    assert pr.stats.expired == 1 and pr.stats.gave_up == 0
+    assert pr.accepted == frozenset({0})
+    assert not lost.gave_up
+    assert np.array_equal(pr.mean, _replay(pr.spec, pr.anchor, {0: xs[0]}))
+    # the expired client re-enrolls in the open round and is accepted
+    r2 = eng.open_round
+    for f in _client(r2, 1, xs[1]).frames():
+        eng.receive(f, now=0.7)
+    r2.server.drain()
+    assert 1 in r2.server.accepted_clients
+
+
+def test_window_overflow_force_publishes_oldest():
+    """max_live_rounds bounds the live window: cutover force-publishes the
+    oldest sealing round instead of letting drains pile up."""
+    svc, eng = _chunked_eng(quorum=1, max_live_rounds=2,
+                            straggler_deadline=99.0, drain_deadline=99.0)
+    xs = _xs(4)
+    for k in range(3):
+        rnd = eng.open_round
+        # one chunk only: each round seals at quorum=1 with its client
+        # unresolved, so it can never drain on its own
+        eng.receive(_client(rnd, k, xs[k]).frames()[0], now=0.1 * (k + 1))
+    assert len(eng.published) == 2             # forced out by the window
+    assert [pr.round_id for pr in eng.published] == [1, 2]
+    assert all(pr.stats.expired == 1 for pr in eng.published)
+    assert eng.live_rounds == 2
+
+
+# ---------------------------------------------------------------------------
+# Open loop: Poisson arrivals, parity, and the lockstep comparison
+# ---------------------------------------------------------------------------
+
+def test_open_loop_sim_parity_and_overlap():
+    """The acceptance scenario: Poisson arrivals + flash crowd + churn +
+    stragglers + chunked lossy transport, >= 3 concurrently-live rounds,
+    every published round bit-identical to its lockstep replay (asserted
+    inside run_open_loop), no terminal verdict for any benign client
+    (ditto) — and the engine's virtual-clock throughput beats the lockstep
+    coordinator's on the identical trace."""
+    cfg = sim.OpenLoopConfig()
+    rep = sim.run_open_loop(cfg, check_parity=True)
+    assert rep.rounds >= 3
+    assert rep.max_live_rounds >= 3
+    assert rep.expired_total > 0               # stragglers were expired
+    assert rep.retried_total > 0               # backpressure/rollover seen
+    assert rep.resends_total > 0               # loss recovered chunk-wise
+    assert rep.accepted_total > 0.5 * rep.clients_arrived
+    lock = sim.run_lockstep(cfg)
+    assert lock.rounds >= 2
+    assert rep.rounds_per_s > lock.rounds_per_s, (rep.rounds_per_s,
+                                                  lock.rounds_per_s)
+
+
+# ---------------------------------------------------------------------------
+# Engine-published mean == star collective, bit for bit (8 devices)
+# ---------------------------------------------------------------------------
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_engine_round_bit_identical_to_star_8dev():
+    """ISSUE 6 acceptance: a round published by the continuous-round engine
+    — quorum cutover, shuffled arrivals, chunked transport — equals
+    allgather_allreduce_mean over that round's admitted clients bitwise."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    code = textwrap.dedent("""
+        from functools import partial
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.qstate import QState
+        from repro.dist.collectives import (QSyncConfig,
+            allgather_allreduce_mean, flat_size_padded)
+        from repro.agg import rounds
+        from repro.agg.client import AggClient
+        from repro.agg.engine import AggEngine, EngineConfig
+        from repro.agg.service import AggService, ServiceConfig
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n, bucket = 8192, 1024
+        anchor = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(0), (n,)) * 1e6, np.float32)
+        xs = jnp.asarray(anchor) + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(1), (8, n))
+        svc = AggService(ServiceConfig(d=n, bucket=bucket, y0=2.0, seed=5,
+                                       anchored=True, mtu=4096),
+                         anchor0=anchor)
+        eng = AggEngine(svc, EngineConfig(quorum=8, round_deadline=100.0,
+                                          straggler_deadline=10.0,
+                                          drain_deadline=100.0,
+                                          max_live_rounds=3), now=0.0)
+        rnd = eng.open_round
+        spec = rnd.spec
+        frames = [f for i in range(8)
+                  for f in AggClient(spec, int(i), np.asarray(xs[i]),
+                                     anchor=rnd.client_anchor).frames()]
+        assert len(frames) >= 2 * 8
+        for j in np.random.RandomState(2).permutation(len(frames)):
+            eng.receive(frames[int(j)], now=0.01 * int(j))
+        eng.advance(now=1.0)
+        assert len(eng.published) == 1, eng.published
+        pr = eng.published[0]
+        assert pr.accepted == frozenset(range(8)), pr.accepted
+        nb = flat_size_padded(n, QSyncConfig(q=16, bucket=bucket)) // bucket
+        qs = QState(y=jnp.asarray(spec.y_np()), anchor=jnp.asarray(anchor))
+        key = rounds.round_key(spec)
+        cfg = spec.cfg
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),),
+                 out_specs=P("data"), check_vma=False)
+        def f(xl):
+            out, _ = allgather_allreduce_mean(xl.reshape(-1), qs, key,
+                                              "data", cfg)
+            return out.reshape(1, -1)
+        star = np.asarray(jax.jit(f)(xs))
+        assert np.all(star == star[0])
+        assert np.array_equal(pr.mean, star[0]), \\
+            float(np.abs(pr.mean - star[0]).max())
+        print("ENGINE_STAR_PARITY_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ENGINE_STAR_PARITY_OK" in r.stdout
