@@ -15,14 +15,20 @@ trace on a virtual clock and asserts the engine's rounds/sec is strictly
 higher; the virtual-clock metrics (rounds_per_s, speedup, p50/p99 round
 latency, anchor staleness) are machine-independent and gated
 unconditionally by scripts/bench_ci.py, while us_per_call (the wall cost
-of simulating the whole trace) gets the usual same-machine timing gate."""
+of simulating the whole trace) gets the usual same-machine timing gate.
+
+The ``agg_tree_fanout*`` rows (ISSUE 7) run the hierarchical
+sum-without-decode AggTree against the flat server on the same fleet and
+assert the acceptance bounds (bit-identical mean, root ingress <= fanout
+combined payloads per round)."""
 import time
 
 import numpy as np
 
 from benchmarks.common import emit
-from repro.agg import wire
+from repro.agg.transport import frame as wire
 from repro.agg.server import AggServer
+from repro.agg.tree import AggTree
 from repro.agg.sim import (OpenLoopConfig, fleet_frames, fleet_payloads,
                            run_lockstep, run_open_loop)
 from repro.core import wire_accounting as WA
@@ -170,6 +176,54 @@ def engine_openloop():
          f"max_live_rounds={rep.max_live_rounds}")
 
 
+TREE_FANOUTS = (4, 16)
+TREE_CLIENTS = 64
+
+
+def tree_fanout():
+    """Hierarchical sum-without-decode tree vs the flat server on the same
+    round (ISSUE 7): one edge layer of ``fanout`` tiers in front of the
+    root.  Asserts the acceptance bounds — bit-identical mean, root ingress
+    <= fanout combined payloads however many clients arrive — and emits the
+    full-round wall cost next to flat's for the same fleet."""
+    for fanout in TREE_FANOUTS:
+        spec, base, payloads = _make_round(TREE_CLIENTS, seed=fanout)
+        flat_us, _ = _time_round(spec, base, payloads)
+        ref = AggServer(spec, base)
+        for p in payloads:
+            ref.ingest_frame(p)
+        ref.tick()
+        ref.seal()
+        pf = ref.published()[0]
+        round_us, ingress = [], 0
+        for it in range(4):
+            tree = AggTree(spec, base, fanout=fanout, tiers=1)
+            t0 = time.perf_counter()
+            for p in payloads:
+                tree.ingest_frame(p)
+            tree.tick()
+            tree.seal()
+            for _ in range(8):
+                tree.tick()
+                if tree.published():
+                    break
+            t1 = time.perf_counter()
+            pt = tree.published()[0]
+            assert pt.accepted == pf.accepted
+            assert np.array_equal(pt.mean.view(np.uint32),
+                                  pf.mean.view(np.uint32))
+            ingress = tree.root_ingress_payloads
+            assert ingress <= fanout, (ingress, fanout)
+            if it > 0:
+                round_us.append((t1 - t0) * 1e6)
+        us = float(np.median(round_us))
+        emit(f"agg_tree_fanout{fanout}", us,
+             f"d={D};clients={TREE_CLIENTS};tiers=1;"
+             f"root_ingress_payloads={ingress};fanout_bound={fanout};"
+             f"rounds_per_s={1e6 / us:.1f};flat_round_us={flat_us:.0f};"
+             f"tree_vs_flat={us / flat_us:.2f}x;bit_identical=1")
+
+
 def main():
     spec0, _, _ = _make_round(8)
     bpc = wire.payload_bytes(spec0)
@@ -185,6 +239,7 @@ def main():
             emit(f"agg_receive_c{n}", us_rx,
                  f"d={D};receive_only_per_payload")
     chunked_rounds()
+    tree_fanout()
     engine_openloop()
 
 

@@ -15,14 +15,91 @@ Demonstrates, and fails loudly if violated (this script is a CI smoke):
     lossy round recovers dropped/corrupt chunks at exactly the lost
     chunks' wire cost (selective retransmit, never a payload resend).
 
-    PYTHONPATH=src python examples/federated_dme.py
+    PYTHONPATH=src python examples/federated_dme.py                 # flat
+    PYTHONPATH=src python examples/federated_dme.py --topology tree # tree
+
+``--topology tree`` runs the hierarchical smoke instead (ISSUE 7): the same
+traffic through a 2-tier fanout-8 :class:`repro.agg.tree.AggTree` — edge
+tiers sum packed payloads without decoding, the root issues the single
+batched decode — asserted bit-identical to the flat server, driven purely
+through the :class:`repro.agg.api.AggNode` verbs.
 """
+import argparse
+
 import numpy as np
 
-from repro.agg import wire
+from repro.agg.transport import frame as wire
 from repro.agg.client import AggClient
 from repro.agg.server import AggServer
-from repro.agg.sim import SimConfig, fleet_payloads, run_round
+from repro.agg.sim import SimConfig, fleet_frames, fleet_payloads, run_round
+
+args = argparse.ArgumentParser(description=__doc__)
+args.add_argument("--topology", choices=("flat", "tree"), default="flat",
+                  help="flat: the single-server round mix (default); "
+                       "tree: the 2-tier fanout-8 hierarchical smoke")
+args = args.parse_args()
+
+
+def tree_smoke() -> None:
+    """Tree-vs-flat bit-parity over chunked traffic, AggNode verbs only."""
+    from repro.agg.tree import AggTree
+    from repro.kernels import ops as K
+
+    fanout, tiers, n_clients = 8, 2, 96
+    spec = SimConfig(d=2048, bucket=256, y0=0.5, mtu=256, seed=11,
+                     round_id=3).spec()
+    rng = np.random.RandomState(11)
+    base = 2.0 * rng.randn(spec.d).astype(np.float32)
+    xs = base[None] + 0.02 * rng.randn(n_clients, spec.d).astype(np.float32)
+    frames = fleet_frames(spec, xs)
+    n_chunks = len(frames[0])
+
+    flat = AggServer(spec, base)
+    for fs in frames:
+        for f in fs:
+            flat.ingest_frame(f)
+    flat.tick()
+    flat.seal()
+    pf = flat.published()[0]
+
+    before = K.DISPATCH_COUNTS.get("lattice_decode_batched", 0)
+    tree = AggTree(spec, base, fanout=fanout, tiers=tiers)
+    for fs in frames:
+        for f in fs:
+            tree.ingest_frame(f)
+    tree.tick()
+    tree.seal()
+    for _ in range(8):
+        tree.tick()
+        if tree.published():
+            break
+    else:
+        raise SystemExit("tree did not publish")
+    pt = tree.published()[0]
+    decodes = K.DISPATCH_COUNTS.get("lattice_decode_batched", 0) - before
+    spaces = len({t.forwarded_q for t in tree.layers[0]
+                  if t.forwarded_q is not None})
+    print(f"tree: {n_clients} clients x {n_chunks} chunks -> "
+          f"{fanout ** tiers} edge + {fanout} regional tiers -> root")
+    print(f"  root ingress {tree.root_ingress_payloads} payloads "
+          f"(fanout bound {fanout}); {decodes} decode dispatches over "
+          f"{spaces} color space(s), all at the root")
+    if pt.accepted != pf.accepted:
+        raise SystemExit("tree accepted set differs from flat")
+    if not np.array_equal(pt.mean.view(np.uint32), pf.mean.view(np.uint32)):
+        raise SystemExit("tree mean is not bit-identical to flat")
+    if tree.root_ingress_payloads > fanout:
+        raise SystemExit("root saw more payloads than the fanout bound")
+    if decodes != spaces:
+        raise SystemExit(f"{decodes} decode dispatches for {spaces} color "
+                         f"spaces (tiers must not decode; the root decodes "
+                         f"once per color space)")
+    print("hierarchical tree aggregation (2 tiers, fanout 8): OK")
+
+
+if args.topology == "tree":
+    tree_smoke()
+    raise SystemExit(0)
 
 # --- one simulated round with the full failure mix ------------------------
 cfg = SimConfig(clients=256, d=4096, q=16, bucket=512, y0=0.5,
@@ -59,7 +136,7 @@ means = []
 for order_seed in (1, 2):
     server = AggServer(spec, base)
     for i in np.random.RandomState(order_seed).permutation(len(payloads)):
-        server.receive(payloads[i])
+        server.ingest_frame(payloads[i])
     means.append(server.finalize()[0])
 if not np.array_equal(means[0], means[1]):
     raise SystemExit("server mean is not invariant to arrival order")
@@ -73,7 +150,7 @@ print("client/fleet payload parity: OK")
 # --- chunked transport (ISSUE 5 CI smoke): mtu forces >= 4 chunks/client --
 import dataclasses
 
-from repro.agg.sim import fleet_frames, run_chunked_lossy
+from repro.agg.sim import run_chunked_lossy
 
 chunked_spec = dataclasses.replace(spec, mtu=256)
 frames = fleet_frames(chunked_spec, xs)
@@ -84,7 +161,7 @@ server_c = AggServer(chunked_spec, base)
 order = [(c, k) for k in range(n_chunks) for c in range(len(frames))]
 for c, k in (order[i] for i in np.random.RandomState(5).permutation(
         len(order))):
-    server_c.receive(frames[c][k])
+    server_c.ingest_frame(frames[c][k])
 mean_c, stats_c = server_c.finalize()
 if stats_c.accepted != len(frames):
     raise SystemExit("chunked round lost clients")
@@ -132,7 +209,7 @@ for rnd in range(3):
             raise SystemExit("round anchor is not the previous mean")
     server3 = svc.make_server()
     for p in fleet_payloads(spec3, xs3, anchor=anchor3):
-        server3.receive(p)
+        server3.ingest_frame(p)
     mean3, stats3 = svc.end_round(server3)
     published.append(mean3)
     exact3 = xs3.astype(np.float64).mean(0)

@@ -21,10 +21,28 @@ non-terminal RETRY.  Demonstrates, and fails loudly if violated:
 
     PYTHONPATH=src python examples/open_loop_agg.py
 """
+from repro.agg.api import AggNode
+from repro.agg.engine import AggEngine
+from repro.agg.server import AggServer
+from repro.agg.service import AggService
 from repro.agg.sim import OpenLoopConfig, run_lockstep, run_open_loop
+from repro.agg.tree import AggTree
 
 cfg = OpenLoopConfig()   # ~160 arrivals at 250/s + a 32-client flash crowd,
                          # chunked mtu=64, 3% frame loss, churn + stragglers
+
+# every aggregation endpoint is the same AggNode to a driver (ISSUE 7): the
+# open-loop harness below drives the engine purely through
+# ingest_frame/tick/published, and could be handed a flat server or a tree
+svc = AggService(cfg.service_config())
+eng = AggEngine(svc, cfg.engine_config(), now=0.0)
+spec0, anchor0 = eng.open_round.spec, eng.open_round.anchor
+for node in (eng, AggServer(spec0, anchor0),
+             AggTree(spec0, anchor0, fanout=2)):
+    if not isinstance(node, AggNode):
+        raise SystemExit(f"{type(node).__name__} does not satisfy AggNode")
+print("AggNode protocol: engine, flat server and tree are interchangeable")
+
 rep = run_open_loop(cfg, check_parity=True)
 
 print(f"open loop: {rep.clients_arrived} arrivals at {cfg.rate:.0f}/s "

@@ -17,7 +17,11 @@
 #      single-frame round, the bounded transport staging, and the
 #      selective-retransmit wire cost of a lossy round; PLUS three anchored
 #      multi-round service rounds asserting that round k+1's anchor digest
-#      matches round k's published mean and no clients are lost;
+#      matches round k's published mean and no clients are lost; and the
+#      HIERARCHICAL topology (--topology tree): 96 chunked clients through
+#      a 2-tier fanout-8 sum-without-decode AggTree, asserted bit-identical
+#      to the flat server with every decode dispatch at the root and root
+#      ingress bounded by the fanout;
 #   5. a smoke run of the continuous-round engine under open-loop load
 #      (examples/open_loop_agg.py) — Poisson arrivals + flash crowd +
 #      churn/loss/stragglers on a virtual clock: >= 3 rounds concurrently
@@ -50,6 +54,9 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 
 echo "== tier-1: federated aggregation smoke (repro.agg protocol) =="
 python examples/federated_dme.py
+
+echo "== tier-1: hierarchical aggregation smoke (sum-without-decode tree) =="
+python examples/federated_dme.py --topology tree
 
 echo "== tier-1: open-loop continuous-round engine smoke =="
 python examples/open_loop_agg.py

@@ -11,8 +11,11 @@ an actual request/response protocol over real ``bytes``:
   ``chunks`` (fixed-MTU splitting, idempotent chunk frames, selective
   retransmit), ``session`` (out-of-order duplicate-tolerant reassembly with
   transport staging bounded by one frame, independent of d);
-* :mod:`repro.agg.wire`   — back-compat facade re-exporting the frame-layer
-  API under the historical names;
+* :mod:`repro.agg.api`    — the unified :class:`AggNode` protocol
+  (``ingest_frame`` / ``tick`` / ``published``) every aggregation endpoint
+  implements, plus the one composed :class:`AggConfig` knob surface;
+* :mod:`repro.agg.wire`   — DEPRECATED back-compat facade re-exporting the
+  frame-layer API under the historical names (emits DeprecationWarning);
 * :mod:`repro.agg.client` — encodes a local vector against a round's shared
   randomness, chunks it per the round MTU, and handles escalation +
   selective-retransmit responses;
@@ -40,22 +43,24 @@ an actual request/response protocol over real ``bytes``:
   wire cost byte-for-byte); :func:`repro.agg.sim.run_rounds` drives the
   multi-round service over a drifting large-norm population.
 """
-from repro.agg.wire import (RoundSpec, FrameHeader, Payload, Response,
-                            WireError, TruncatedPayloadError, BadMagicError,
-                            VersionMismatchError, CorruptPayloadError,
-                            HeaderMismatchError, encode_payload,
-                            decode_payload, encode_frame, decode_frame,
-                            encode_response, decode_response,
-                            q_at_attempt, y_at_attempt, y_buckets_at_attempt,
-                            payload_bytes,
-                            STATUS_QUEUED, STATUS_NACK, STATUS_REJECT,
-                            STATUS_ACK, STATUS_RESEND, STATUS_RETRY,
-                            peek_route)
+from repro.agg.transport import (RoundSpec, FrameHeader, Payload, Response,
+                                 WireError, TruncatedPayloadError,
+                                 BadMagicError, VersionMismatchError,
+                                 CorruptPayloadError, HeaderMismatchError,
+                                 encode_payload, decode_payload,
+                                 encode_frame, decode_frame,
+                                 encode_response, decode_response,
+                                 q_at_attempt, y_at_attempt,
+                                 y_buckets_at_attempt, payload_bytes,
+                                 STATUS_QUEUED, STATUS_NACK, STATUS_REJECT,
+                                 STATUS_ACK, STATUS_RESEND, STATUS_RETRY,
+                                 peek_route, Reassembler, ReassemblyStats)
+from repro.agg.api import AggConfig, AggNode, PublishedLog, PublishedRound
 from repro.agg.client import AggClient
 from repro.agg.server import AggServer, RoundStats
 from repro.agg.service import (AggService, Round, RoundState, ServiceConfig)
-from repro.agg.engine import AggEngine, EngineConfig, PublishedRound
-from repro.agg.transport import Reassembler, ReassemblyStats
+from repro.agg.engine import AggEngine, EngineConfig
+from repro.agg.tree import AggTree, TierAggregator, TierStats
 
 __all__ = [
     "RoundSpec", "FrameHeader", "Payload", "Response", "WireError",
@@ -68,4 +73,6 @@ __all__ = [
     "AggEngine", "EngineConfig", "PublishedRound", "Reassembler",
     "ReassemblyStats", "STATUS_QUEUED", "STATUS_NACK", "STATUS_REJECT",
     "STATUS_ACK", "STATUS_RESEND", "STATUS_RETRY", "peek_route",
+    "AggConfig", "AggNode", "PublishedLog", "AggTree", "TierAggregator",
+    "TierStats",
 ]

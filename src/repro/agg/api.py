@@ -1,0 +1,169 @@
+"""The unified aggregation-node surface (ISSUE 7 API redesign).
+
+Every aggregation endpoint in the repo — the single-round flat server
+(:class:`repro.agg.server.AggServer`), the continuous-round engine
+(:class:`repro.agg.engine.AggEngine`) and the hierarchical tree
+(:class:`repro.agg.tree.TierAggregator` / :class:`repro.agg.tree.AggTree`)
+— speaks the same three-verb protocol:
+
+* ``ingest_frame(data, now)`` — feed one transport message (a client frame,
+  or — for a tier — an upstream response); returns the response bytes the
+  node wants sent.
+* ``tick(now)`` — fire time/batch-based policy (drains, deadlines,
+  retransmit requests, upstream forwarding); returns outbound bytes.
+* ``published()`` — the in-order list of :class:`PublishedRound` outcomes.
+
+A driver written against :class:`AggNode` cannot tell a flat star from a
+two-level tree from the overlapping-round engine: the sim and the examples
+drive all three through these verbs and assert bit-identical means.
+
+:class:`AggConfig` is the one composed knob surface: the round-contract
+fields that :class:`~repro.agg.service.ServiceConfig` owns, the
+cutover/drain policy that :class:`~repro.agg.engine.EngineConfig` owns, and
+the tree topology (``fanout``/``tiers``) in a single dataclass.  The
+``service_config()`` / ``engine_config()`` builders project it onto the
+layer configs; field defaults are asserted drift-free against the layer
+configs by ``tests/test_tree.py::test_config_defaults_no_drift``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.agg.transport import frame as wire
+
+if TYPE_CHECKING:                                    # no import cycle at
+    from repro.agg.server import RoundStats          # runtime: hints only
+
+
+@dataclasses.dataclass
+class PublishedRound:
+    """One published round's outcome + latency/staleness telemetry.
+
+    Produced by every :class:`AggNode` implementation; historically defined
+    in :mod:`repro.agg.engine` (which still re-exports it).
+    """
+    round_id: int
+    spec: wire.RoundSpec
+    anchor: Optional[np.ndarray]    # what clients encoded against (None:
+                                    # unanchored round)
+    mean: np.ndarray
+    stats: "RoundStats"
+    accepted: frozenset             # client ids in the published mean
+    opened_at: float
+    sealed_at: float
+    published_at: float
+    anchor_round: int               # round whose mean this round anchored
+                                    # against (0 = warm start)
+    staleness: float                # published_at - anchor's publish time
+                                    # (0.0 for warm-start anchors): how old
+                                    # the anchor was when this mean shipped
+
+    @property
+    def latency(self) -> float:
+        """Open -> published round latency (driver clock units)."""
+        return self.published_at - self.opened_at
+
+    @property
+    def staleness_rounds(self) -> int:
+        """Anchor lag in rounds (0 for warm-start anchors)."""
+        return self.round_id - self.anchor_round if self.anchor_round else 0
+
+
+class PublishedLog(list):
+    """A list of :class:`PublishedRound` that is also callable.
+
+    :class:`~repro.agg.engine.AggEngine` predates the :class:`AggNode`
+    protocol and exposes its history as the attribute ``engine.published``
+    (indexed and iterated all over the tests and the sim).  The protocol
+    verb is the *call* ``node.published()``.  This list subclass satisfies
+    both spellings without breaking either caller.
+    """
+
+    def __call__(self) -> "list[PublishedRound]":
+        return list(self)
+
+
+@runtime_checkable
+class AggNode(Protocol):
+    """The structural protocol every aggregation endpoint implements.
+
+    ``ingest_frame`` / ``tick`` return *outbound transport bytes* — each
+    item is a complete frame or response message; the driver owns routing
+    (responses go back to the sender named in their header, frames go to
+    the node's upstream).  ``now`` is whatever monotonic clock the driver
+    uses (the sim passes virtual seconds); nodes are clock-agnostic and
+    fire all policy from these two entry points — no threads, no timers.
+    """
+
+    def ingest_frame(self, data: bytes, now: float = 0.0) -> "list[bytes]":
+        """Feed one arriving transport message; returns responses/frames."""
+        ...
+
+    def tick(self, now: float = 0.0) -> "list[bytes]":
+        """Fire due time-based policy; returns responses/frames."""
+        ...
+
+    def published(self) -> "list[PublishedRound]":
+        """In-order outcomes of every round this node has published."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class AggConfig:
+    """One composed config for every aggregation topology.
+
+    The round-contract knobs (mirroring
+    :class:`~repro.agg.service.ServiceConfig`), the engine's cutover /
+    drain / admission policy (mirroring
+    :class:`~repro.agg.engine.EngineConfig`) and the tree topology live in
+    one place, so a tree tier is configured exactly like the root and a
+    knob can never drift silently between layers (defaults are asserted
+    equal field-by-field in the test suite).
+    """
+    # ---- round contract (ServiceConfig) ----
+    d: int
+    q: int = 16
+    bucket: int = 512
+    rotate: bool = False
+    y0: float = 1.0
+    seed: int = 0
+    max_attempts: int = 4
+    anchored: bool = True
+    mtu: int = 0
+    y_decay: float = 0.75
+    y_escalate: float = 2.0
+    y_floor: float = 1e-6
+    # ---- cutover / drain / admission policy (EngineConfig) ----
+    quorum: int = 64
+    round_deadline: float = 1.0
+    min_clients: int = 1
+    straggler_deadline: float = 0.25
+    max_resends: int = 2
+    drain_deadline: float = 1.0
+    max_pending: Optional[int] = None
+    max_live_rounds: int = 3
+    # ---- tree topology (AggTree) ----
+    fanout: int = 8               # max children per aggregation node
+    tiers: int = 1                # tier layers between clients and the root
+
+    _SERVICE_FIELDS = ("d", "q", "bucket", "rotate", "y0", "seed",
+                       "max_attempts", "anchored", "mtu", "y_decay",
+                       "y_escalate", "y_floor")
+    _ENGINE_FIELDS = ("quorum", "round_deadline", "min_clients",
+                      "straggler_deadline", "max_resends", "drain_deadline",
+                      "max_pending", "max_live_rounds")
+
+    def service_config(self):
+        """Project onto :class:`repro.agg.service.ServiceConfig`."""
+        from repro.agg.service import ServiceConfig
+        return ServiceConfig(
+            **{f: getattr(self, f) for f in self._SERVICE_FIELDS})
+
+    def engine_config(self):
+        """Project onto :class:`repro.agg.engine.EngineConfig`."""
+        from repro.agg.engine import EngineConfig
+        return EngineConfig(
+            **{f: getattr(self, f) for f in self._ENGINE_FIELDS})

@@ -54,10 +54,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import numpy as np
-
-from repro.agg import wire
-from repro.agg.server import RoundStats
+from repro.agg.api import PublishedLog, PublishedRound  # noqa: F401 (the
+#           dataclass moved to repro.agg.api with the AggNode protocol; it
+#           is re-exported here for its historical importers)
+from repro.agg.transport import frame as wire
 from repro.agg.service import AggService, Round, RoundState
 
 
@@ -86,36 +86,6 @@ class EngineConfig:
                                   # oldest is force-published past this
 
 
-@dataclasses.dataclass
-class PublishedRound:
-    """One published round's outcome + latency/staleness telemetry."""
-    round_id: int
-    spec: wire.RoundSpec
-    anchor: Optional[np.ndarray]    # what clients encoded against (None:
-                                    # unanchored round)
-    mean: np.ndarray
-    stats: RoundStats
-    accepted: frozenset             # client ids in the published mean
-    opened_at: float
-    sealed_at: float
-    published_at: float
-    anchor_round: int               # round whose mean this round anchored
-                                    # against (0 = warm start)
-    staleness: float                # published_at - anchor's publish time
-                                    # (0.0 for warm-start anchors): how old
-                                    # the anchor was when this mean shipped
-
-    @property
-    def latency(self) -> float:
-        """Open -> published round latency (driver clock units)."""
-        return self.published_at - self.opened_at
-
-    @property
-    def staleness_rounds(self) -> int:
-        """Anchor lag in rounds (0 for warm-start anchors)."""
-        return self.round_id - self.anchor_round if self.anchor_round else 0
-
-
 class AggEngine:
     """The continuous-round event loop over an :class:`AggService`.
 
@@ -136,7 +106,9 @@ class AggEngine:
         self.cfg = cfg
         self.live: "dict[int, Round]" = {}
         self._order: "list[Round]" = []      # oldest ... newest (== open)
-        self.published: "list[PublishedRound]" = []
+        # PublishedLog: a list (``eng.published[k]``, the historical
+        # surface) that is also the AggNode verb (``eng.published()``)
+        self.published: PublishedLog = PublishedLog()
         self.max_live_seen = 1
         self.retried_unknown_round = 0       # engine-level RETRYs (frames
                                              # for dead/future rounds)
@@ -159,6 +131,18 @@ class AggEngine:
         rnd = self.svc.open_round(now=now, max_pending=self.cfg.max_pending)
         self.live[rnd.round_id] = rnd
         self._order.append(rnd)
+
+    # ------------------------------------------------------------ AggNode
+    # The engine's native verbs (receive/advance/published) predate the
+    # protocol; these aliases make it a drop-in AggNode so the sim and the
+    # examples can drive a flat engine and a tree root interchangeably.
+    def ingest_frame(self, data: bytes, now: float = 0.0) -> "list[bytes]":
+        """AggNode verb: route one frame (alias of :meth:`receive`)."""
+        return self.receive(data, now)
+
+    def tick(self, now: float = 0.0) -> "list[bytes]":
+        """AggNode verb: fire due events (alias of :meth:`advance`)."""
+        return self.advance(now)
 
     # ---------------------------------------------------------------- RX
     def receive(self, data: bytes, now: float) -> "list[bytes]":

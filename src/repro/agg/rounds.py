@@ -1,7 +1,7 @@
 """Shared per-round randomness + bucket-space helpers (client & server).
 
 Everything a round's participants must agree on is derived deterministically
-from the :class:`repro.agg.wire.RoundSpec`: the dither ``u`` (one draw per
+from the :class:`repro.agg.transport.frame.RoundSpec`: the dither ``u`` (one draw per
 round from ``seed``/``round_id``), the §5 checksum weights, the §6 Hadamard
 rotation diagonal (``rot_seed``), the per-bucket sides, and — in anchored
 rounds — the anchor vector itself, pinned by its CRC-32 digest in the spec.
@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.agg import wire as W
+from repro.agg.transport import frame as W
 from repro.core import bucketing as B
 from repro.core import error_detect as ED
 from repro.core import lattice as L
@@ -88,6 +88,33 @@ def sides(spec: W.RoundSpec) -> Array:
     rounded reciprocal multiply, which would break bit-parity)."""
     s = jnp.asarray(spec.sides_np())
     return jax.lax.optimization_barrier(s)
+
+
+def decode_ref_coords(spec: W.RoundSpec,
+                      anchor: Optional[np.ndarray] = None) -> Array:
+    """(padded,) int32 reference coordinates ``k0`` of the round's decode.
+
+    These are the ``k_a = round(ref/s - u)`` the server's proximity decode
+    snaps colors to — computed here with the *same float ops in the same
+    order* as :func:`repro.core.lattice.decode_coords`, so the result is
+    bit-identical to what the batched decode derives internally.  Anchored
+    rounds decode residuals against zero, so ``k0`` depends only on the
+    dither; unanchored rounds use the bucketized server anchor.
+
+    A tree tier (:mod:`repro.agg.tree`) lifts every child payload to
+    ``k0 + centered_mod(c - k0, q)`` — exactly the root's decode output —
+    which lets it verify §5 checksums and sum coordinates in pure integer
+    math, never dispatching a decode of its own.
+    """
+    if spec.anchored or anchor is None:
+        ref_flat = jnp.zeros((spec.padded,), jnp.float32)
+    else:
+        ref_flat = bucketize(jnp.asarray(anchor, jnp.float32),
+                             spec).reshape(-1)
+    s_coord = jnp.repeat(sides(spec), spec.cfg.bucket)
+    t = ref_flat / s_coord
+    t = t - dither(spec).reshape(-1)
+    return jnp.round(t).astype(jnp.int32)
 
 
 def anchor_digest(anchor) -> int:

@@ -78,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.agg import rounds
+from repro.agg.api import PublishedRound
 from repro.agg.transport import frame as wire
 from repro.agg.transport import session as S
 from repro.core import error_detect as ED
@@ -145,16 +146,27 @@ def _retry(round_id: int, client_id: int, attempt: int,
 @partial(jax.jit, static_argnames=("q", "bucket"))
 def _drain_math(words: Array, sides: Array, checks: Array, valid: Array,
                 anchor: Array, u: Array, weights: Array, y_col: Array,
-                *, q: int, bucket: int):
+                m: Array, k0: Array, *, q: int, bucket: int):
     """Decode S payloads, verify checksums, sum accepted integer coords.
 
     words: (S, nw) uint32; sides: (S, nb) f32 sidecars; checks: (S,) uint32;
     valid: (S,) bool (False for the block-size padding rows the server adds
     so drain sizes hit a bounded set of compiled shapes); anchor/u/weights:
-    (n,); y_col: (nb,) decode margins at this q.  Returns (ok (S,),
-    ksum_delta (n,) int32, max_dist () f32 over accepted senders,
-    dist_b (nb,) per-bucket max over accepted, fails_b (nb,) per-bucket
-    failure attribution over checksum-failed senders).
+    (n,); y_col: (nb,) decode margins at this q; m: (S,) int32 n_summed of
+    each payload (1 for an ordinary client); k0: (n,) int32 the round's
+    decode-reference coordinates (:func:`repro.agg.rounds.decode_ref_coords`).
+
+    A combined payload from a tree tier (m > 1) carries ``K' = k0 + sum_i
+    r_i`` — the tier folded m clients' residuals about k0 — so the true
+    integer sum it contributes is ``K' + (m-1) * k0`` (each of the m clients
+    would have contributed its own ``k0 + r_i``).  For m == 1 the correction
+    is identically zero and the math is bit-for-bit the flat server's.
+
+    Returns (ok (S,), ksum_delta (n,) int32, count_delta () int32,
+    max_dist () f32, dist_b (nb,), fails_b (nb,), max_abs_k () int32).
+    The distance telemetry (max_dist/dist_b/fails_b) is masked to unit
+    payloads (m == 1): a combined payload's distance-to-reference scales
+    like m*y and would poison the y-tracking margins.
     """
     s_sender = jnp.repeat(sides, bucket, axis=-1)          # (S, n)
     k = K.lattice_decode_batched(words, anchor, u, s_sender, q=q,
@@ -163,25 +175,30 @@ def _drain_math(words: Array, sides: Array, checks: Array, valid: Array,
     # exact integer math or order-free, keeping the drain bit-deterministic
     k = jax.lax.optimization_barrier(k)
     ok = (ED.coord_checksum(k, weights, axis=-1) == checks) & valid
-    ksum_delta = jnp.sum(jnp.where(ok[:, None], k, 0), axis=0,
+    k_eff = k + (m[:, None] - 1) * k0[None]                # (S, n) int32
+    ksum_delta = jnp.sum(jnp.where(ok[:, None], k_eff, 0), axis=0,
                          dtype=jnp.int32)
-    # the largest accepted |coordinate|: the server bounds the int32
-    # accumulator with it (count * max|k| < 2^31) and fails loudly instead
-    # of silently wrapping — only reachable with huge-norm *unanchored*
-    # rounds, where raw coords scale like |x|/s; anchored coords stay ~y/s
-    max_abs_k = jnp.max(jnp.where(ok[:, None], jnp.abs(k), 0))
+    count_delta = jnp.sum(jnp.where(ok, m, 0), dtype=jnp.int32)
+    # the largest accepted |effective coordinate|: the server bounds the
+    # int32 accumulator with it (count * max|k| < 2^31) and fails loudly
+    # instead of silently wrapping — only reachable with huge-norm
+    # *unanchored* rounds, where raw coords scale like |x|/s; anchored
+    # coords stay ~y/s
+    max_abs_k = jnp.max(jnp.where(ok[:, None], jnp.abs(k_eff), 0))
+    unit = ok & (m == 1)
     z = (k.astype(jnp.float32) + u[None]) * s_sender
     dist = jnp.abs(z - anchor[None]).reshape(z.shape[0], -1, bucket)
     dist_bk = jnp.max(dist, axis=-1)                       # (S, nb)
-    max_dist = jnp.max(jnp.where(ok[:, None], dist_bk, 0.0))
-    dist_b = jnp.max(jnp.where(ok[:, None], dist_bk, 0.0), axis=0)
-    # failure attribution: for checksum-failed senders, buckets whose
+    max_dist = jnp.max(jnp.where(unit[:, None], dist_bk, 0.0))
+    dist_b = jnp.max(jnp.where(unit[:, None], dist_bk, 0.0), axis=0)
+    # failure attribution: for checksum-failed unit senders, buckets whose
     # decoded distance exceeds the margin carry the blame (the §5 distance
     # surrogate, per bucket)
-    failed = valid & ~ok
+    failed = valid & ~ok & (m == 1)
     over = dist_bk > 1.5 * y_col[None]
     fails_b = jnp.sum(jnp.where(failed[:, None] & over, 1.0, 0.0), axis=0)
-    return ok, ksum_delta, max_dist, dist_b, fails_b, max_abs_k
+    return (ok, ksum_delta, count_delta, max_dist, dist_b, fails_b,
+            max_abs_k)
 
 
 @jax.jit
@@ -230,6 +247,13 @@ class AggServer:
         self._u = rounds.dither(spec)                     # (nb, bucket)
         self._weights = rounds.checksum_weights(spec)     # (padded,)
         self._sides = rounds.sides(spec)                  # (nb,)
+        # the decode's reference coordinates (padded,) int32 — the lift
+        # point tree tiers sum residuals about; (m-1)*k0 corrects their
+        # combined payloads back to a per-client sum in _drain_math
+        self._k0 = rounds.decode_ref_coords(
+            spec, None if spec.anchored else anchor)
+        self._anchor_raw = np.asarray(anchor, np.float32).copy()
+        self._published: list[PublishedRound] = []
         self._pending: dict[int, wire.Payload] = {}
         self._rx = S.Reassembler(spec)      # chunked-payload session layer
         self._accepted: set[int] = set()
@@ -351,6 +375,37 @@ class AggServer:
         self.stats.bytes_out += len(out)
         return out
 
+    # ------------------------------------------------------------ AggNode
+    def ingest_frame(self, data: bytes, now: float = 0.0) -> "list[bytes]":
+        """AggNode verb: one frame in, its response out (``now`` unused —
+        the flat server is purely event-driven)."""
+        return [self.receive(data)]
+
+    def tick(self, now: float = 0.0) -> "list[bytes]":
+        """AggNode verb: drain pending payloads + chunk-level RESENDs."""
+        return self.drain()
+
+    def published(self) -> "list[PublishedRound]":
+        """AggNode verb: the round's outcome, once it has one.
+
+        Empty until the round is sealed and every admitted client is
+        resolved; then the round finalizes lazily on first call and the
+        :class:`~repro.agg.api.PublishedRound` is cached (timestamps are
+        zero — the flat server keeps no clock; the engine's records carry
+        real open/seal/publish times)."""
+        if self._published:
+            return list(self._published)
+        if not self._sealed or self.unresolved:
+            return []
+        mean, stats = self.finalize()
+        self._published.append(PublishedRound(
+            round_id=self.spec.round_id, spec=self.spec,
+            anchor=self._anchor_raw if self.spec.anchored else None,
+            mean=mean, stats=stats, accepted=self.accepted_clients,
+            opened_at=0.0, sealed_at=0.0, published_at=0.0,
+            anchor_round=0, staleness=0.0))
+        return list(self._published)
+
     # ----------------------------------------------------------- LIFECYCLE
     def seal(self, next_round_id: int = 0) -> None:
         """Stop admitting NEW clients (round cutover).
@@ -446,19 +501,24 @@ class AggServer:
             checks = jnp.asarray(np.pad(
                 np.array([p.check for p in plist], np.uint32), (0, pad)))
             valid = jnp.asarray(np.arange(S + pad) < S)
+            m = jnp.asarray(np.pad(
+                np.array([p.n_summed for p in plist], np.int32), (0, pad),
+                constant_values=1))
             y_col = jnp.asarray(wire.y_buckets_at_attempt(self.spec,
                                                           attempt0))
-            ok, ksum_delta, max_dist, dist_b, fails_b, max_abs_k = \
+            (ok, ksum_delta, count_delta, max_dist, dist_b, fails_b,
+             max_abs_k) = \
                 _drain_math(words, sides, checks, valid, self._ref_flat,
-                            self._u.reshape(-1), self._weights, y_col, q=q,
-                            bucket=self.spec.cfg.bucket)
+                            self._u.reshape(-1), self._weights, y_col, m,
+                            self._k0, q=q, bucket=self.spec.cfg.bucket)
             ok = np.asarray(ok)[:S]
             n_ok = int(ok.sum())
+            n_clients = int(count_delta)    # n_ok plus tier fan-in (m > 1)
             # int32 accumulator guard: sum_i |k_i| <= count * max|k| must
             # stay below 2^31 or the exact integer sum may have wrapped —
             # fail loudly (an anchored round is the fix: coords stay ~y/s)
             self._max_abs_k = max(self._max_abs_k, int(max_abs_k))
-            if (self._count + n_ok) * self._max_abs_k >= 2 ** 31:
+            if (self._count + n_clients) * self._max_abs_k >= 2 ** 31:
                 raise OverflowError(
                     f"round {self.spec.round_id}: accumulating {n_ok} more "
                     f"senders with |coords| up to {self._max_abs_k} can "
@@ -466,7 +526,7 @@ class AggServer:
                     f"far); anchor the round (RoundSpec.anchor_digest) so "
                     f"coordinates stay ~y/s instead of ~|x|/s")
             self._ksum = self._ksum + ksum_delta.reshape(self._ksum.shape)
-            self._count += n_ok
+            self._count += n_clients
             self.stats.accepted += n_ok
             self.stats.max_dist = max(self.stats.max_dist, float(max_dist))
             self.stats.dist_b = np.maximum(self.stats.dist_b,

@@ -63,7 +63,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.agg import rounds, wire
+from repro.agg import rounds
+from repro.agg.transport import frame as wire
 from repro.agg.server import AggServer, RoundStats
 from repro.core import qstate as QS
 from repro.dist.collectives import QSyncConfig, flat_size_padded

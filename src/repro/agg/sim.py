@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.agg import rounds
+from repro.agg.api import AggConfig
 from repro.agg.client import AggClient
 from repro.agg.engine import AggEngine, EngineConfig, PublishedRound
 from repro.agg.server import AggServer, RoundStats
@@ -215,7 +216,7 @@ def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
             sent = False
             for i in clients:
                 if k < len(frames[i]):
-                    server.receive(frames[i][k])
+                    server.ingest_frame(frames[i][k])
                     sent = True
             if not sent:
                 return
@@ -234,9 +235,9 @@ def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
     # wave 1: the bulk of the fleet, shuffled, plus damaged frames
     deliver(wave1)
     for _ in range(cfg.corrupt):
-        server.receive(damaged(any_frame(rng.choice(wave1)), "corrupt"))
+        server.ingest_frame(damaged(any_frame(rng.choice(wave1)), "corrupt"))
     for _ in range(cfg.truncate):
-        server.receive(damaged(any_frame(rng.choice(wave1)), "truncate"))
+        server.ingest_frame(damaged(any_frame(rng.choice(wave1)), "truncate"))
 
     retry_clients: dict[int, AggClient] = {}
     escalated: set[int] = set()
@@ -254,19 +255,19 @@ def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
             out.extend(c.handle_response(rb))
         return out
 
-    retries = route(server.drain())
+    retries = route(server.tick())
     # wave 2: stragglers, duplicates and first-round escalation retries
     deliver(stragglers)
     for i in dup:
         for f in frames[i]:
-            server.receive(f)
+            server.ingest_frame(f)
     for p in retries:
-        server.receive(p)
-    retries = route(server.drain())
+        server.ingest_frame(p)
+    retries = route(server.tick())
     while retries:                         # escalation ladder, bounded by
         for p in retries:                  # max_attempts / the q cap
-            server.receive(p)
-        retries = route(server.drain())
+            server.ingest_frame(p)
+        retries = route(server.tick())
 
     mean, stats = server.finalize()
     acc = sorted(server.accepted_clients)
@@ -325,7 +326,7 @@ def run_chunked_lossy(clients: int = 8, d: int = 4096, bucket: int = 512,
     ref = AggServer(spec, base)
     for fs in frames:
         for f in fs:
-            ref.receive(f)
+            ref.ingest_frame(f)
     mean_clean, _ = ref.finalize()
 
     # loss plan: distinct (client, chunk) victims; corrupt frames are
@@ -348,13 +349,13 @@ def run_chunked_lossy(clients: int = 8, d: int = 4096, bucket: int = 512,
                 b[rng.randint(len(b))] ^= 0xFF
                 f = bytes(b)
             bytes_total += len(f)
-            server.receive(f)
+            server.ingest_frame(f)
 
     # drain: complete clients decode; incomplete ones get chunk NACKs
     # naming exactly the missing indices
     retransmit_bytes = 0
     clients_obj: dict[int, AggClient] = {}
-    resps = server.drain()
+    resps = server.tick()
     while True:
         resend = []
         for rb in resps:
@@ -372,8 +373,8 @@ def run_chunked_lossy(clients: int = 8, d: int = 4096, bucket: int = 512,
         for f in resend:
             retransmit_bytes += len(f)
             bytes_total += len(f)
-            server.receive(f)
-        resps = server.drain()
+            server.ingest_frame(f)
+        resps = server.tick()
 
     mean, stats = server.finalize()
     affected = {c for c, _ in drop | corrupt}
@@ -427,6 +428,12 @@ class MultiRoundConfig:
     y_decay: float = 0.75
     seed: int = 0
 
+    def agg_config(self) -> AggConfig:
+        """Composed config; :func:`run_rounds` projects the service slice."""
+        return AggConfig(d=self.d, q=self.q, bucket=self.bucket, y0=self.y0,
+                         seed=self.seed, anchored=self.anchored,
+                         mtu=self.mtu, y_decay=self.y_decay)
+
 
 @dataclasses.dataclass
 class RoundOutcome:
@@ -455,10 +462,7 @@ def run_rounds(cfg: MultiRoundConfig = MultiRoundConfig()
     # previous model state (both the anchored and unanchored services get
     # the same head start — the comparison isolates encode-side anchoring)
     anchor0 = mu + (cfg.y0 / 4) * rng.randn(cfg.d).astype(np.float32)
-    svc = AggService(ServiceConfig(
-        d=cfg.d, q=cfg.q, bucket=cfg.bucket, y0=cfg.y0, seed=cfg.seed,
-        anchored=cfg.anchored, mtu=cfg.mtu, y_decay=cfg.y_decay),
-        anchor0=anchor0)
+    svc = AggService(cfg.agg_config().service_config(), anchor0=anchor0)
     outcomes = []
     spread = cfg.spread0
     for _ in range(cfg.rounds):
@@ -471,11 +475,11 @@ def run_rounds(cfg: MultiRoundConfig = MultiRoundConfig()
         frames = fleet_frames(spec, xs, anchor=anchor)
         for i in rng.permutation(cfg.clients):
             for f in frames[i]:
-                server.receive(f)
+                server.ingest_frame(f)
         # escalation ladder: route NACKs through the per-client protocol
         # object (q <- q^2, per-bucket granularity fixed) until quiescent
         retry_clients: dict[int, AggClient] = {}
-        resps = server.drain()
+        resps = server.tick()
         while True:
             retries = []
             for rb in resps:
@@ -490,8 +494,8 @@ def run_rounds(cfg: MultiRoundConfig = MultiRoundConfig()
             if not retries:
                 break
             for p in retries:
-                server.receive(p)
-            resps = server.drain()
+                server.ingest_frame(p)
+            resps = server.tick()
         mean, stats = svc.end_round(server)
         exact = xs.astype(np.float64).mean(0)
         err = np.abs(mean.astype(np.float64) - exact)
@@ -553,18 +557,24 @@ class OpenLoopConfig:
                                    # non-terminal RETRYs
     seed: int = 0
 
-    def engine_config(self) -> EngineConfig:
-        return EngineConfig(
+    def agg_config(self) -> AggConfig:
+        """The composed knob surface; the layer configs are projections of
+        this one object, so a knob cannot drift between service and engine."""
+        return AggConfig(
+            d=self.d, q=self.q, bucket=self.bucket, y0=self.y0,
+            seed=self.seed, anchored=True, mtu=self.mtu,
+            max_attempts=self.max_attempts,
             quorum=self.quorum, round_deadline=self.round_deadline,
             min_clients=1, straggler_deadline=self.straggler_deadline,
             max_resends=self.max_resends, drain_deadline=self.drain_deadline,
             max_pending=self.max_pending,
             max_live_rounds=self.max_live_rounds)
 
+    def engine_config(self) -> EngineConfig:
+        return self.agg_config().engine_config()
+
     def service_config(self) -> ServiceConfig:
-        return ServiceConfig(d=self.d, q=self.q, bucket=self.bucket,
-                             y0=self.y0, seed=self.seed, anchored=True,
-                             mtu=self.mtu, max_attempts=self.max_attempts)
+        return self.agg_config().service_config()
 
 
 @dataclasses.dataclass
@@ -641,8 +651,8 @@ def replay_published_round(trace: _Trace, pr: PublishedRound) -> np.ndarray:
         c = AggClient(pr.spec, cid, trace.xs[cid], anchor=pr.anchor)
         clis[cid] = c
         for f in c.frames():
-            server.receive(f)
-    resps = server.drain()
+            server.ingest_frame(f)
+    resps = server.tick()
     while True:
         retries = []
         for rb in resps:
@@ -653,8 +663,8 @@ def replay_published_round(trace: _Trace, pr: PublishedRound) -> np.ndarray:
         if not retries:
             break
         for f in retries:
-            server.receive(f)
-        resps = server.drain()
+            server.ingest_frame(f)
+        resps = server.tick()
     mean, _ = server.finalize()
     assert server.accepted_clients == pr.accepted, \
         (server.accepted_clients, pr.accepted)
@@ -753,16 +763,16 @@ def run_open_loop(cfg: OpenLoopConfig = OpenLoopConfig(),
         elif kind == "frame":
             if rng.rand() < cfg.loss:
                 continue                    # lost on the wire
-            route(t, eng.receive(data, t))
+            route(t, eng.ingest_frame(data, t))
         elif kind == "tick":
-            route(t, eng.advance(t))
+            route(t, eng.tick(t))
         elif kind == "nudge":
             c = active.get(data)
             if (c is not None and not c.acked and not c.gave_up
                     and c.retry_round is None):
                 send_frames(t, data, c.frames(c.attempt))
     t_end = max(horizon, t_last) + cfg.tick
-    eng.advance(t_end)
+    eng.tick(t_end)
     eng.flush(t_end)
 
     assert benign_rejects == 0, \
@@ -867,8 +877,8 @@ def run_lockstep(cfg: OpenLoopConfig = OpenLoopConfig()) -> LockstepReport:
             c = AggClient(spec, cid, trace.xs[cid], anchor=anchor)
             clis[cid] = c
             for f in c.frames():
-                server.receive(f)
-        resps = server.drain()
+                server.ingest_frame(f)
+        resps = server.tick()
         while True:
             retries = []
             for rb in resps:
@@ -879,8 +889,8 @@ def run_lockstep(cfg: OpenLoopConfig = OpenLoopConfig()) -> LockstepReport:
             if not retries:
                 break
             for f in retries:
-                server.receive(f)
-            resps = server.drain()
+                server.ingest_frame(f)
+            resps = server.tick()
         svc.end_round(server)
         round_times.append(t_drain - t_open)
         t = t_drain

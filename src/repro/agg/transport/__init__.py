@@ -23,11 +23,14 @@ The byte arithmetic of every layer delegates to
 from repro.agg.transport.frame import (  # noqa: F401
     FrameHeader, Payload, Response, RoundSpec, WireError,
     TruncatedPayloadError, BadMagicError, VersionMismatchError,
-    CorruptPayloadError, HeaderMismatchError, WIRE_VERSION,
+    CorruptPayloadError, HeaderMismatchError, MAGIC_PAYLOAD, MAGIC_RESPONSE,
+    WIRE_VERSION, Q_CAP, FLAG_ROTATE, FLAG_ANCHORED,
     FRAME_HEADER_BYTES, STATUS_QUEUED, STATUS_ACK, STATUS_NACK,
-    STATUS_REJECT, STATUS_RESEND, decode_frame, decode_payload,
+    STATUS_REJECT, STATUS_RESEND, STATUS_RETRY, encode_frame, decode_frame,
+    decode_payload, peek_route, payload_from_body,
     build_payload, encode_payload, encode_response, decode_response,
     check_against_spec, check_frame_against_spec, check_sides_against_spec,
     payload_bytes, q_at_attempt, y_at_attempt, y_buckets_at_attempt)
-from repro.agg.transport.chunks import encode_chunks, chunk_frames  # noqa: F401
+from repro.agg.transport.chunks import (  # noqa: F401
+    encode_chunks, chunk_frames, select)
 from repro.agg.transport.session import Reassembler, ReassemblyStats  # noqa: F401

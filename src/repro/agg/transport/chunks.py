@@ -44,13 +44,14 @@ def chunk_frames(h0: F.FrameHeader, body: bytes, mtu: int) -> "list[bytes]":
 
 def encode_chunks(spec: F.RoundSpec, client_id: int, attempt: int, q: int,
                   words: np.ndarray, sides: np.ndarray,
-                  check: int) -> "list[bytes]":
+                  check: int, n_summed: int = 1) -> "list[bytes]":
     """Serialize one client message as its chunk-frame sequence (one frame
     when the body fits the MTU or the round is unchunked — in which case
     the single frame is byte-identical to :func:`frame.encode_payload`,
-    whose header builder this delegates to)."""
+    whose header builder this delegates to).  ``n_summed`` > 1 marks a tree
+    tier's combined payload (how many accepted clients it folded in)."""
     h0, body = F.build_payload(spec, client_id, attempt, q, words, sides,
-                               check)
+                               check, n_summed=n_summed)
     return chunk_frames(h0, body, spec.mtu)
 
 

@@ -1,4 +1,4 @@
-"""Frame layer: the versioned byte codec of the aggregation protocol (v3).
+"""Frame layer: the versioned byte codec of the aggregation protocol (v4).
 
 One transport frame carries one *chunk* of a client's packed payload body
 (the whole body when it fits the round's MTU) behind a fixed self-describing
@@ -7,7 +7,7 @@ header.  Frame layout, little-endian (header arithmetic pinned in
 
     offset  size  field
     0       4     magic         b"DMEA"
-    4       2     version       WIRE_VERSION (3)
+    4       2     version       WIRE_VERSION (4)
     6       2     flags         bit 0: rotate (HD pre-rotation, paper §6)
                                 bit 1: anchored (encoded x - anchor)
     8       4     round_id
@@ -25,8 +25,12 @@ header.  Frame layout, little-endian (header arithmetic pinned in
     56      4     n_chunks      chunks the body was split into (1 = unchunked)
     60      4     chunk_index   which chunk this frame carries
     64      4     payload_crc   CRC-32 of the FULL body (all chunks joined)
-    68      4     crc           CRC-32 of this frame (header zero-crc + chunk)
-    72      ...   chunk bytes   body[chunk_index*mtu : +mtu] (packed words
+    68      4     n_summed      ADDITIVE client count this payload sums
+                                (1 = an ordinary client; a tree tier
+                                forwarding a combined payload carries how
+                                many accepted clients it folded in)
+    72      4     crc           CRC-32 of this frame (header zero-crc + chunk)
+    76      ...   chunk bytes   body[chunk_index*mtu : +mtu] (packed words
                                 then the f32 sides sidecar; the MTU is the
                                 round's, pinned in RoundSpec)
 
@@ -46,7 +50,8 @@ round pins the sides s_b = 2*y_b/(q0-1) and each retry squares the color
 space, q <- q^2 (capped at 2^16), so integer coordinates from different
 attempts remain summable.
 
-Server responses (v3) carry the per-bucket decode margins plus — for
+Server responses (v4, layout unchanged since v3) carry the per-bucket
+decode margins plus — for
 ``STATUS_RESEND`` — the missing chunk indices of an incomplete reassembly:
 
     magic b"DMER" | version u16 | status u16 | round_id u32 | client_id u32
@@ -59,6 +64,16 @@ payload is exactly a v3 frame with n_chunks=1, chunk_index=0 and
 payload_crc over the same body.  v2 frames are refused with
 VersionMismatchError — there is no silent fallback, because a v2 sender
 cannot participate in chunked reassembly or selective retransmit.
+
+v3 -> v4 migration: one additive field, ``n_summed``, appended after
+``payload_crc`` (header 68 -> 72 bytes before the CRC word).  Every field
+keeps its v3 offset; an ordinary client always sends n_summed=1, and a v3
+payload is exactly a v4 payload with n_summed=1.  A tree tier
+(:mod:`repro.agg.tree`) that folded m accepted clients into one combined
+payload forwards it with n_summed=m, so the root can weight its integer
+coordinate sum by the true client count without decoding anything at the
+tier.  v3 frames are refused with VersionMismatchError, same policy as
+v2 -> v3.
 """
 from __future__ import annotations
 
@@ -75,13 +90,13 @@ from repro.dist.collectives import (QSyncConfig, flat_size_padded,
 
 MAGIC_PAYLOAD = b"DMEA"
 MAGIC_RESPONSE = b"DMER"
-WIRE_VERSION = 3
+WIRE_VERSION = 4
 Q_CAP = 1 << 16                   # largest packable color space (16 bits)
 
 FLAG_ROTATE = 1 << 0
 FLAG_ANCHORED = 1 << 1
 
-_HEADER = struct.Struct("<4sHH15I")
+_HEADER = struct.Struct("<4sHH16I")
 # response header up to and including n_missing; followed by nb f32 margins,
 # n_missing u32 chunk indices, and the crc
 _RESPONSE_HEAD = struct.Struct("<4sHHIIIIfII")
@@ -252,7 +267,7 @@ def payload_bytes(spec: RoundSpec, attempt: int = 0) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class FrameHeader:
-    """Parsed v3 frame header (framing validated; chunk body separate)."""
+    """Parsed v4 frame header (framing validated; chunk body separate)."""
     round_id: int
     client_id: int
     attempt: int
@@ -270,6 +285,7 @@ class FrameHeader:
     payload_crc: int
     rotate: bool
     anchored: bool
+    n_summed: int = 1          # additive client count (tree tiers > 1)
 
     @property
     def body_len(self) -> int:
@@ -294,6 +310,7 @@ class Payload:
     sides: np.ndarray          # (nb,) f32
     anchor_digest: int = 0
     anchored: bool = False
+    n_summed: int = 1          # additive client count (tree tiers > 1)
 
     @property
     def nb(self) -> int:
@@ -319,7 +336,8 @@ def _pack_header(h: FrameHeader) -> bytes:
                         h.client_id, h.attempt, h.q, h.d, h.bucket, h.seed,
                         h.rot_seed, h.n_words, h.nb, h.check & 0xFFFFFFFF,
                         h.anchor_digest & 0xFFFFFFFF, h.n_chunks,
-                        h.chunk_index, h.payload_crc & 0xFFFFFFFF)
+                        h.chunk_index, h.payload_crc & 0xFFFFFFFF,
+                        h.n_summed)
 
 
 def encode_frame(h: FrameHeader, chunk: bytes) -> bytes:
@@ -366,7 +384,7 @@ def decode_frame(data: bytes) -> "tuple[FrameHeader, bytes]":
             f"{hsize}-byte header")
     (magic, version, flags, round_id, client_id, attempt, q, d, bucket,
      seed, rot_seed, n_words, nb, check, anchor_digest, n_chunks,
-     chunk_index, payload_crc) = _HEADER.unpack_from(data, 0)
+     chunk_index, payload_crc, n_summed) = _HEADER.unpack_from(data, 0)
     if magic != MAGIC_PAYLOAD:
         raise BadMagicError(f"bad magic {magic!r}")
     if version != WIRE_VERSION:
@@ -395,6 +413,9 @@ def decode_frame(data: bytes) -> "tuple[FrameHeader, bytes]":
     if n_chunks < 1 or chunk_index >= n_chunks:
         raise CorruptPayloadError(
             f"inconsistent header: chunk {chunk_index} of {n_chunks}")
+    if n_summed < 1:
+        raise CorruptPayloadError(
+            f"inconsistent header: n_summed={n_summed} (must be >= 1)")
     if n_chunks == 1 and len(chunk) < body_len:
         raise TruncatedPayloadError(
             f"body has {len(chunk)} bytes, header promises {body_len}")
@@ -410,7 +431,8 @@ def decode_frame(data: bytes) -> "tuple[FrameHeader, bytes]":
                     n_words=n_words, nb=nb, check=check,
                     anchor_digest=anchor_digest, n_chunks=n_chunks,
                     chunk_index=chunk_index, payload_crc=payload_crc,
-                    rotate=bool(flags & FLAG_ROTATE), anchored=anchored)
+                    rotate=bool(flags & FLAG_ROTATE), anchored=anchored,
+                    n_summed=n_summed)
     return h, chunk
 
 
@@ -423,16 +445,20 @@ def payload_from_body(h: FrameHeader, body) -> Payload:
                    attempt=h.attempt, q=h.q, d=h.d, bucket=h.bucket,
                    seed=h.seed, rot_seed=h.rot_seed, rotate=h.rotate,
                    check=h.check, words=words, sides=sides,
-                   anchor_digest=h.anchor_digest, anchored=h.anchored)
+                   anchor_digest=h.anchor_digest, anchored=h.anchored,
+                   n_summed=h.n_summed)
 
 
 def build_payload(spec: RoundSpec, client_id: int, attempt: int, q: int,
-                  words: np.ndarray, sides: np.ndarray, check: int
-                  ) -> "tuple[FrameHeader, bytes]":
+                  words: np.ndarray, sides: np.ndarray, check: int,
+                  n_summed: int = 1) -> "tuple[FrameHeader, bytes]":
     """Assemble (header, body) of one client message — the ONE place the
     payload-level header fields are filled in (the chunk layer re-derives
     only the chunk coordinates, so the chunked and unchunked encoders can
-    never desync)."""
+    never desync).  ``n_summed`` > 1 marks a tree tier's combined payload
+    (the additive client count it folded in)."""
+    if n_summed < 1:
+        raise ValueError(f"n_summed must be >= 1, got {n_summed}")
     words = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
     sides = np.ascontiguousarray(np.asarray(sides, dtype=np.float32))
     body = words.tobytes() + sides.tobytes()
@@ -443,7 +469,8 @@ def build_payload(spec: RoundSpec, client_id: int, attempt: int, q: int,
                     check=int(check) & 0xFFFFFFFF,
                     anchor_digest=spec.anchor_digest & 0xFFFFFFFF,
                     n_chunks=1, chunk_index=0, payload_crc=zlib.crc32(body),
-                    rotate=spec.cfg.rotate, anchored=spec.anchored)
+                    rotate=spec.cfg.rotate, anchored=spec.anchored,
+                    n_summed=int(n_summed))
     return h, body
 
 

@@ -10,11 +10,21 @@ The monolithic v2 codec that used to live here was refactored into
 * :mod:`repro.agg.transport.session` — out-of-order server-side reassembly;
 
 with all byte arithmetic delegated to :mod:`repro.core.wire_accounting`.
-Every name the v2 module exported is re-exported here unchanged, so
-``from repro.agg import wire`` call sites keep working; new transport-aware
-code should import :mod:`repro.agg.transport` directly.
+This facade is **deprecated** (ISSUE 7): every in-repo caller now imports
+:mod:`repro.agg.transport` (or ``repro.agg.transport.frame`` directly), and
+importing this module raises a :class:`DeprecationWarning`.  The name table
+is frozen — nothing added since v3 — and the module will be removed once
+out-of-tree callers have migrated (see the README's migration table).
 """
-from repro.agg.transport.frame import (  # noqa: F401
+import warnings as _warnings
+
+_warnings.warn(
+    "repro.agg.wire is a deprecated facade; import repro.agg.transport "
+    "(layered API) or repro.agg.transport.frame (this exact surface) "
+    "instead — see README 'Migrating off repro.agg.wire'",
+    DeprecationWarning, stacklevel=2)
+
+from repro.agg.transport.frame import (  # noqa: F401,E402
     MAGIC_PAYLOAD, MAGIC_RESPONSE, WIRE_VERSION, Q_CAP, FLAG_ROTATE,
     FLAG_ANCHORED, FRAME_HEADER_BYTES, STATUS_QUEUED, STATUS_ACK,
     STATUS_NACK, STATUS_REJECT, STATUS_RESEND, STATUS_RETRY, WireError,

@@ -37,13 +37,13 @@ from repro.core import lattice as L
 SIDE_BYTES = 4
 WORD_BYTES = 4
 
-# agg transport frame layout (v3), see repro.agg.transport.frame:
-#   magic 4s | version u16 | flags u16 | 15 x u32 fields | crc u32
+# agg transport frame layout (v4), see repro.agg.transport.frame:
+#   magic 4s | version u16 | flags u16 | 16 x u32 fields | crc u32
 # The frame module asserts its struct sizes against these at import time —
 # the constants live here so the header math is auditable next to the body
 # math it frames.
-FRAME_FIXED_FIELDS = 15
-FRAME_HEADER_BYTES = 4 + 2 + 2 + 4 * FRAME_FIXED_FIELDS + 4        # 72
+FRAME_FIXED_FIELDS = 16
+FRAME_HEADER_BYTES = 4 + 2 + 2 + 4 * FRAME_FIXED_FIELDS + 4        # 76
 # response head: magic 4s | version u16 | status u16 | 4 x u32 | f32 | 2 x u32
 RESPONSE_HEAD_BYTES = 4 + 2 + 2 + 4 * 4 + 4 + 4 * 2                # 36
 RESPONSE_CRC_BYTES = 4
@@ -147,7 +147,7 @@ def chunk_span(body_len: int, mtu: int, index: int) -> "tuple[int, int]":
 
 def frame_bytes(chunk_len: int) -> int:
     """On-the-wire size of one transport frame carrying ``chunk_len`` body
-    bytes (fixed v3 header + per-frame CRC included in the header size)."""
+    bytes (fixed v4 header + per-frame CRC included in the header size)."""
     return FRAME_HEADER_BYTES + chunk_len
 
 

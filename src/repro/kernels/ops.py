@@ -8,6 +8,7 @@ cover (non-power-of-two FWHT dims, q not a power of two, tiny inputs).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Optional
 
 import jax
@@ -108,6 +109,40 @@ def lattice_decode_batched(words: jax.Array, anchor: jax.Array, u: jax.Array,
     return lattice_decode_batched_pallas(words, anchor, u, jnp.asarray(s),
                                          ref, q=q, bits=bits, n=n, mode=mode,
                                          interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("q", "n"))
+def _residuals_jit(words, k0, *, q: int, n: int):
+    return _ref.lattice_residuals_ref(words, k0, q=q,
+                                      bits=L.bits_for_q(q), n=n)
+
+
+def lattice_residuals(words: jax.Array, k0: jax.Array, *,
+                      q: int) -> jax.Array:
+    """Centered mod-q residuals of packed payloads about reference coords.
+
+    The integer-only half of proximity decode: ``r = centered_mod(c - k0,
+    q)`` per coordinate, so ``k0 + r`` is EXACTLY what the batched decode's
+    mode="coords" would produce for the same payload — without touching the
+    float anchor/side/dither math and without a decode dispatch.  This is
+    the tree tier's sum-without-decode primitive (repro.agg.tree): tiers
+    sum residuals in int space and the root alone decodes.  words:
+    (..., n_words) uint32; k0: (n,) int32 -> (..., n) int32.  Deliberately
+    NOT counted in DISPATCH_COUNTS — the acceptance gate asserts tiers
+    issue zero decode dispatches."""
+    return _residuals_jit(words, k0, q=q, n=k0.shape[0])
+
+
+@partial(jax.jit, static_argnames=("q",))
+def _pack_coords_jit(k, *, q: int):
+    return _ref.lattice_pack_coords_ref(k, q=q, bits=L.bits_for_q(q))
+
+
+def lattice_pack_coords(k: jax.Array, *, q: int) -> jax.Array:
+    """Pack int32 lattice coordinates as mod-q color words (the inverse of
+    the unpack+lift in :func:`lattice_residuals`): the tier's repack after
+    its in-place integer sum.  k: (..., n) int32 -> (..., n_words) uint32."""
+    return _pack_coords_jit(k, q=q)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

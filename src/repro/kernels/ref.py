@@ -50,6 +50,28 @@ def lattice_decode_ref(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
     return z
 
 
+def lattice_residuals_ref(words: jax.Array, k0: jax.Array, *, q: int,
+                          bits: int, n: int) -> jax.Array:
+    """Centered mod-q residuals of packed colors about reference coords k0.
+
+    The integer-only half of proximity decode: unpack the colors and lift
+    each to the representative nearest k0 — ``r = centered_mod(c - k0, q)``
+    — WITHOUT the float anchor/side/dither math.  ``k0 + r`` equals
+    :func:`lattice_decode_batched_ref`'s mode="coords" output exactly, so a
+    tree tier can sum residuals (and verify §5 checksums over ``k0 + r``)
+    while never decoding.  words: (..., n_words); k0: (n,) int32 ->
+    (..., n) int32."""
+    colors = L.unpack_colors(words, n, bits)
+    return L.centered_mod(colors.astype(jnp.int32) - k0.astype(jnp.int32), q)
+
+
+def lattice_pack_coords_ref(k: jax.Array, *, q: int, bits: int) -> jax.Array:
+    """Packed mod-q colors of int32 lattice coordinates (the inverse of the
+    unpack+lift in :func:`lattice_residuals_ref`): the tier's repack after
+    the in-place integer sum.  k: (..., n) int32 -> (..., n_words) uint32."""
+    return L.pack_colors(L.color_of(k, q), bits)
+
+
 def lattice_decode_batched_ref(words: jax.Array, anchor: jax.Array,
                                u: jax.Array, s, *, q: int, bits: int, n: int,
                                mode: str = "coords",

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.agg import rounds, sim, wire
+from repro.agg import rounds, sim
+from repro.agg.transport import frame as wire
 from repro.agg.client import AggClient
 from repro.agg.server import AggServer
 from repro.core import lattice as L
@@ -57,7 +58,7 @@ def test_wire_roundtrip_fuzz(d, q, bucket):
         attempt = int(rng.randint(0, 4))
         cid = int(rng.randint(0, 1 << 31))
         data = wire.encode_payload(spec, cid, attempt, q, words, sides, check)
-        assert len(data) == 72 + 4 * nw + 4 * nb      # 68B header + 4B CRC
+        assert len(data) == 76 + 4 * nw + 4 * nb      # 72B header + 4B CRC
         if attempt == 0 and q == spec.cfg.q:
             assert len(data) == wire.payload_bytes(spec, 0)
         p = wire.decode_payload(data)
@@ -78,7 +79,7 @@ def _payload():
 
 def test_wire_rejects_truncation():
     _, data = _payload()
-    for cut in (0, 10, 51, 71, 72, len(data) - 1):
+    for cut in (0, 10, 51, 75, 76, len(data) - 1):
         with pytest.raises(wire.TruncatedPayloadError):
             wire.decode_payload(data[:cut])
 
@@ -111,13 +112,13 @@ def test_wire_rejects_bad_magic_and_version():
 
 def test_wire_rejects_inconsistent_header():
     spec, data = _payload()
-    # lie about n_words (offset 40 in the 68-byte header), recomputing the
+    # lie about n_words (offset 40 in the 72-byte header), recomputing the
     # CRC so only the header consistency check can catch it
     b = bytearray(data)
     b[40:44] = struct.pack("<I", 7)
-    body = bytes(b[72:])
-    crc = zlib.crc32(body, zlib.crc32(bytes(b[:68])))
-    b[68:72] = struct.pack("<I", crc)
+    body = bytes(b[76:])
+    crc = zlib.crc32(body, zlib.crc32(bytes(b[:72])))
+    b[72:76] = struct.pack("<I", crc)
     with pytest.raises(wire.CorruptPayloadError):
         wire.decode_payload(bytes(b))
 
@@ -128,9 +129,9 @@ def test_wire_rejects_anchored_flag_digest_mismatch():
     spec, data = _payload()
     b = bytearray(data)
     b[52:56] = struct.pack("<I", 0xDEADBEEF)      # digest without the flag
-    body = bytes(b[72:])
-    crc = zlib.crc32(body, zlib.crc32(bytes(b[:68])))
-    b[68:72] = struct.pack("<I", crc)
+    body = bytes(b[76:])
+    crc = zlib.crc32(body, zlib.crc32(bytes(b[:72])))
+    b[72:76] = struct.pack("<I", crc)
     with pytest.raises(wire.CorruptPayloadError):
         wire.decode_payload(bytes(b))
 
@@ -613,7 +614,8 @@ def test_server_mean_bit_identical_to_star_8dev():
         from jax.sharding import PartitionSpec as P
         from repro.dist.collectives import (QSyncConfig,
             allgather_allreduce_mean, flat_size_padded)
-        from repro.agg import wire, rounds
+        from repro.agg import rounds
+        from repro.agg.transport import frame as wire
         from repro.agg.client import AggClient
         from repro.agg.server import AggServer
         mesh = jax.make_mesh((8,), ("data",),
@@ -672,7 +674,8 @@ def test_anchored_server_mean_bit_identical_to_anchored_star_8dev():
         from repro.core.qstate import QState
         from repro.dist.collectives import (QSyncConfig,
             allgather_allreduce_mean, flat_size_padded)
-        from repro.agg import wire, rounds
+        from repro.agg import rounds
+        from repro.agg.transport import frame as wire
         from repro.agg.client import AggClient
         from repro.agg.server import AggServer
         mesh = jax.make_mesh((8,), ("data",),

@@ -13,7 +13,8 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.agg import rounds, sim, wire
+from repro.agg import rounds, sim
+from repro.agg.transport import frame as wire
 from repro.agg.client import AggClient
 from repro.agg.engine import AggEngine, EngineConfig
 from repro.agg.server import AggServer

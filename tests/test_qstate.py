@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.agg import rounds, wire
+from repro.agg import rounds
+from repro.agg.transport import frame as wire
 from repro.core import bucketing as B
 from repro.core import qstate as QS
 from repro.core.qstate import QState

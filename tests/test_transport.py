@@ -8,7 +8,8 @@ import zlib
 import numpy as np
 import pytest
 
-from repro.agg import rounds, sim, wire
+from repro.agg import rounds, sim
+from repro.agg.transport import frame as wire
 from repro.agg.client import AggClient
 from repro.agg.server import AggServer
 from repro.agg.transport import chunks as C
@@ -73,9 +74,9 @@ def test_chunk_span_geometry():
     assert sum(ln for _, ln in spans) == 1000
     with pytest.raises(ValueError):
         WA.chunk_span(1000, 300, 4)
-    assert WA.framed_payload_bytes(1000, 300) == 4 * 72 + 1000
+    assert WA.framed_payload_bytes(1000, 300) == 4 * 76 + 1000
     assert WA.chunk_overhead_pct(1000, 300) == pytest.approx(
-        100.0 * 3 * 72 / 1072)
+        100.0 * 3 * 76 / 1076)
 
 
 def test_collective_accounting_delegates_to_wire_accounting():
@@ -130,7 +131,7 @@ def test_truncated_and_corrupt_chunks_rejected():
     _, _, fleets = _fleet(spec, 1)
     rng = np.random.RandomState(0)
     for f in fleets[0]:
-        for cut in (0, 10, 71, 72, len(f) - 1):
+        for cut in (0, 10, 75, 76, len(f) - 1):
             with pytest.raises(wire.WireError):
                 wire.decode_frame(f[:cut])
         with pytest.raises(wire.CorruptPayloadError):
@@ -610,11 +611,23 @@ def test_v2_frames_are_refused():
         wire.decode_payload(bytes(data))
 
 
-def test_wire_facade_reexports_transport():
+def test_wire_facade_reexports_transport_and_warns():
+    """The retired ``repro.agg.wire`` facade still re-exports the exact
+    frame-layer objects — and importing it raises DeprecationWarning."""
+    import importlib
+    import sys
+    import warnings
+
+    sys.modules.pop("repro.agg.wire", None)      # force a fresh import
+    with pytest.warns(DeprecationWarning, match="deprecated facade"):
+        legacy = importlib.import_module("repro.agg.wire")
     from repro.agg.transport import frame
-    assert wire.RoundSpec is frame.RoundSpec
-    assert wire.decode_frame is frame.decode_frame
-    assert wire.WIRE_VERSION == 3
+    assert legacy.RoundSpec is frame.RoundSpec
+    assert legacy.decode_frame is frame.decode_frame
+    assert legacy.peek_route is frame.peek_route
+    assert wire.WIRE_VERSION == 4
+    # the facade's name table never grows: it is frozen at the v3 surface
+    assert set(legacy.__all__) <= set(dir(frame))
     assert C.encode_chunks is not None and S.Reassembler is not None
     # single-frame chunk encode is byte-identical to encode_payload
     spec = _spec(mtu=0, d=512, bucket=64)
