@@ -17,10 +17,17 @@ non-terminal RETRY.  Demonstrates, and fails loudly if violated:
   * no benign client ever draws a terminal verdict: admission timing,
     backpressure and expiry are all non-terminal (PR 5's invariant);
   * the engine's virtual-clock rounds/sec beats the lockstep coordinator
-    on the IDENTICAL arrival trace.
+    on the IDENTICAL arrival trace;
+  * with observability enabled (ISSUE 8), every published round yields a
+    causally complete span tree — client encode → chunk frames → session
+    reassembly → drain → publish — validated by repro.obs.check_round, and
+    both exporters (Chrome trace JSON, Prometheus text) render the run.
 
     PYTHONPATH=src python examples/open_loop_agg.py
 """
+import json
+
+import repro.obs as obs
 from repro.agg.api import AggNode
 from repro.agg.engine import AggEngine
 from repro.agg.server import AggServer
@@ -83,3 +90,29 @@ if rep.rounds_per_s <= lock.rounds_per_s:
 print(f"engine vs lockstep: {rep.rounds_per_s / lock.rounds_per_s:.2f}x "
       f"rounds/s on the identical arrival trace")
 print("OPEN_LOOP_SMOKE_OK")
+
+# ---- observability smoke (ISSUE 8): rerun the identical trace with full
+# tracing/metrics/recording on and audit every published round's span tree
+obs.enable()
+try:
+    rep_t = run_open_loop(cfg, check_parity=False)
+    tr = obs.tracer()
+    for pr in rep_t.published:
+        problems = obs.check_round(tr, pr.round_id, accepted=pr.accepted)
+        if problems:
+            raise SystemExit(
+                f"round {pr.round_id} span tree incomplete: {problems}")
+    events = json.loads(obs.export.chrome_trace(tr))
+    prom = obs.export.prometheus_text(obs.registry())
+    if not events or "# TYPE" not in prom:
+        raise SystemExit("exporters produced no output for a traced run")
+    print(f"observability: {rep_t.rounds} published rounds, all span trees "
+          f"causally complete ({len(tr.spans)} spans, 0 dropped)"
+          if tr.dropped == 0 else
+          f"observability: {tr.dropped} spans dropped")
+    print(f"  exporters: chrome trace {len(events)} events, prometheus "
+          f"{len(obs.registry())} instruments")
+finally:
+    obs.disable()
+    obs.reset()
+print("OBS_SMOKE_OK")

@@ -41,6 +41,9 @@ GATE_MODULES = "bench_dme,bench_kernels,bench_agg"
 REGRESSION = 0.20          # >20% worse than baseline fails
 US_SLACK = 10_000.0        # absolute us slack: interpret-mode CPU timings
                            # jitter by ~10ms under co-located load
+OBS_OVERHEAD_MAX_PCT = 5.0  # ISSUE 8 acceptance: full observability
+                            # (metrics+tracing+recording) enabled may cost
+                            # at most 5% wall time on the open-loop trace
 # wall-clock + wire-compression guarded rows: the fused lattice kernels and
 # the aggregation-service round/receive paths (repro.agg throughput)
 GUARD_PREFIXES = ("kernel_lattice_", "agg_")
@@ -142,6 +145,13 @@ def compare(entries: dict, base: dict, same_machine: bool = True
     problems = []
     base_entries = base.get("entries", {})
     for name, e in entries.items():
+        # absolute gate, needs no baseline: bench_agg measures the same
+        # open-loop trace with observability fully enabled vs disabled
+        ov = e.get("metrics", {}).get("obs_overhead_pct")
+        if ov is not None and ov > OBS_OVERHEAD_MAX_PCT:
+            problems.append(
+                f"{name}: obs_overhead_pct {ov:.1f} exceeds the "
+                f"{OBS_OVERHEAD_MAX_PCT:.0f}% enabled-observability budget")
         b = base_entries.get(name)
         if b is None:
             continue
@@ -219,7 +229,7 @@ def main(argv=None) -> None:
     base_path, base = latest_baseline()
     same_machine = bool(base) and base.get("machine", machine_id()) == \
         machine_id()
-    problems = compare(entries, base, same_machine) if base else []
+    problems = compare(entries, base or {}, same_machine)
 
     if not args.no_write:
         today = datetime.date.today().isoformat()

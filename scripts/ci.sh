@@ -28,11 +28,15 @@
 #      live, every published mean bit-identical to a lockstep replay of
 #      that round's accepted clients, no terminal verdict for any benign
 #      client, and engine rounds/sec strictly above the lockstep
-#      coordinator on the identical arrival trace;
+#      coordinator on the identical arrival trace; the same smoke then
+#      reruns the trace with repro.obs fully enabled and asserts every
+#      published round's span tree is causally complete (check_round) and
+#      both exporters render (OBS_SMOKE_OK);
 #   6. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
 #      kernel_lattice_* timings + bench_dme accuracy + agg_* service
 #      throughput + the engine's virtual-clock latency/staleness/speedup
-#      vs the last committed BENCH_*.json baseline).
+#      vs the last committed BENCH_*.json baseline, plus the absolute
+#      obs_overhead_pct <= 5% enabled-observability budget).
 #
 # The `slow` suite (tests/test_multidevice.py, tests/test_trainer.py) runs
 # the same way without `-m "not slow"`; it is required before releases and

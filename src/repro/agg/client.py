@@ -43,6 +43,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as _obs
 from repro.agg import rounds
 from repro.agg.transport import chunks as C
 from repro.agg.transport import frame as wire
@@ -104,11 +105,23 @@ class AggClient:
             attempt = self.attempt
         cached = self._frames.get(attempt)
         if cached is None:
+            trace = _obs.tracing_enabled()
+            if trace:
+                _obs.tracer().begin(
+                    "encode",
+                    key=("client", self.spec.round_id, self.client_id),
+                    parent=("round", self.spec.round_id),
+                    round=self.spec.round_id, client=self.client_id,
+                    attempt=attempt)
             q, words = self._encode(attempt)
             cached = C.encode_chunks(self.spec, self.client_id, attempt, q,
                                      words, np.asarray(self._sides),
                                      self._check)
             self._frames[attempt] = cached
+            if trace:
+                _obs.tracer().end(
+                    ("client", self.spec.round_id, self.client_id),
+                    n_chunks=len(cached))
         return list(cached)
 
     def payload(self, attempt: Optional[int] = None) -> bytes:

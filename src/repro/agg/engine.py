@@ -54,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import repro.obs as _obs
 from repro.agg.api import PublishedLog, PublishedRound  # noqa: F401 (the
 #           dataclass moved to repro.agg.api with the AggNode protocol; it
 #           is re-exported here for its historical importers)
@@ -131,6 +132,9 @@ class AggEngine:
         rnd = self.svc.open_round(now=now, max_pending=self.cfg.max_pending)
         self.live[rnd.round_id] = rnd
         self._order.append(rnd)
+        if _obs.tracing_enabled():
+            _obs.tracer().begin("round", key=("round", rnd.round_id),
+                                t=now, round=rnd.round_id)
 
     # ------------------------------------------------------------ AggNode
     # The engine's native verbs (receive/advance/published) predate the
@@ -148,7 +152,7 @@ class AggEngine:
     def receive(self, data: bytes, now: float) -> "list[bytes]":
         """Route one frame; returns every response generated (the frame's
         own, plus any cutover/drain verdicts the event fired)."""
-        out = self.advance(now)
+        out = self.advance(now)     # advance() feeds the tracer's clock
         peek = wire.peek_route(data)
         if peek is None:
             # not even a v3 frame prefix: let the open round's server
@@ -162,6 +166,8 @@ class AggEngine:
             # not yet opened (reordered future traffic): non-terminal —
             # point the client at the round open for admission
             self.retried_unknown_round += 1
+            if _obs.metrics_enabled():
+                _obs.counter("engine_retried_unknown_round").inc()
             out.append(wire.encode_response(wire.Response(
                 status=wire.STATUS_RETRY, round_id=round_id,
                 client_id=client_id, attempt_next=0,
@@ -171,24 +177,26 @@ class AggEngine:
         self._activity[(round_id, client_id)] = now
         if (rnd is self.open_round
                 and rnd.server.admitted_count >= self.cfg.quorum):
-            out.extend(self.cutover(now))
+            out.extend(self.cutover(now, cause="quorum"))
         return out
 
     # ------------------------------------------------------------ EVENTS
     def advance(self, now: float) -> "list[bytes]":
         """Fire every due time-based event: straggler deadlines and drains
         on sealing rounds, in-order publishing, and deadline cutover."""
+        if _obs.tracing_enabled():
+            _obs.tracer().feed_time(now)
         out = self._service_sealing(now)
         self._publish_pass(now)
         rnd = self.open_round
         if now - rnd.opened_at >= self.cfg.round_deadline:
             if rnd.server.admitted_count >= self.cfg.min_clients:
-                out.extend(self.cutover(now))
+                out.extend(self.cutover(now, cause="deadline"))
             else:
                 rnd.opened_at = now          # nobody showed up: re-arm
         return out
 
-    def cutover(self, now: float) -> "list[bytes]":
+    def cutover(self, now: float, cause: str = "quorum") -> "list[bytes]":
         """Seal the open round (quorum or deadline met) and open the next.
 
         The seal-time drain pushes every decodable payload into the
@@ -196,10 +204,21 @@ class AggEngine:
         start the overlapping-drain phase."""
         rnd = self.open_round
         rnd.seal(now, next_round_id=rnd.round_id + 1)
+        if _obs.metrics_enabled():
+            _obs.counter("engine_cutovers", cause=cause).inc()
+        if _obs.tracing_enabled():
+            _obs.tracer().event("cutover", parent=("round", rnd.round_id),
+                                t=now, round=rnd.round_id, cause=cause,
+                                admitted=rnd.server.admitted_count)
         out = rnd.server.drain()
         self._publish_pass(now)
         while len(self._order) >= self.cfg.max_live_rounds:
-            self._publish(self._order[0], now)   # window full: oldest out
+            # window full: the oldest round leaves now, resolved or not
+            head = self._order[0]
+            _obs.trigger("forced_publish_window_full", at=now,
+                         round=head.round_id,
+                         unresolved=len(head.server.unresolved))
+            self._publish(head, now, forced=bool(head.server.unresolved))
         self._open_new(now)
         # earlier sealed rounds' RETRY hints follow the admission window
         for r in self._order[:-1]:
@@ -246,11 +265,15 @@ class AggEngine:
                     head.mark_drained(now)
                 self._publish(head, now)
             elif now - head.sealed_at >= self.cfg.drain_deadline:
-                self._publish(head, now)     # force: expires stragglers
+                # force: expires stragglers
+                _obs.trigger("forced_publish_drain_deadline", at=now,
+                             round=head.round_id,
+                             unresolved=len(head.server.unresolved))
+                self._publish(head, now, forced=True)
             else:
                 break
 
-    def _publish(self, rnd: Round, now: float) -> None:
+    def _publish(self, rnd: Round, now: float, forced: bool = False) -> None:
         anchor = rnd.client_anchor
         mean, stats = self.svc.publish_round(rnd, now)
         self.live.pop(rnd.round_id)
@@ -258,6 +281,11 @@ class AggEngine:
         self._publish_times[rnd.round_id] = now
         stale = (now - self._publish_times[rnd.anchor_round]
                  if rnd.anchor_round in self._publish_times else 0.0)
+        if _obs.metrics_enabled():
+            _obs.counter("engine_rounds_published",
+                         forced="1" if forced else "0").inc()
+            _obs.histogram("round_latency_s").observe(now - rnd.opened_at)
+            _obs.gauge("anchor_staleness_s").set(stale)
         self.published.append(PublishedRound(
             round_id=rnd.round_id, spec=rnd.spec, anchor=anchor, mean=mean,
             stats=stats, accepted=rnd.server.accepted_clients,
@@ -274,11 +302,13 @@ class AggEngine:
         """End of traffic: seal + force-publish every live round, in order
         (the open round included — its admitted clients get one last
         drain).  Returns the full published history."""
+        if _obs.tracing_enabled():
+            _obs.tracer().feed_time(now)
         rnd = self.open_round
         if rnd.server.admitted_count:
             rnd.seal(now, next_round_id=rnd.round_id + 1)
             rnd.server.drain()
         for r in list(self._order):
             if r.state is not RoundState.OPEN:
-                self._publish(r, now)
+                self._publish(r, now, forced=bool(r.server.unresolved))
         return self.published

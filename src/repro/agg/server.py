@@ -77,6 +77,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as _obs
 from repro.agg import rounds
 from repro.agg.api import PublishedRound
 from repro.agg.transport import frame as wire
@@ -264,8 +265,20 @@ class AggServer:
         # per-attempt per-bucket margin tuples for QUEUED/NACK responses
         # (attempts are bounded by max_attempts; don't rebuild per message)
         self._margins: dict[int, tuple] = {}
-        self.stats = RoundStats(dist_b=np.zeros((spec.nb,), np.float32),
-                                fails_b=np.zeros((spec.nb,), np.float32))
+        # the round's accounting lives in an obs scope (registry counters
+        # when metrics are enabled, a detached registry otherwise); the
+        # RoundStats dataclass every caller reads is filled from it on
+        # access.  Only the numpy per-bucket telemetry stays direct.
+        self._obs = _obs.scope("agg_round", round=spec.round_id)
+        self._stats = RoundStats(dist_b=np.zeros((spec.nb,), np.float32),
+                                 fails_b=np.zeros((spec.nb,), np.float32))
+        self._publish_traced = False
+
+    @property
+    def stats(self) -> RoundStats:
+        """Per-round telemetry, materialized from the obs scope."""
+        self._obs.fill(self._stats)
+        return self._stats
 
     def _margin_tuple(self, attempt: int) -> tuple:
         t = self._margins.get(attempt)
@@ -278,41 +291,45 @@ class AggServer:
     # ------------------------------------------------------------------ RX
     def receive(self, data: bytes) -> bytes:
         """Handle one arriving frame; returns the response bytes."""
-        self.stats.received += 1
-        self.stats.bytes_in += len(data)
+        self._obs.inc("received")
+        self._obs.inc("bytes_in", len(data))
         # the only bytes ever held before a CRC has vouched for them: this
         # one frame (<= header + MTU in a chunked round, whatever the d)
-        self.stats.peak_unvalidated_bytes = max(
-            self.stats.peak_unvalidated_bytes, len(data))
+        self._obs.set_max("peak_unvalidated_bytes", len(data))
         try:
             h, chunk = wire.decode_frame(data)
         except wire.WireError:
-            self.stats.rejected_wire += 1
+            self._obs.inc("rejected_wire")
             return self._respond(_reject(self.spec, 0xFFFFFFFF))
         try:
             wire.check_frame_against_spec(h, self.spec, len(chunk))
         except wire.HeaderMismatchError:
-            self.stats.rejected_spec += 1
+            self._obs.inc("rejected_spec")
             return self._respond(_reject(self.spec, h.client_id,
                                          round_id=h.round_id))
+        if _obs.tracing_enabled():
+            _obs.tracer().event("chunk",
+                                parent=("client", h.round_id, h.client_id),
+                                round=h.round_id, client=h.client_id,
+                                chunk=h.chunk_index, n_chunks=h.n_chunks)
         if h.client_id in self._gave_up:
             return self._respond(_reject(self.spec, h.client_id))
         if h.client_id in self._accepted:
             # duplicate delivery of an already-accumulated client: ACK
             # idempotently, never double-count
-            self.stats.duplicates += 1
+            self._obs.inc("duplicates")
             return self._respond(self._ack(h.client_id))
         if h.client_id not in self._admitted:
             # intake gate — BEFORE any buffered state is created for the
             # client, so a sealed or saturated round never opens a
             # reassembly stream it would have to carry
             if self._sealed:
-                self.stats.retried += 1
+                self._obs.inc("retried")
                 return self._respond(_retry(h.round_id, h.client_id,
                                             h.attempt, self._next_round_id))
             if (self.max_pending is not None
                     and self.occupancy >= self.max_pending):
-                self.stats.retried += 1
+                self._obs.inc("retried")
                 return self._respond(_retry(h.round_id, h.client_id,
                                             h.attempt, self.spec.round_id))
             self._admitted.add(h.client_id)
@@ -325,7 +342,7 @@ class AggServer:
                 # forged chunk shared the stream's header): the stream is
                 # dropped but the verdict is NOT terminal — direct a full
                 # rebuild; a REJECT would flip the honest client to gave_up
-                self.stats.resends_sent += 1
+                self._obs.inc("resends_sent")
                 return self._respond(wire.Response(
                     status=wire.STATUS_RESEND,
                     round_id=self.spec.round_id, client_id=h.client_id,
@@ -334,7 +351,7 @@ class AggServer:
                     missing=tuple(range(h.n_chunks))))
             if p is None:                   # PROGRESS / DUPLICATE / STALE
                 if event in (S.DUPLICATE, S.STALE):
-                    self.stats.duplicates += 1
+                    self._obs.inc("duplicates")
                 # slim ack: mid-reassembly nobody consumes the per-bucket
                 # margins or a missing list, so don't pay O(nb + n_chunks)
                 # response bytes per chunk
@@ -344,14 +361,20 @@ class AggServer:
             # validated per frame by check_frame_against_spec
             wire.check_sides_against_spec(p, self.spec)
         except wire.HeaderMismatchError:
-            self.stats.rejected_spec += 1
+            self._obs.inc("rejected_spec")
             return self._respond(_reject(self.spec, p.client_id))
         prev = self._pending.get(p.client_id)
         if prev is not None and prev.attempt >= p.attempt:
-            self.stats.duplicates += 1
+            self._obs.inc("duplicates")
         else:
             self._pending[p.client_id] = p
-            self.stats.queued += 1
+            self._obs.inc("queued")
+            if _obs.tracing_enabled():
+                # the payload's end-to-end CRC has vouched for the body and
+                # it is staged for the drain: the client's seal point
+                _obs.tracer().event(
+                    "seal", parent=("client", h.round_id, p.client_id),
+                    round=h.round_id, client=p.client_id, attempt=p.attempt)
         return self._respond(self._queued(h))
 
     def _queued(self, h: wire.FrameHeader,
@@ -372,7 +395,7 @@ class AggServer:
 
     def _respond(self, r: wire.Response) -> bytes:
         out = wire.encode_response(r)
-        self.stats.bytes_out += len(out)
+        self._obs.inc("bytes_out", len(out))
         return out
 
     # ------------------------------------------------------------ AggNode
@@ -454,7 +477,11 @@ class AggServer:
         self._pending.pop(client_id, None)
         self._rx.discard(client_id)
         self._admitted.discard(client_id)
-        self.stats.expired += 1
+        self._obs.inc("expired")
+        if _obs.tracing_enabled():
+            _obs.tracer().event("expire",
+                                parent=("round", self.spec.round_id),
+                                round=self.spec.round_id, client=client_id)
 
     # --------------------------------------------------------------- DRAIN
     @property
@@ -479,7 +506,11 @@ class AggServer:
         """
         if not self._pending:
             return self._resend_requests()
-        self.stats.drains += 1
+        self._obs.inc("drains")
+        drain_sp = _obs.tracer().begin(
+            "drain", parent=("round", self.spec.round_id),
+            round=self.spec.round_id, payloads=len(self._pending)) \
+            if _obs.tracing_enabled() else None
         by_q: dict[int, list[wire.Payload]] = {}
         for p in self._pending.values():
             by_q.setdefault(p.q, []).append(p)
@@ -527,37 +558,42 @@ class AggServer:
                     f"coordinates stay ~y/s instead of ~|x|/s")
             self._ksum = self._ksum + ksum_delta.reshape(self._ksum.shape)
             self._count += n_clients
-            self.stats.accepted += n_ok
-            self.stats.max_dist = max(self.stats.max_dist, float(max_dist))
-            self.stats.dist_b = np.maximum(self.stats.dist_b,
-                                           np.asarray(dist_b))
-            self.stats.fails_b = self.stats.fails_b + np.asarray(fails_b)
+            self._obs.inc("accepted", n_ok)
+            self._obs.set_max("max_dist", float(max_dist))
+            self._stats.dist_b = np.maximum(self._stats.dist_b,
+                                            np.asarray(dist_b))
+            self._stats.fails_b = self._stats.fails_b + np.asarray(fails_b)
             for p, good in zip(plist, ok):
                 if good:
                     self._accepted.add(p.client_id)
                     self._rx.discard(p.client_id)   # stale chunk sessions
                     responses.append(self._respond(self._ack(p.client_id)))
                     continue
-                self.stats.decode_failures += 1
+                self._obs.inc("decode_failures")
                 nxt = p.attempt + 1
                 if p.q >= wire.Q_CAP or nxt >= self.spec.max_attempts:
                     self._gave_up.add(p.client_id)
                     self._rx.discard(p.client_id)
-                    self.stats.gave_up += 1
+                    self._obs.inc("gave_up")
                     responses.append(
                         self._respond(_reject(self.spec, p.client_id)))
                     continue
-                self.stats.nacks_sent += 1
+                self._obs.inc("nacks_sent")
                 responses.append(self._respond(wire.Response(
                     status=wire.STATUS_NACK, round_id=self.spec.round_id,
                     client_id=p.client_id, attempt_next=nxt,
                     q_next=wire.q_at_attempt(self.spec.cfg.q, nxt),
                     y_next=wire.y_at_attempt(self.spec, nxt),
                     y_buckets=self._margin_tuple(nxt))))
+        if drain_sp is not None:
+            _obs.tracer().end(drain_sp, accepted=len(self._accepted))
         return responses + self._resend_requests()
 
     def _resend_for(self, cid: int, attempt: int, missing: tuple) -> bytes:
-        self.stats.resends_sent += 1
+        self._obs.inc("resends_sent")
+        if _obs.metrics_enabled():
+            _obs.counter("chunk_retransmits",
+                         round=self.spec.round_id).inc(len(missing))
         return self._respond(wire.Response(
             status=wire.STATUS_RESEND, round_id=self.spec.round_id,
             client_id=cid, attempt_next=attempt,
@@ -593,6 +629,14 @@ class AggServer:
         arrival order of the same accepted payload set.
         """
         self.drain()
+        if _obs.tracing_enabled() and not self._publish_traced:
+            self._publish_traced = True
+            tr = _obs.tracer()
+            tr.event("publish", parent=("round", self.spec.round_id),
+                     round=self.spec.round_id, accepted=len(self._accepted))
+            # close the round span (the engine opened it; a standalone flat
+            # server gets a synthetic one from the parent fallback above)
+            tr.end(("round", self.spec.round_id))
         if self._count == 0:
             if not self.spec.anchored:
                 return np.zeros((self.spec.d,), np.float32), self.stats

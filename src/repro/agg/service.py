@@ -63,6 +63,7 @@ from typing import Optional
 
 import numpy as np
 
+import repro.obs as _obs
 from repro.agg import rounds
 from repro.agg.transport import frame as wire
 from repro.agg.server import AggServer, RoundStats
@@ -153,6 +154,7 @@ class Round:
         self.server.seal(next_round_id)
         self.state = RoundState.SEALING
         self.sealed_at = now
+        self._trace_state(now)
 
     def mark_drained(self, now: float = 0.0) -> None:
         """SEALING -> DRAINED: every admitted client has an outcome."""
@@ -163,6 +165,7 @@ class Round:
                 f"admitted clients still unresolved")
         self.state = RoundState.DRAINED
         self.drained_at = now
+        self._trace_state(now)
 
     def publish(self, now: float = 0.0) -> "tuple[np.ndarray, RoundStats]":
         """Walk whatever remains of the life-cycle and finalize.
@@ -187,7 +190,14 @@ class Round:
         self.mean, self.stats = self.server.finalize()
         self.state = RoundState.PUBLISHED
         self.published_at = now
+        self._trace_state(now)
         return self.mean, self.stats
+
+    def _trace_state(self, now: float) -> None:
+        if _obs.tracing_enabled():
+            _obs.tracer().event("state", parent=("round", self.round_id),
+                                t=now, round=self.round_id,
+                                state=self.state.value)
 
 
 class AggService:

@@ -53,6 +53,7 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as _obs
 from repro.agg import rounds
 from repro.agg.api import AggConfig
 from repro.agg.client import AggClient
@@ -153,8 +154,20 @@ def fleet_frames(spec: wire.RoundSpec, xs: np.ndarray,
     """Every client's attempt-0 chunk-frame sequence (one frame per client
     when the round is unchunked), bit-identical to AggClient.frames()."""
     words, sides_np, checks = fleet_encode(spec, xs, anchor)
-    return [C.encode_chunks(spec, i, 0, spec.cfg.q, words[i], sides_np,
-                            int(checks[i])) for i in range(xs.shape[0])]
+    trace = _obs.tracing_enabled()
+    out = []
+    for i in range(xs.shape[0]):
+        if trace:
+            _obs.tracer().begin("encode",
+                                key=("client", spec.round_id, i),
+                                parent=("round", spec.round_id),
+                                round=spec.round_id, client=i, attempt=0)
+        fr = C.encode_chunks(spec, i, 0, spec.cfg.q, words[i], sides_np,
+                             int(checks[i]))
+        if trace:
+            _obs.tracer().end(("client", spec.round_id, i), n_chunks=len(fr))
+        out.append(fr)
+    return out
 
 
 def fleet_payloads(spec: wire.RoundSpec, xs: np.ndarray,
@@ -169,8 +182,20 @@ def fleet_payloads(spec: wire.RoundSpec, xs: np.ndarray,
             f"spec chunks payloads into {spec.n_chunks()} frames at mtu "
             f"{spec.mtu}; use fleet_frames()")
     words, sides_np, checks = fleet_encode(spec, xs, anchor)
-    return [wire.encode_payload(spec, i, 0, spec.cfg.q, words[i], sides_np,
-                                int(checks[i])) for i in range(xs.shape[0])]
+    trace = _obs.tracing_enabled()
+    out = []
+    for i in range(xs.shape[0]):
+        if trace:
+            _obs.tracer().begin("encode",
+                                key=("client", spec.round_id, i),
+                                parent=("round", spec.round_id),
+                                round=spec.round_id, client=i, attempt=0)
+        pl = wire.encode_payload(spec, i, 0, spec.cfg.q, words[i], sides_np,
+                                 int(checks[i]))
+        if trace:
+            _obs.tracer().end(("client", spec.round_id, i), n_chunks=1)
+        out.append(pl)
+    return out
 
 
 def run_round(cfg: SimConfig = SimConfig()) -> SimReport:
@@ -758,6 +783,8 @@ def run_open_loop(cfg: OpenLoopConfig = OpenLoopConfig(),
     while heap:
         t, _, kind, data = heapq.heappop(heap)
         t_last = max(t_last, t)
+        if _obs.tracing_enabled():
+            _obs.tracer().feed_time(t)   # virtual sim clock drives spans
         if kind == "enroll":
             enroll(t, data)
         elif kind == "frame":
@@ -785,7 +812,8 @@ def run_open_loop(cfg: OpenLoopConfig = OpenLoopConfig(),
             replay_published_round(trace, pr)
 
     pubs = eng.published
-    lat = np.array([pr.latency for pr in pubs]) if pubs else np.zeros(1)
+    lat_h = _obs.Histogram.from_values(
+        [pr.latency for pr in pubs] or [0.0])
     stale = np.array([pr.staleness for pr in pubs]) if pubs else np.zeros(1)
     makespan = (pubs[-1].published_at - pubs[0].opened_at) if pubs else 0.0
     return OpenLoopReport(
@@ -796,8 +824,8 @@ def run_open_loop(cfg: OpenLoopConfig = OpenLoopConfig(),
                        + sum(pr.stats.retried for pr in pubs)),
         resends_total=sum(pr.stats.resends_sent for pr in pubs),
         max_live_rounds=eng.max_live_seen,
-        p50_latency=float(np.percentile(lat, 50)),
-        p99_latency=float(np.percentile(lat, 99)),
+        p50_latency=float(lat_h.quantile(50)),
+        p99_latency=float(lat_h.quantile(99)),
         mean_staleness=float(stale.mean()),
         max_staleness_rounds=max((pr.staleness_rounds for pr in pubs),
                                  default=0),

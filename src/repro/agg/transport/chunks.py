@@ -20,6 +20,7 @@ import zlib
 
 import numpy as np
 
+import repro.obs as _obs
 from repro.agg.transport import frame as F
 from repro.core import wire_accounting as WA
 
@@ -63,5 +64,9 @@ def select(frames: "list[bytes]", missing: "tuple[int, ...]"
     different attempt's geometry — fall back to re-sending everything
     (idempotent, so over-sending is safe; under-sending would deadlock)."""
     if not missing or any(i >= len(frames) for i in missing):
-        return list(frames)
-    return [frames[i] for i in missing]
+        out = list(frames)
+    else:
+        out = [frames[i] for i in missing]
+    if _obs.metrics_enabled():
+        _obs.counter("chunk_retransmit_frames").inc(len(out))
+    return out

@@ -83,6 +83,7 @@ import zlib
 
 import numpy as np
 
+import repro.obs as _obs
 from repro.core import lattice as L
 from repro.core import wire_accounting as WA
 from repro.dist.collectives import (QSyncConfig, flat_size_padded,
@@ -377,6 +378,20 @@ def decode_frame(data: bytes) -> "tuple[FrameHeader, bytes]":
     against the round's MTU is the spec's business
     (:func:`check_frame_against_spec`).
     """
+    try:
+        return _decode_frame(data)
+    except WireError as e:
+        _count_decode_error("frame", e)
+        raise
+
+
+def _count_decode_error(path: str, e: WireError) -> None:
+    if _obs.metrics_enabled():
+        _obs.counter("wire_decode_errors", path=path,
+                     kind=type(e).__name__).inc()
+
+
+def _decode_frame(data: bytes) -> "tuple[FrameHeader, bytes]":
     hsize = _HEADER.size + 4                       # header + crc word
     if len(data) < hsize:
         raise TruncatedPayloadError(
@@ -579,6 +594,14 @@ def encode_response(r: Response) -> bytes:
 
 
 def decode_response(data: bytes) -> Response:
+    try:
+        return _decode_response(data)
+    except WireError as e:
+        _count_decode_error("response", e)
+        raise
+
+
+def _decode_response(data: bytes) -> Response:
     hsize = _RESPONSE_HEAD.size
     if len(data) < hsize + 4:
         raise TruncatedPayloadError(

@@ -48,6 +48,7 @@ import dataclasses
 import zlib
 from typing import Optional
 
+import repro.obs as _obs
 from repro.agg.transport import frame as F
 
 # honest stream + one interloper; beyond that, evict the least complete
@@ -134,6 +135,15 @@ class Reassembler:
         self.stats.buffer_bytes += h.body_len
         self.stats.peak_buffer_bytes = max(self.stats.peak_buffer_bytes,
                                            self.stats.buffer_bytes)
+        if _obs.metrics_enabled():
+            _obs.gauge("peak_staging_bytes", round=h.round_id).set_max(
+                self.stats.buffer_bytes)
+        if _obs.tracing_enabled():
+            _obs.tracer().begin(
+                "reassembly", key=("reassembly", h.round_id, h.client_id),
+                parent=("client", h.round_id, h.client_id),
+                round=h.round_id, client=h.client_id, attempt=h.attempt,
+                n_chunks=h.n_chunks)
         return s
 
     def add(self, h: F.FrameHeader, chunk: bytes
@@ -172,8 +182,19 @@ class Reassembler:
         if zlib.crc32(s.buf) != h.payload_crc:
             self.stats.rejects += 1
             self._drop(h.client_id, s)   # retryable: caller RESENDs all
+            if _obs.metrics_enabled():
+                _obs.counter("payload_crc_seal_failures",
+                             round=h.round_id).inc()
+            if _obs.tracing_enabled():
+                _obs.tracer().end(
+                    ("reassembly", h.round_id, h.client_id), rejected=True)
+            _obs.trigger("payload_crc_seal_failure",
+                         at=_obs.tracer().now(),
+                         round=h.round_id, client=h.client_id)
             return REJECT, None
         self.stats.completed += 1
+        if _obs.tracing_enabled():
+            _obs.tracer().end(("reassembly", h.round_id, h.client_id))
         self.discard(h.client_id)        # retire the whole group
         return COMPLETE, F.payload_from_body(s.header, s.buf)
 
@@ -205,7 +226,12 @@ class Reassembler:
 
     def discard(self, client_id: int) -> None:
         """Drop a client's open streams (accepted / gave-up clients)."""
-        for s in list(self._groups.get(client_id, [])):
+        group = list(self._groups.get(client_id, []))
+        if group and _obs.tracing_enabled():
+            # idempotent: already-completed streams ended their span above
+            _obs.tracer().end(("reassembly", self.spec.round_id, client_id),
+                              discarded=True)
+        for s in group:
             self._drop(client_id, s)
 
     @property

@@ -62,6 +62,7 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as _obs
 from repro.agg import rounds
 from repro.agg.api import PublishedRound
 from repro.agg.server import AggServer, _reject, _retry
@@ -155,7 +156,23 @@ class TierAggregator:
         self._up_gave_up = False
         self._up_idle_ticks = 0
         self.retry_round: Optional[int] = None
-        self.stats = TierStats()
+        # tier accounting lives in an obs scope (exported registry counters
+        # when metrics are on, a detached registry otherwise); the TierStats
+        # dataclass callers read is filled from it on access
+        self._obs = _obs.scope("agg_tier", round=spec.round_id,
+                               node=node_id)
+        self._stats = TierStats()
+
+    @property
+    def stats(self) -> TierStats:
+        """This tier's telemetry, materialized from the obs scope."""
+        self._obs.fill(self._stats)
+        return self._stats
+
+    @property
+    def tier_index(self) -> int:
+        """(layer, position) packed in the node id — for labels/debug."""
+        return self.node_id & ~TIER_ID_BASE
 
     # ------------------------------------------------------------ AggNode
     def ingest_frame(self, data: bytes, now: float = 0.0) -> "list[bytes]":
@@ -185,32 +202,38 @@ class TierAggregator:
         idempotently, and a sealed tier or full pending store answers a
         non-terminal RETRY.
         """
-        self.stats.received += 1
-        self.stats.bytes_in += len(data)
+        self._obs.inc("received")
+        self._obs.inc("bytes_in", len(data))
         try:
             h, chunk = wire.decode_frame(data)
         except wire.WireError:
-            self.stats.rejected_wire += 1
+            self._obs.inc("rejected_wire")
             return self._respond(_reject(self.spec, 0xFFFFFFFF))
         try:
             wire.check_frame_against_spec(h, self.spec, len(chunk))
         except wire.HeaderMismatchError:
-            self.stats.rejected_spec += 1
+            self._obs.inc("rejected_spec")
             return self._respond(_reject(self.spec, h.client_id,
                                          round_id=h.round_id))
+        if _obs.tracing_enabled():
+            _obs.tracer().event("chunk",
+                                parent=("client", h.round_id, h.client_id),
+                                round=h.round_id, client=h.client_id,
+                                tier=self.node_id, chunk=h.chunk_index,
+                                n_chunks=h.n_chunks)
         if h.client_id in self._gave_up:
             return self._respond(_reject(self.spec, h.client_id))
         if h.client_id in self._accepted:
-            self.stats.duplicates += 1
+            self._obs.inc("duplicates")
             return self._respond(self._ack(h.client_id))
         if h.client_id not in self._admitted:
             if self._sealed:
-                self.stats.retried += 1
+                self._obs.inc("retried")
                 return self._respond(_retry(h.round_id, h.client_id,
                                             h.attempt, self._next_round_id))
             if (self.max_pending is not None
                     and self.occupancy >= self.max_pending):
-                self.stats.retried += 1
+                self._obs.inc("retried")
                 return self._respond(_retry(h.round_id, h.client_id,
                                             h.attempt, self.spec.round_id))
             self._admitted.add(h.client_id)
@@ -219,7 +242,7 @@ class TierAggregator:
         else:
             event, p = self._rx.add(h, chunk)
             if event == S.REJECT:
-                self.stats.resends_sent += 1
+                self._obs.inc("resends_sent")
                 return self._respond(wire.Response(
                     status=wire.STATUS_RESEND,
                     round_id=self.spec.round_id, client_id=h.client_id,
@@ -228,19 +251,24 @@ class TierAggregator:
                     missing=tuple(range(h.n_chunks))))
             if p is None:                   # PROGRESS / DUPLICATE / STALE
                 if event in (S.DUPLICATE, S.STALE):
-                    self.stats.duplicates += 1
+                    self._obs.inc("duplicates")
                 return self._respond(self._queued(h, slim=True))
         try:
             wire.check_sides_against_spec(p, self.spec)
         except wire.HeaderMismatchError:
-            self.stats.rejected_spec += 1
+            self._obs.inc("rejected_spec")
             return self._respond(_reject(self.spec, p.client_id))
         prev = self._pending.get(p.client_id)
         if prev is not None and prev.attempt >= p.attempt:
-            self.stats.duplicates += 1
+            self._obs.inc("duplicates")
         else:
             self._pending[p.client_id] = p
-            self.stats.queued += 1
+            self._obs.inc("queued")
+            if _obs.tracing_enabled():
+                _obs.tracer().event(
+                    "seal", parent=("client", h.round_id, p.client_id),
+                    round=h.round_id, client=p.client_id,
+                    tier=self.node_id, attempt=p.attempt)
         return self._respond(self._queued(h))
 
     def drain_children(self) -> "list[bytes]":
@@ -255,7 +283,11 @@ class TierAggregator:
         """
         if not self._pending:
             return self._resend_requests()
-        self.stats.drains += 1
+        self._obs.inc("drains")
+        fold_sp = _obs.tracer().begin(
+            "fold", parent=("round", self.spec.round_id),
+            round=self.spec.round_id, tier=self.node_id,
+            payloads=len(self._pending)) if _obs.tracing_enabled() else None
         staged = sorted(self._pending.values(), key=lambda p: p.client_id)
         self._pending.clear()
         responses = []
@@ -277,33 +309,43 @@ class TierAggregator:
                 # outside the widest escalation attempt's centered range —
                 # the repacked colors would alias.  Terminal for the child
                 # at THIS tier (it may enroll flat in a later round).
-                self.stats.saturated += 1
-                self.stats.gave_up += 1
+                self._obs.inc("saturated")
+                self._obs.inc("gave_up")
                 self._gave_up.add(p.client_id)
                 self._rx.discard(p.client_id)
+                if fold_sp is not None:
+                    _obs.tracer().event(
+                        "saturation_reject", parent=fold_sp.span_id,
+                        round=self.spec.round_id, tier=self.node_id,
+                        client=p.client_id)
+                _obs.trigger("saturation_reject", at=_obs.tracer().now(),
+                             round=self.spec.round_id, tier=self.node_id,
+                             client=p.client_id)
                 responses.append(self._respond(_reject(self.spec,
                                                        p.client_id)))
                 continue
             self._R = cand
             self._m += p.n_summed
-            self.stats.accepted += 1
-            self.stats.clients_summed += p.n_summed
+            self._obs.inc("accepted")
+            self._obs.inc("clients_summed", p.n_summed)
             self._accepted.add(p.client_id)
             self._rx.discard(p.client_id)
             responses.append(self._respond(self._ack(p.client_id)))
+        if fold_sp is not None:
+            _obs.tracer().end(fold_sp, folded=self._m)
         return responses + self._resend_requests()
 
     def _decode_failure(self, p: wire.Payload) -> bytes:
         """The flat server's escalation schedule, verbatim: NACK to the
         next attempt, terminal REJECT at the color-space cap."""
-        self.stats.decode_failures += 1
+        self._obs.inc("decode_failures")
         nxt = p.attempt + 1
         if p.q >= wire.Q_CAP or nxt >= self.spec.max_attempts:
             self._gave_up.add(p.client_id)
             self._rx.discard(p.client_id)
-            self.stats.gave_up += 1
+            self._obs.inc("gave_up")
             return self._respond(_reject(self.spec, p.client_id))
-        self.stats.nacks_sent += 1
+        self._obs.inc("nacks_sent")
         return self._respond(wire.Response(
             status=wire.STATUS_NACK, round_id=self.spec.round_id,
             client_id=p.client_id, attempt_next=nxt,
@@ -335,13 +377,13 @@ class TierAggregator:
 
     def _respond(self, r: wire.Response) -> bytes:
         out = wire.encode_response(r)
-        self.stats.bytes_out += len(out)
+        self._obs.inc("bytes_out", len(out))
         return out
 
     def _resend_requests(self) -> "list[bytes]":
         out = []
         for cid, (attempt, missing) in self._rx.incomplete().items():
-            self.stats.resends_sent += 1
+            self._obs.inc("resends_sent")
             out.append(self._respond(wire.Response(
                 status=wire.STATUS_RESEND, round_id=self.spec.round_id,
                 client_id=cid, attempt_next=attempt,
@@ -391,7 +433,7 @@ class TierAggregator:
         self._pending.pop(client_id, None)
         self._rx.discard(client_id)
         self._admitted.discard(client_id)
-        self.stats.expired += 1
+        self._obs.inc("expired")
 
     @property
     def forwarded_q(self) -> "int | None":
@@ -445,8 +487,8 @@ class TierAggregator:
         return list(cached)
 
     def _send_up(self, frames: "list[bytes]") -> "list[bytes]":
-        self.stats.up_frames_sent += len(frames)
-        self.stats.bytes_out += sum(len(f) for f in frames)
+        self._obs.inc("up_frames_sent", len(frames))
+        self._obs.inc("bytes_out", sum(len(f) for f in frames))
         return frames
 
     def _upstream_tick(self) -> "list[bytes]":
@@ -464,7 +506,7 @@ class TierAggregator:
         self._up_idle_ticks += 1
         if self._up_idle_ticks >= _UP_RESEND_TICKS:
             self._up_idle_ticks = 0
-            self.stats.up_resends += 1
+            self._obs.inc("up_resends")
             return self._send_up(self._frames_at(self._up_attempt))
         return []
 
@@ -494,7 +536,7 @@ class TierAggregator:
         if r.status == wire.STATUS_RESEND:
             if r.attempt_next != self._up_attempt:
                 return []
-            self.stats.up_resends += 1
+            self._obs.inc("up_resends")
             return self._send_up(C.select(self._frames_at(self._up_attempt),
                                           r.missing))
         # NACK: escalate — repack the SAME coordinates at the directed q
@@ -503,7 +545,7 @@ class TierAggregator:
             return []
         if r.attempt_next <= self._up_attempt:
             return []
-        self.stats.up_escalations += 1
+        self._obs.inc("up_escalations")
         self._up_attempt = r.attempt_next
         return self._send_up(self._frames_at(self._up_attempt))
 

@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+import repro.obs as _obs
 from repro.core import lattice as L
 from repro.kernels import ref as _ref
 from repro.kernels.fwht import fwht_pallas, MAX_D
@@ -26,12 +27,61 @@ from repro.kernels.flash_attention import flash_attention_pallas
 # (counted at trace time — one entry per kernel launch in the compiled
 # program).  tests/test_agg.py asserts the star collective and the agg
 # server drain stay single-dispatch however many senders they decode.
-DISPATCH_COUNTS: dict = {"lattice_decode": 0, "lattice_decode_batched": 0}
+#
+# The counts live in the repro.obs registry (always-registered counters, so
+# they are exported whenever metrics are enabled); DISPATCH_COUNTS is kept
+# as a read-only dict-shaped view over those counters for the existing
+# callers and tests.
+_DISPATCH = {
+    "lattice_decode": _obs.registry().counter("kernel_dispatch",
+                                              kernel="lattice_decode"),
+    "lattice_decode_batched": _obs.registry().counter(
+        "kernel_dispatch", kernel="lattice_decode_batched"),
+}
+
+
+class _DispatchCounts:
+    """Dict-shaped live view over the registry dispatch counters."""
+    __slots__ = ()
+
+    def __getitem__(self, k: str) -> int:
+        return _DISPATCH[k].value
+
+    def get(self, k: str, default=None):
+        c = _DISPATCH.get(k)
+        return default if c is None else c.value
+
+    def __contains__(self, k) -> bool:
+        return k in _DISPATCH
+
+    def __iter__(self):
+        return iter(_DISPATCH)
+
+    def __len__(self) -> int:
+        return len(_DISPATCH)
+
+    def keys(self):
+        return _DISPATCH.keys()
+
+    def values(self):
+        return [c.value for c in _DISPATCH.values()]
+
+    def items(self):
+        return [(k, c.value) for k, c in _DISPATCH.items()]
+
+    def __eq__(self, other):
+        return dict(self.items()) == other
+
+    def __repr__(self) -> str:
+        return repr(dict(self.items()))
+
+
+DISPATCH_COUNTS = _DispatchCounts()
 
 
 def reset_dispatch_counts() -> None:
-    for k in DISPATCH_COUNTS:
-        DISPATCH_COUNTS[k] = 0
+    for c in _DISPATCH.values():
+        c.reset()
 
 
 def _interpret() -> bool:
@@ -77,7 +127,7 @@ def lattice_decode(words: jax.Array, anchor: jax.Array, u: jax.Array, s,
     QState anchor the sender subtracted (fused anchor-relative frame)."""
     bits = L.bits_for_q(q)
     n = anchor.shape[0]
-    DISPATCH_COUNTS["lattice_decode"] += 1
+    _DISPATCH["lattice_decode"].inc()
     if not _pow2(q) or bits not in (2, 4, 8, 16) or n < 32:
         return _ref.lattice_decode_ref(words, anchor, u, s, q=q, bits=bits,
                                        n=n, avg_cnt=avg_cnt, mode=mode,
@@ -101,7 +151,7 @@ def lattice_decode_batched(words: jax.Array, anchor: jax.Array, u: jax.Array,
     """
     bits = L.bits_for_q(q)
     n = anchor.shape[0]
-    DISPATCH_COUNTS["lattice_decode_batched"] += 1
+    _DISPATCH["lattice_decode_batched"].inc()
     if not _pow2(q) or bits not in (2, 4, 8, 16) or n < 32:
         return _ref.lattice_decode_batched_ref(words, anchor, u,
                                                jnp.asarray(s), q=q, bits=bits,
