@@ -13,7 +13,12 @@ Demonstrates, and fails loudly if violated (this script is a CI smoke):
   * the chunked transport (ISSUE 5): one round with the MTU forcing >= 4
     chunks per client is bit-identical to the single-frame round, and a
     lossy round recovers dropped/corrupt chunks at exactly the lost
-    chunks' wire cost (selective retransmit, never a payload resend).
+    chunks' wire cost (selective retransmit, never a payload resend);
+  * windowed streaming decode (ISSUE 9, wire v5): a credit-paced round
+    (``window=2``) under 10% loss converges via ack/credit + selective
+    RESEND + timeout recovery, exercises window stalls, shrinks the
+    pending store below the sealed path's high-water, and publishes a
+    mean bit-identical to the sealed batched-decode drain.
 
     PYTHONPATH=src python examples/federated_dme.py                 # flat
     PYTHONPATH=src python examples/federated_dme.py --topology tree # tree
@@ -183,6 +188,53 @@ print(f"lossy chunked round: {rep_l.retransmit_bytes} B retransmitted for "
       f"{len(rep_l.mean)}-d payloads (full resend would be "
       f"{rep_l.full_resend_bytes} B)")
 print("chunked transport: OK")
+
+# --- windowed streaming round (v5, ISSUE 9 CI smoke): credit-paced clients
+# under loss against the streaming-decode server, bit-identical to the
+# sealed batched drain over the same accepted clients ----------------------
+wspec = dataclasses.replace(chunked_spec, window=2)
+server_w = AggServer(wspec, base)
+clients_w = [AggClient(wspec, cid, xs[cid]) for cid in range(len(xs))]
+rng_w = np.random.RandomState(9)
+outbox = [(c, f) for c in clients_w for f in c.send_frames()]
+for _ in range(400):
+    nxt = []
+    for c, f in outbox:
+        if rng_w.rand() < 0.10:
+            continue                         # lost on the wire
+        rb = server_w.receive(f)
+        nxt.extend((c, g) for g in c.handle_response(rb))
+    outbox = nxt
+    if all(c.acked for c in clients_w):
+        break
+    if not outbox:                           # quiet: timeout recovery
+        for c in clients_w:
+            rr = server_w.resend_request(c.client_id)
+            if rr is not None:
+                outbox.extend((c, g) for g in c.handle_response(rr))
+            else:
+                outbox.extend((c, f) for f in c.retransmit_frames())
+if not all(c.acked for c in clients_w):
+    raise SystemExit("windowed round did not converge under loss")
+mean_w, stats_w = server_w.finalize()
+sealed_w = AggServer(wspec, base, streaming=False)
+for fs in fleet_frames(wspec, xs):
+    for f in fs:
+        sealed_w.receive(f)
+mean_sealed, stats_sealed = sealed_w.finalize()
+if not np.array_equal(mean_w.view(np.uint32), mean_sealed.view(np.uint32)):
+    raise SystemExit("streaming mean != sealed batched-decode mean")
+stalls = sum(c.window_stalls for c in clients_w)
+if stalls == 0:
+    raise SystemExit("lossy windowed round exercised no window stalls")
+if stats_w.peak_pending_store_bytes >= stats_sealed.peak_pending_store_bytes:
+    raise SystemExit("streaming decode did not shrink the pending store")
+print(f"windowed streaming round: window={wspec.window} 10% loss, "
+      f"{stalls} window stalls; pending store "
+      f"{stats_w.peak_pending_store_bytes} B vs sealed "
+      f"{stats_sealed.peak_pending_store_bytes} B; bit-identical to "
+      f"sealed drain")
+print("windowed streaming decode: OK")
 
 # --- anchored multi-round service (RoundSpec v2, ISSUE 4 CI smoke) --------
 # Three rounds over a drifting large-norm population: round k+1's anchor is

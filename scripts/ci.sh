@@ -15,7 +15,11 @@
 #      arrival-order bit-determinism; a CHUNKED round (v3 transport, MTU
 #      forcing >= 4 chunks/client) asserting bit-identity with the
 #      single-frame round, the bounded transport staging, and the
-#      selective-retransmit wire cost of a lossy round; PLUS three anchored
+#      selective-retransmit wire cost of a lossy round; a WINDOWED
+#      streaming round (v5: window=2, 10% loss) asserting ack/credit
+#      convergence with window stalls, a pending store below the sealed
+#      path's high-water, and bit-identity with the sealed batched-decode
+#      drain; PLUS three anchored
 #      multi-round service rounds asserting that round k+1's anchor digest
 #      matches round k's published mean and no clients are lost; and the
 #      HIERARCHICAL topology (--topology tree): 96 chunked clients through
@@ -36,7 +40,7 @@
 #      kernel_lattice_* timings + bench_dme accuracy + agg_* service
 #      throughput + the engine's virtual-clock latency/staleness/speedup
 #      vs the last committed BENCH_*.json baseline, plus the absolute
-#      obs_overhead_pct <= 5% enabled-observability budget).
+#      obs_overhead_pct <= 10% enabled-observability budget).
 #
 # The `slow` suite (tests/test_multidevice.py, tests/test_trainer.py) runs
 # the same way without `-m "not slow"`; it is required before releases and

@@ -14,8 +14,6 @@ an actual request/response protocol over real ``bytes``:
 * :mod:`repro.agg.api`    — the unified :class:`AggNode` protocol
   (``ingest_frame`` / ``tick`` / ``published``) every aggregation endpoint
   implements, plus the one composed :class:`AggConfig` knob surface;
-* :mod:`repro.agg.wire`   — DEPRECATED back-compat facade re-exporting the
-  frame-layer API under the historical names (emits DeprecationWarning);
 * :mod:`repro.agg.client` — encodes a local vector against a round's shared
   randomness, chunks it per the round MTU, and handles escalation +
   selective-retransmit responses;

@@ -133,6 +133,7 @@ class AggConfig:
     max_attempts: int = 4
     anchored: bool = True
     mtu: int = 0
+    window: int = 0
     y_decay: float = 0.75
     y_escalate: float = 2.0
     y_floor: float = 1e-6
@@ -150,8 +151,8 @@ class AggConfig:
     tiers: int = 1                # tier layers between clients and the root
 
     _SERVICE_FIELDS = ("d", "q", "bucket", "rotate", "y0", "seed",
-                       "max_attempts", "anchored", "mtu", "y_decay",
-                       "y_escalate", "y_floor")
+                       "max_attempts", "anchored", "mtu", "window",
+                       "y_decay", "y_escalate", "y_floor")
     _ENGINE_FIELDS = ("quorum", "round_deadline", "min_clients",
                       "straggler_deadline", "max_resends", "drain_deadline",
                       "max_pending", "max_live_rounds")

@@ -35,6 +35,15 @@ list of frames to send next:
   ``AggClient`` built from that round's spec;
 * ``STATUS_ACK`` / ``STATUS_QUEUED`` / terminal ``STATUS_REJECT`` — nothing
   to send.
+
+Windowed rounds (v5, ``spec.window > 0``): the client paces itself with a
+credit-based send window (:class:`repro.agg.transport.chunks.SendWindow`)
+— at most ``window`` chunks in flight, where in-flight means sent but not
+covered by the server's cumulative contiguous ack riding every response
+(``Response.ack``/``Response.credit``, the v5 additive fields).  Use
+:meth:`AggClient.send_frames` for the opening burst; ``handle_response``
+then returns each newly-credited frame as acks arrive, so window advance,
+selective retransmit and escalation all share the one response path.
 """
 from __future__ import annotations
 
@@ -81,6 +90,7 @@ class AggClient:
         self._s_coord = jnp.repeat(self._sides, spec.cfg.bucket)
         self._check: Optional[int] = None
         self._frames: "dict[int, list[bytes]]" = {}
+        self._win: "dict[int, C.SendWindow]" = {}   # attempt -> window
 
     def _encode(self, attempt: int) -> "tuple[int, np.ndarray]":
         """(q, packed words) at an escalation level; the §5 checksum over
@@ -124,6 +134,41 @@ class AggClient:
                     n_chunks=len(cached))
         return list(cached)
 
+    def _window(self, attempt: int) -> "C.SendWindow":
+        w = self._win.get(attempt)
+        if w is None:
+            w = self._win[attempt] = C.SendWindow(self.frames(attempt),
+                                                  self.spec.window)
+        return w
+
+    def send_frames(self, attempt: Optional[int] = None) -> "list[bytes]":
+        """The frames to put on the wire NOW: the whole chunk sequence in
+        an unwindowed round, else the first credit-limited burst
+        (subsequent bursts ride :meth:`handle_response` as acks arrive)."""
+        if attempt is None:
+            attempt = self.attempt
+        if not self.spec.window:
+            return self.frames(attempt)
+        return self._window(attempt).sendable()
+
+    def retransmit_frames(self) -> "list[bytes]":
+        """Timeout recovery when the round has gone quiet: the unacked
+        in-flight window (windowed rounds) or the full chunk sequence
+        (unwindowed).  Idempotent — the server dedupes; empty once a
+        verdict landed."""
+        if self.acked or self.gave_up:
+            return []
+        if not self.spec.window:
+            return self.frames(self.attempt)
+        w = self._window(self.attempt)
+        return w.unacked() or w.sendable()
+
+    @property
+    def window_stalls(self) -> int:
+        """Responses that unblocked nothing while chunks remained unsent —
+        how often this client sat blocked on its credit window."""
+        return sum(w.stalls for w in self._win.values())
+
     def payload(self, attempt: Optional[int] = None) -> bytes:
         """The single-frame serialization (unchunked rounds, and chunked
         rounds whose body fits one MTU)."""
@@ -147,7 +192,15 @@ class AggClient:
             # set on ACK only — a reordered/late chunk QUEUED must never
             # clear an ACK verdict (it would re-arm the late-NACK guard)
             self.acked = self.acked or r.status == wire.STATUS_ACK
-            return []
+            if (self.acked or not self.spec.window
+                    or r.status != wire.STATUS_QUEUED
+                    or r.attempt_next != self.attempt):
+                return []
+            # windowed round: the QUEUED's cumulative ack is the credit
+            # return — send whatever the window now allows
+            w = self._window(self.attempt)
+            w.note_ack(r.ack)
+            return w.sendable()
         if r.status == wire.STATUS_RETRY:
             # admission backpressure / round rollover: non-terminal.  The
             # driver decides when to re-send (same round) or where to
@@ -162,7 +215,20 @@ class AggClient:
         if r.status == wire.STATUS_RESEND:
             if r.attempt_next != self.attempt:
                 return []                  # stale: that attempt is gone
-            return C.select(self.frames(self.attempt), r.missing)
+            frames = self.frames(self.attempt)
+            if self.spec.window:
+                # the server names every chunk it is missing, but only the
+                # ones below the contiguous sent prefix were actually LOST
+                # — the rest are chunks the credit window hasn't released
+                # yet, and they ride the normal ack path.  Retransmits are
+                # not credit-capped (the server asked for them by name);
+                # the RESEND's cumulative ack doubles as window advance.
+                w = self._window(self.attempt)
+                w.note_ack(r.ack)
+                lost = tuple(i for i in r.missing if i < w.next)
+                out = C.select(frames, lost) if lost else []
+                return out + w.sendable()
+            return C.select(frames, r.missing)
         # NACK: escalate to the server-directed attempt (RobustAgreement:
         # the color space squares, the per-bucket granularity stays fixed)
         if len(r.y_buckets) != self.spec.nb:
@@ -175,4 +241,6 @@ class AggClient:
         if r.attempt_next <= self.attempt:
             return []                      # duplicate/stale NACK: the retry
         self.attempt = r.attempt_next      # it asks for is already in flight
+        if self.spec.window:
+            return self._window(self.attempt).sendable()
         return self.frames(self.attempt)

@@ -44,6 +44,14 @@ overlapping-round interleaving — the engine only decides *which* clients
 make a round, never *how* they are summed (integer accumulation stays
 exact and order-free).
 
+Streaming rounds (v5, ``ServiceConfig.window > 0``) change what a SEALING
+round *holds*, not how the engine drives it: each server folds validated
+chunk ranges on arrival and ACKs clients at stream completion, so by the
+time a round reaches DRAINED there is no body-sized backlog waiting on the
+batched decode — the overlapping-drain phase carries only incomplete
+streams' held chunks plus the fixed-size fold records, and the pending
+store the admission control bounds (``max_pending``) stays near-empty.
+
 The engine is clock-agnostic: every entry point takes ``now`` (the sim
 passes virtual seconds, a deployment would pass a monotonic wall clock),
 and all policy fires from ``receive``/``advance`` — there are no threads

@@ -13,6 +13,28 @@ bytes, independent of d.  Either way the server buffers the *packed words*
 — the 8x-compressed form — until a drain; a completed reassembly hands the
 drain the same zero-copy Payload view a single frame would have.
 
+**Streaming drain** (v5, on when ``RoundSpec.window > 0``): the
+seal-then-stage path above is replaced for multi-chunk payloads.  The
+session emits each stream's validated contiguous word prefix range by range
+(``on_range_validated``) and frees the chunk bytes; the server
+residual-folds every range on arrival (:func:`repro.kernels.ops.
+lattice_residuals_range` about the round's decode-reference coordinates
+``k0`` — the same integer identity the tree tiers use, so ``k0 + r`` is
+bit-for-bit what the batched decode would have produced) into a
+*speculative* per-stream record keyed by ``(client, attempt, payload_crc)``:
+int16 residuals, an incrementally-accumulated §5 checksum (h(k) is linear,
+so partial sums of ``w_i * k_i`` compose exactly), and per-bucket distance
+telemetry.  Nothing touches the round accumulator until the stream
+completes AND its payload-CRC seal + checksum verify — so "rollback" on a
+seal failure, escalation reset, eviction or expiry is simply dropping the
+record (``on_stream_discarded``), and the published mean stays
+bit-identical to the sealed drain under any arrival order, loss,
+duplication or escalation.  ``RoundStats.peak_pending_store_bytes`` gauges
+what the old path buffered: staged bodies + reassembly bytes — with the
+window holding senders near-in-order it stays far below one body per
+pending client.  Single-chunk payloads keep the batched path (they never
+had a body-sized backlog).
+
 Chunked rounds add one response status: a drain that finds a client's
 reassembly still incomplete emits ``STATUS_RESEND`` naming exactly the
 missing chunk indices, so a lost or corrupt chunk costs one chunk frame on
@@ -83,6 +105,7 @@ from repro.agg.api import PublishedRound
 from repro.agg.transport import frame as wire
 from repro.agg.transport import session as S
 from repro.core import error_detect as ED
+from repro.core import lattice as L
 from repro.kernels import ops as K
 from repro.kernels.lattice_decode import DEFAULT_BLOCK_SENDERS
 
@@ -111,6 +134,10 @@ class RoundStats:
     bytes_in: int = 0
     bytes_out: int = 0
     peak_unvalidated_bytes: int = 0   # largest frame staged before its CRC
+    peak_pending_store_bytes: int = 0  # high-water of staged payload bodies
+                                       # + reassembly-retained bytes (the
+                                       # streaming drain shrinks this far
+                                       # below one body per pending client)
     max_dist: float = 0.0        # max |decoded - ref|_inf over accepts
     dist_b: Optional[np.ndarray] = None    # (nb,) per-bucket max distance
     fails_b: Optional[np.ndarray] = None   # (nb,) per-bucket failure counts
@@ -142,6 +169,25 @@ def _retry(round_id: int, client_id: int, attempt: int,
     return wire.Response(status=wire.STATUS_RETRY, round_id=round_id,
                          client_id=client_id, attempt_next=attempt,
                          q_next=open_round_id, y_next=0.0)
+
+
+class _StreamFold:
+    """Speculative per-stream fold for the streaming drain.
+
+    One per open ``(client, attempt, payload_crc)`` stream identity: the
+    int16 residuals folded so far (|r| <= q/2 <= 2^15 at the q=2^16 packing
+    cap, so int16 always fits), the incrementally-accumulated §5 coordinate
+    checksum (h(k) is linear in k, so per-range partial sums of ``w_i *
+    k_i`` compose exactly mod 2^32), and per-bucket distance telemetry.
+    Nothing here has touched the round accumulator — dropping the record IS
+    the rollback."""
+    __slots__ = ("r", "check", "dist_b", "coords")
+
+    def __init__(self, padded: int, nb: int):
+        self.r = np.zeros((padded,), np.int16)
+        self.check = 0          # the uint32 value, carried as a python int
+        self.dist_b = np.zeros((nb,), np.float32)
+        self.coords = 0
 
 
 @partial(jax.jit, static_argnames=("q", "bucket"))
@@ -222,13 +268,20 @@ class AggServer:
     """
 
     def __init__(self, spec: wire.RoundSpec, anchor,
-                 max_pending: "int | None" = None):
+                 max_pending: "int | None" = None,
+                 streaming: "bool | None" = None):
         """``max_pending``: admission cap — the largest number of distinct
         un-drained clients allowed to hold buffered server state (pending
         payloads + open reassembly streams) at once.  A frame from a NEW
         client beyond the cap draws a non-terminal ``STATUS_RETRY``
         (backpressure), never a verdict; ``None`` = unbounded (the
-        historical lockstep behavior)."""
+        historical lockstep behavior).
+
+        ``streaming``: enable the streaming drain for multi-chunk payloads
+        (fold validated chunk ranges on arrival, commit at stream
+        completion).  ``None`` (the default) resolves to ``spec.window >
+        0`` — a windowed round streams, anything else keeps the historical
+        seal-then-stage path bit-for-bit."""
         if np.shape(anchor) != (spec.d,):
             raise ValueError(
                 f"anchor has shape {np.shape(anchor)}, spec.d={spec.d}")
@@ -256,9 +309,31 @@ class AggServer:
         self._anchor_raw = np.asarray(anchor, np.float32).copy()
         self._published: list[PublishedRound] = []
         self._pending: dict[int, wire.Payload] = {}
-        self._rx = S.Reassembler(spec)      # chunked-payload session layer
+        self._pending_bytes = 0   # bodies staged for the batched drain
+        self._folds: "dict[tuple, _StreamFold]" = {}
+        self._ksum_st: "Optional[np.ndarray]" = None  # (padded,) int64 —
+        #   the streamed commits, merged with _ksum at finalize
+        self._streaming = ((spec.window > 0) if streaming is None
+                           else bool(streaming)) and spec.mtu > 0
+        if self._streaming:
+            # host-side mirrors of the decode context for per-range folds
+            self._k0_np = np.asarray(self._k0, np.int64)
+            self._w_np = np.asarray(self._weights)
+            self._u_np = np.asarray(self._u, np.float32).reshape(-1)
+            self._s_np = np.repeat(np.asarray(self._sides, np.float32),
+                                   spec.cfg.bucket)
+            self._ref_np = np.asarray(self._ref_flat, np.float32)
+            self._rx = S.Reassembler(spec,
+                                     on_range_validated=self._fold_range,
+                                     on_stream_discarded=self._drop_stream)
+        else:
+            self._rx = S.Reassembler(spec)  # chunked-payload session layer
         self._accepted: set[int] = set()
         self._gave_up: set[int] = set()
+        # per-client minimum live attempt (bumped by every NACK): a late
+        # duplicate chunk of a NACKed attempt must not re-open a dead
+        # reassembly stream it would then carry to the round's end
+        self._attempt_floor: dict[int, int] = {}
         self._ksum = jnp.zeros((spec.nb, spec.cfg.bucket), jnp.int32)
         self._count = 0
         self._max_abs_k = 0
@@ -318,7 +393,8 @@ class AggServer:
             # duplicate delivery of an already-accumulated client: ACK
             # idempotently, never double-count
             self._obs.inc("duplicates")
-            return self._respond(self._ack(h.client_id))
+            return self._respond(self._ack(
+                h.client_id, ack=h.n_chunks if self.spec.window else 0))
         if h.client_id not in self._admitted:
             # intake gate — BEFORE any buffered state is created for the
             # client, so a sealed or saturated round never opens a
@@ -336,6 +412,10 @@ class AggServer:
         if h.n_chunks == 1:
             p = wire.payload_from_body(h, chunk)
         else:
+            if h.attempt < self._attempt_floor.get(h.client_id, 0):
+                # stale chunk of an attempt this server already NACKed
+                self._obs.inc("duplicates")
+                return self._respond(self._queued(h, slim=True))
             event, p = self._rx.add(h, chunk)
             if event == S.REJECT:
                 # the reassembled body failed its payload-CRC seal (a
@@ -348,14 +428,23 @@ class AggServer:
                     round_id=self.spec.round_id, client_id=h.client_id,
                     attempt_next=h.attempt, q_next=h.q,
                     y_next=wire.y_at_attempt(self.spec, h.attempt),
-                    missing=tuple(range(h.n_chunks))))
+                    missing=tuple(range(h.n_chunks)),
+                    credit=self.spec.window))
             if p is None:                   # PROGRESS / DUPLICATE / STALE
                 if event in (S.DUPLICATE, S.STALE):
                     self._obs.inc("duplicates")
+                self._note_pending_store()
                 # slim ack: mid-reassembly nobody consumes the per-bucket
                 # margins or a missing list, so don't pay O(nb + n_chunks)
                 # response bytes per chunk
                 return self._respond(self._queued(h, slim=True))
+            if p.streamed:
+                # stream complete + payload-CRC sealed: verify and commit
+                # the speculative fold NOW — no staged body, nothing for
+                # the drain to carry
+                out = self._respond(self._finish_streamed(h, p))
+                self._note_pending_store()
+                return out
         try:
             # body-level spec check only — every header field was already
             # validated per frame by check_frame_against_spec
@@ -367,7 +456,11 @@ class AggServer:
         if prev is not None and prev.attempt >= p.attempt:
             self._obs.inc("duplicates")
         else:
+            if prev is not None:
+                self._pending_bytes -= prev.words.nbytes + prev.sides.nbytes
             self._pending[p.client_id] = p
+            self._pending_bytes += p.words.nbytes + p.sides.nbytes
+            self._note_pending_store()
             self._obs.inc("queued")
             if _obs.tracing_enabled():
                 # the payload's end-to-end CRC has vouched for the body and
@@ -381,22 +474,146 @@ class AggServer:
                 slim: bool = False) -> wire.Response:
         # no `missing` list here: only STATUS_RESEND consumes it, and
         # including it per chunk ack would cost O(n_chunks^2) per client
+        # windowed rounds piggyback flow control on every response: the
+        # cumulative contiguous-chunk ack + the static credit grant, so
+        # RESEND recovery and window advance share one response path
         return wire.Response(
             status=wire.STATUS_QUEUED, round_id=self.spec.round_id,
             client_id=h.client_id, attempt_next=h.attempt, q_next=h.q,
             y_next=wire.y_at_attempt(self.spec, h.attempt),
-            y_buckets=() if slim else self._margin_tuple(h.attempt))
+            y_buckets=() if slim else self._margin_tuple(h.attempt),
+            ack=self._rx.high_water(h.client_id) if self.spec.window else 0,
+            credit=self.spec.window)
 
-    def _ack(self, client_id: int) -> wire.Response:
+    def _ack(self, client_id: int, ack: int = 0) -> wire.Response:
         return wire.Response(status=wire.STATUS_ACK,
                              round_id=self.spec.round_id,
                              client_id=client_id, attempt_next=0, q_next=0,
-                             y_next=0.0)
+                             y_next=0.0, ack=ack, credit=self.spec.window)
 
     def _respond(self, r: wire.Response) -> bytes:
         out = wire.encode_response(r)
         self._obs.inc("bytes_out", len(out))
         return out
+
+    # -------------------------------------------------------- STREAMING RX
+    def _note_pending_store(self) -> None:
+        """The pending-store byte gauge: staged drain bodies + everything
+        the reassembly layer is holding (carry, held out-of-order chunks,
+        sides, sealed-mode buffers).  The streaming drain's whole point is
+        keeping this far below one body per pending client."""
+        self._obs.set_max("peak_pending_store_bytes",
+                          self._pending_bytes + self._rx.stats.buffer_bytes)
+
+    def _fold_range(self, h: wire.FrameHeader, word_start: int,
+                    words: np.ndarray) -> None:
+        """``on_range_validated``: residual-fold one contiguous validated
+        word range into the stream's speculative record; the session frees
+        the chunk bytes as soon as this returns."""
+        key = (h.client_id, h.attempt, h.payload_crc)
+        rec = self._folds.get(key)
+        if rec is None:
+            rec = self._folds[key] = _StreamFold(self.spec.padded,
+                                                 self.spec.nb)
+        c0 = word_start * (32 // L.bits_for_q(h.q))
+        r = np.asarray(K.lattice_residuals_range(
+            jnp.asarray(words), self._k0, q=h.q, word_start=word_start))
+        n = r.shape[0]
+        rec.r[c0:c0 + n] = r.astype(np.int16)
+        rec.coords += n
+        k = r.astype(np.int64) + self._k0_np[c0:c0 + n]
+        part = np.sum(k.astype(np.uint32) * self._w_np[c0:c0 + n],
+                      dtype=np.uint32)
+        rec.check = (rec.check + int(part)) & 0xFFFFFFFF
+        if h.n_summed == 1:
+            # distance telemetry, masked to unit payloads like _drain_math
+            z = (k.astype(np.float32) + self._u_np[c0:c0 + n]) \
+                * self._s_np[c0:c0 + n]
+            dist = np.abs(z - self._ref_np[c0:c0 + n])
+            b = self.spec.cfg.bucket
+            bidx = np.arange(c0 // b, (c0 + n - 1) // b + 1)
+            mx = np.maximum.reduceat(dist, np.maximum(bidx * b - c0, 0))
+            rec.dist_b[bidx] = np.maximum(rec.dist_b[bidx], mx)
+
+    def _drop_stream(self, h: wire.FrameHeader) -> None:
+        """``on_stream_discarded``: the rollback.  The record never touched
+        the round accumulator, so dropping it IS the undo (seal failure,
+        escalation reset, eviction, expiry)."""
+        self._folds.pop((h.client_id, h.attempt, h.payload_crc), None)
+
+    def _finish_streamed(self, h: wire.FrameHeader,
+                         p: wire.Payload) -> wire.Response:
+        """A stream completed and its payload-CRC seal held: verify the
+        fold's §5 checksum and commit — the streaming path's per-client
+        drain, minus the body that no longer exists."""
+        rec = self._folds.pop((h.client_id, h.attempt, h.payload_crc), None)
+        try:
+            wire.check_sides_against_spec(p, self.spec)
+        except wire.HeaderMismatchError:
+            self._obs.inc("rejected_spec")
+            return _reject(self.spec, p.client_id)
+        if rec is None or rec.coords != self.spec.padded:
+            # a fold record that never materialized (stream evicted and
+            # rebuilt mid-flight): direct a full rebuild, non-terminal
+            self._obs.inc("resends_sent")
+            return wire.Response(
+                status=wire.STATUS_RESEND, round_id=self.spec.round_id,
+                client_id=h.client_id, attempt_next=h.attempt, q_next=h.q,
+                y_next=wire.y_at_attempt(self.spec, h.attempt),
+                missing=tuple(range(h.n_chunks)), credit=self.spec.window)
+        if _obs.tracing_enabled():
+            # the completed stream's checksum-verified fold is the
+            # streaming path's seal point
+            _obs.tracer().event(
+                "seal", parent=("client", h.round_id, h.client_id),
+                round=h.round_id, client=h.client_id, attempt=h.attempt)
+        if rec.check != (h.check & 0xFFFFFFFF):
+            return self._nack_streamed(h, rec)
+        m = h.n_summed
+        k_eff = rec.r.astype(np.int64) + m * self._k0_np
+        self._max_abs_k = max(self._max_abs_k, int(np.abs(k_eff).max()))
+        if (self._count + m) * self._max_abs_k >= 2 ** 31:
+            raise OverflowError(
+                f"round {self.spec.round_id}: accumulating a streamed "
+                f"sender with |coords| up to {self._max_abs_k} can "
+                f"overflow the int32 sum ({self._count} accepted so far); "
+                f"anchor the round (RoundSpec.anchor_digest) so "
+                f"coordinates stay ~y/s instead of ~|x|/s")
+        if self._ksum_st is None:
+            self._ksum_st = np.zeros((self.spec.padded,), np.int64)
+        self._ksum_st += k_eff
+        self._count += m
+        self._obs.inc("queued")
+        self._obs.inc("accepted")
+        if m == 1:
+            self._obs.set_max("max_dist", float(rec.dist_b.max()))
+            self._stats.dist_b = np.maximum(self._stats.dist_b, rec.dist_b)
+        self._accepted.add(h.client_id)
+        return self._ack(h.client_id, ack=h.n_chunks)
+
+    def _nack_streamed(self, h: wire.FrameHeader,
+                       rec: _StreamFold) -> wire.Response:
+        """§5 checksum mismatch on a completed stream: the same escalation
+        verdict the batched drain would have produced."""
+        self._obs.inc("decode_failures")
+        if h.n_summed == 1:
+            y_col = np.asarray(wire.y_buckets_at_attempt(self.spec,
+                                                         h.attempt))
+            self._stats.fails_b = self._stats.fails_b + \
+                (rec.dist_b > 1.5 * y_col).astype(np.float32)
+        nxt = h.attempt + 1
+        if h.q >= wire.Q_CAP or nxt >= self.spec.max_attempts:
+            self._gave_up.add(h.client_id)
+            self._obs.inc("gave_up")
+            return _reject(self.spec, h.client_id)
+        self._obs.inc("nacks_sent")
+        self._attempt_floor[h.client_id] = nxt
+        return wire.Response(
+            status=wire.STATUS_NACK, round_id=self.spec.round_id,
+            client_id=h.client_id, attempt_next=nxt,
+            q_next=wire.q_at_attempt(self.spec.cfg.q, nxt),
+            y_next=wire.y_at_attempt(self.spec, nxt),
+            y_buckets=self._margin_tuple(nxt), credit=self.spec.window)
 
     # ------------------------------------------------------------ AggNode
     def ingest_frame(self, data: bytes, now: float = 0.0) -> "list[bytes]":
@@ -474,8 +691,10 @@ class AggServer:
         if (client_id not in self._admitted or client_id in self._accepted
                 or client_id in self._gave_up):
             return                  # only unresolved stragglers expire
-        self._pending.pop(client_id, None)
-        self._rx.discard(client_id)
+        prev = self._pending.pop(client_id, None)
+        if prev is not None:
+            self._pending_bytes -= prev.words.nbytes + prev.sides.nbytes
+        self._rx.discard(client_id)   # fires the stream-fold rollback too
         self._admitted.discard(client_id)
         self._obs.inc("expired")
         if _obs.tracing_enabled():
@@ -515,6 +734,7 @@ class AggServer:
         for p in self._pending.values():
             by_q.setdefault(p.q, []).append(p)
         self._pending.clear()
+        self._pending_bytes = 0
         responses = []
         for q, plist in sorted(by_q.items()):
             plist.sort(key=lambda p: p.client_id)
@@ -579,12 +799,14 @@ class AggServer:
                         self._respond(_reject(self.spec, p.client_id)))
                     continue
                 self._obs.inc("nacks_sent")
+                self._attempt_floor[p.client_id] = nxt
                 responses.append(self._respond(wire.Response(
                     status=wire.STATUS_NACK, round_id=self.spec.round_id,
                     client_id=p.client_id, attempt_next=nxt,
                     q_next=wire.q_at_attempt(self.spec.cfg.q, nxt),
                     y_next=wire.y_at_attempt(self.spec, nxt),
-                    y_buckets=self._margin_tuple(nxt))))
+                    y_buckets=self._margin_tuple(nxt),
+                    credit=self.spec.window)))
         if drain_sp is not None:
             _obs.tracer().end(drain_sp, accepted=len(self._accepted))
         return responses + self._resend_requests()
@@ -599,7 +821,9 @@ class AggServer:
             client_id=cid, attempt_next=attempt,
             q_next=wire.q_at_attempt(self.spec.cfg.q, attempt),
             y_next=wire.y_at_attempt(self.spec, attempt),
-            y_buckets=self._margin_tuple(attempt), missing=missing))
+            y_buckets=self._margin_tuple(attempt), missing=missing,
+            ack=self._rx.high_water(cid) if self.spec.window else 0,
+            credit=self.spec.window))
 
     def _resend_requests(self) -> list[bytes]:
         """Chunk-level NACKs for every still-incomplete reassembly: each
@@ -642,7 +866,13 @@ class AggServer:
                 return np.zeros((self.spec.d,), np.float32), self.stats
             return (np.asarray(rounds.unbucketize(self._anchor_b, self.spec)),
                     self.stats)
-        mean_b = _mean_math(self._ksum, jnp.int32(self._count), self._u,
+        ksum = self._ksum
+        if self._ksum_st is not None:
+            # merge the streamed commits — exact int64 -> int32, safe under
+            # the same count * max|k| < 2^31 bound as the batched drain
+            ksum = ksum + jnp.asarray(
+                self._ksum_st.reshape(ksum.shape).astype(np.int32))
+        mean_b = _mean_math(ksum, jnp.int32(self._count), self._u,
                             self._sides[:, None])
         if self.spec.anchored:
             mean_b = mean_b + self._anchor_b

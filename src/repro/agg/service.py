@@ -85,6 +85,9 @@ class ServiceConfig:
                                 # (the historical raw-input protocol)
     mtu: int = 0                # transport chunk size in bytes (0: one
                                 # frame per payload; see agg.transport)
+    window: int = 0             # send-window credit in chunks (0: blast;
+                                # >0 needs mtu>0 and turns on the server's
+                                # streaming decode — see agg.transport)
     y_decay: float = 0.75       # per-round relaxation toward measured dist
     y_escalate: float = 2.0     # per-bucket escalation on decode failure
     y_floor: float = 1e-6
@@ -238,7 +241,8 @@ class AggService:
             seed=rounds.fold_seed(self.cfg.seed, self.round_id),
             max_attempts=self.cfg.max_attempts,
             y_buckets=tuple(float(v) for v in self.y),
-            anchor_digest=digest, mtu=self.cfg.mtu)
+            anchor_digest=digest, mtu=self.cfg.mtu,
+            window=self.cfg.window)
         # anchored: decode in anchor-relative space.  Unanchored: the last
         # published mean still serves as the *decode reference* (clients
         # encode raw x; the reference realizes the distance bound server-

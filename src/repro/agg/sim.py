@@ -31,10 +31,15 @@ frames travel with per-frame network delays and loss, and the engine's
 quorum/deadline/straggler policy runs purely off event times — so the
 p50/p99 round latency, rounds/sec and published-mean staleness it reports
 are machine-independent and CI-gateable.  Every published round is
-replayed through a fresh lockstep server over exactly its accepted
-clients and asserted bit-identical (arrival order, chunk interleaving,
-loss and overlapping-round interleaving all provably cannot move the
-mean).  :func:`run_lockstep` runs the SAME arrival trace through the
+replayed through a fresh lockstep server (streaming forced off) over
+exactly its accepted clients and asserted bit-identical (arrival order,
+chunk interleaving, loss, windowed pacing and overlapping-round
+interleaving all provably cannot move the mean).  With
+``OpenLoopConfig.window > 0`` the driver models per-client in-flight
+chunk caps: each client sends only its credit-limited burst, later
+chunks ride the cumulative acks in the responses, and the configured
+loss rate makes clients sit on a blocked window (the ``window_stalls``
+count the report surfaces).  :func:`run_lockstep` runs the SAME arrival trace through the
 legacy one-round-at-a-time coordinator on the same virtual clock — the
 rounds/sec baseline the engine's overlap is measured against.
 
@@ -552,6 +557,9 @@ class OpenLoopConfig:
     bucket: int = 64
     y0: float = 0.5
     mtu: int = 64                  # small MTU: payloads chunk into ~3 frames
+    window: int = 0                # per-client in-flight chunk cap (0:
+                                   # blast; >0 turns on windowed send +
+                                   # streaming decode, v5)
     max_attempts: int = 4
     # offered load
     rate: float = 250.0            # Poisson arrivals per virtual second
@@ -588,7 +596,7 @@ class OpenLoopConfig:
         return AggConfig(
             d=self.d, q=self.q, bucket=self.bucket, y0=self.y0,
             seed=self.seed, anchored=True, mtu=self.mtu,
-            max_attempts=self.max_attempts,
+            window=self.window, max_attempts=self.max_attempts,
             quorum=self.quorum, round_deadline=self.round_deadline,
             min_clients=1, straggler_deadline=self.straggler_deadline,
             max_resends=self.max_resends, drain_deadline=self.drain_deadline,
@@ -659,6 +667,8 @@ class OpenLoopReport:
     max_staleness_rounds: int     # worst anchor lag in rounds
     makespan: float               # first open -> last publish
     rounds_per_s: float
+    window_stalls: int            # responses that unblocked no send while
+                                  # chunks remained (windowed rounds only)
     published: "list[PublishedRound]"
 
 
@@ -670,7 +680,9 @@ def replay_published_round(trace: _Trace, pr: PublishedRound) -> np.ndarray:
     the published mean."""
     ref = (pr.anchor if pr.anchor is not None
            else np.zeros((pr.spec.d,), np.float32))
-    server = AggServer(pr.spec, ref)
+    # streaming forced OFF: a windowed engine round is checked against the
+    # SEALED batched-decode drain, not against another streaming server
+    server = AggServer(pr.spec, ref, streaming=False)
     clis = {}
     for cid in sorted(pr.accepted):
         c = AggClient(pr.spec, cid, trace.xs[cid], anchor=pr.anchor)
@@ -749,7 +761,9 @@ def run_open_loop(cfg: OpenLoopConfig = OpenLoopConfig(),
         rnd = eng.open_round
         c = AggClient(rnd.spec, cid, trace.xs[cid], anchor=rnd.client_anchor)
         active[cid] = c
-        frs = c.frames()
+        # windowed rounds: only the first credit-limited burst goes out
+        # now; the rest rides the ack path in route() (blast when window=0)
+        frs = c.send_frames()
         if cid in trace.churn:
             frs = frs[:1]                   # vanish after the first chunk
         send_frames(t, cid, frs)
@@ -797,7 +811,12 @@ def run_open_loop(cfg: OpenLoopConfig = OpenLoopConfig(),
             c = active.get(data)
             if (c is not None and not c.acked and not c.gave_up
                     and c.retry_round is None):
-                send_frames(t, data, c.frames(c.attempt))
+                # timeout recovery: the unacked in-flight window (windowed
+                # rounds — the all-copies-lost corner where the server has
+                # no stream to RESEND from) or the full sequence (blast)
+                send_frames(t, data, c.retransmit_frames())
+                if c.spec.window and t + cfg.nudge_delay < horizon:
+                    push(t + cfg.nudge_delay, "nudge", data)
     t_end = max(horizon, t_last) + cfg.tick
     eng.tick(t_end)
     eng.flush(t_end)
@@ -831,6 +850,7 @@ def run_open_loop(cfg: OpenLoopConfig = OpenLoopConfig(),
                                  default=0),
         makespan=float(makespan),
         rounds_per_s=(len(pubs) / makespan if makespan > 0 else 0.0),
+        window_stalls=sum(c.window_stalls for c in active.values()),
         published=pubs)
 
 

@@ -56,6 +56,60 @@ def encode_chunks(spec: F.RoundSpec, client_id: int, attempt: int, q: int,
     return chunk_frames(h0, body, spec.mtu)
 
 
+class SendWindow:
+    """Credit-based pacing of one attempt's chunk-frame sequence (v5).
+
+    The sender keeps at most ``window`` chunks in flight — sent but not yet
+    covered by the server's cumulative contiguous ack (``Response.ack``,
+    the v5 additive flow-control field; the static grant rides
+    ``Response.credit``).  ``sendable()`` returns the next frames the
+    credit allows and every response's ack feeds :meth:`note_ack` — RESEND
+    recovery re-sends only chunks below the sent prefix (``next``), so a
+    drain-time RESEND that names credit-blocked chunks never defeats the
+    window.  A response that unblocks nothing while frames remain is a
+    *window stall* (counted here and exported as the ``window_stalls`` obs
+    counter): the sender is blocked on in-flight chunks — the backpressure
+    signal the open-loop driver models (:mod:`repro.agg.sim`)."""
+
+    def __init__(self, frames: "list[bytes]", window: int):
+        self.frames = frames
+        self.window = window
+        self.next = 0       # lowest chunk index never sent
+        self.ack = 0        # server's cumulative contiguous-chunk ack
+        self.stalls = 0
+
+    @property
+    def done(self) -> bool:
+        return self.next >= len(self.frames)
+
+    @property
+    def in_flight(self) -> int:
+        return max(self.next - self.ack, 0)
+
+    def note_ack(self, ack: int) -> None:
+        """Fold in a response's cumulative ack (monotonic; never rewinds)."""
+        if ack > self.ack:
+            self.ack = min(ack, len(self.frames))
+
+    def unacked(self) -> "list[bytes]":
+        """The in-flight (sent, unacked) frames — the timeout-retransmit
+        set: when every copy was lost the server has no stream to RESEND
+        from, so recovery must come from the sender's own timer."""
+        return list(self.frames[self.ack:self.next])
+
+    def sendable(self) -> "list[bytes]":
+        """The frames the current credit allows on the wire now."""
+        end = min(self.ack + self.window, len(self.frames))
+        out = self.frames[self.next:end]
+        if out:
+            self.next = end
+        elif not self.done:
+            self.stalls += 1
+            if _obs.metrics_enabled():
+                _obs.counter("window_stalls").inc()
+        return out
+
+
 def select(frames: "list[bytes]", missing: "tuple[int, ...]"
            ) -> "list[bytes]":
     """The selective-retransmit set: only the frames a STATUS_RESEND names.

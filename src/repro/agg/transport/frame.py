@@ -1,4 +1,4 @@
-"""Frame layer: the versioned byte codec of the aggregation protocol (v4).
+"""Frame layer: the versioned byte codec of the aggregation protocol (v5).
 
 One transport frame carries one *chunk* of a client's packed payload body
 (the whole body when it fits the round's MTU) behind a fixed self-describing
@@ -7,7 +7,7 @@ header.  Frame layout, little-endian (header arithmetic pinned in
 
     offset  size  field
     0       4     magic         b"DMEA"
-    4       2     version       WIRE_VERSION (4)
+    4       2     version       WIRE_VERSION (5)
     6       2     flags         bit 0: rotate (HD pre-rotation, paper §6)
                                 bit 1: anchored (encoded x - anchor)
     8       4     round_id
@@ -50,13 +50,14 @@ round pins the sides s_b = 2*y_b/(q0-1) and each retry squares the color
 space, q <- q^2 (capped at 2^16), so integer coordinates from different
 attempts remain summable.
 
-Server responses (v4, layout unchanged since v3) carry the per-bucket
-decode margins plus — for
+Server responses (v5) carry the per-bucket decode margins, the streaming
+flow-control state (cumulative ack + send-window credit) and — for
 ``STATUS_RESEND`` — the missing chunk indices of an incomplete reassembly:
 
     magic b"DMER" | version u16 | status u16 | round_id u32 | client_id u32
     | attempt_next u32 | q_next u32 | y_next f32 | nb u32 | n_missing u32
-    | y_buckets f32*nb | missing u32*n_missing | crc u32
+    | ack u32 | credit u32 | y_buckets f32*nb | missing u32*n_missing
+    | crc u32
 
 v2 -> v3 migration: the v2 single-frame header (56 bytes + CRC) grew the
 three chunk fields (n_chunks / chunk_index / payload_crc, +12 bytes); a v2
@@ -74,6 +75,20 @@ payload forwards it with n_summed=m, so the root can weight its integer
 coordinate sum by the true client count without decoding anything at the
 tier.  v3 frames are refused with VersionMismatchError, same policy as
 v2 -> v3.
+
+v4 -> v5 migration: same additive-field policy, on the RESPONSE side this
+time (the frame layout is unchanged).  Two u32 fields, ``ack`` and
+``credit``, are appended to the response head after ``n_missing`` (head
+36 -> 44 bytes); every earlier field keeps its v4 offset.  ``ack`` is the
+cumulative count of contiguous-from-zero chunks the server holds for the
+client's live stream (a TCP-style cumulative ack: chunks received out of
+order beyond a gap are buffered but not acked), and ``credit`` is how many
+chunks the client may have in flight beyond ``ack`` (the round's
+``RoundSpec.window``; 0 = unwindowed, send freely — the v4 behaviour).
+RESEND and window advance share this one response path: a RESEND names the
+gap chunks while ack/credit tell the sender how far its fresh-data window
+has slid.  v4 responses are refused with VersionMismatchError, same policy
+as the frame-side bumps.
 """
 from __future__ import annotations
 
@@ -91,16 +106,16 @@ from repro.dist.collectives import (QSyncConfig, flat_size_padded,
 
 MAGIC_PAYLOAD = b"DMEA"
 MAGIC_RESPONSE = b"DMER"
-WIRE_VERSION = 4
+WIRE_VERSION = 5
 Q_CAP = 1 << 16                   # largest packable color space (16 bits)
 
 FLAG_ROTATE = 1 << 0
 FLAG_ANCHORED = 1 << 1
 
 _HEADER = struct.Struct("<4sHH16I")
-# response header up to and including n_missing; followed by nb f32 margins,
-# n_missing u32 chunk indices, and the crc
-_RESPONSE_HEAD = struct.Struct("<4sHHIIIIfII")
+# response header up to and including the v5 ack/credit pair; followed by
+# nb f32 margins, n_missing u32 chunk indices, and the crc
+_RESPONSE_HEAD = struct.Struct("<4sHHIIIIfIIII")
 
 FRAME_HEADER_BYTES = WA.FRAME_HEADER_BYTES
 # the agg header sizes delegate to core.wire_accounting (the one wire-byte
@@ -165,6 +180,16 @@ class RoundSpec:
     The MTU is part of the contract so chunk geometry is checkable from any
     one frame (offset = chunk_index * mtu).
 
+    v5 addition: ``window`` — the credit-based send window, in chunks.  0
+    keeps the v4 blast-all-chunks behaviour; a positive window caps every
+    client at ``window`` chunks in flight (sent but not covered by the
+    server's cumulative ack) and switches the server to the streaming
+    drain: validated contiguous chunk runs are residual-folded into the
+    round sum as they land and their bytes freed, instead of being staged
+    until the payload-CRC seal.  The published mean is bit-identical either
+    way; the window only bounds sender burstiness and server pending-store
+    memory.
+
     v2 carried ``y_buckets`` (per-bucket distance bounds from the previous
     round's telemetry) and ``anchor_digest`` (CRC-32 of the round anchor —
     round k-1's published mean; 0 = unanchored).  Clients encode
@@ -183,6 +208,7 @@ class RoundSpec:
     y_buckets: "tuple[float, ...] | None" = None
     anchor_digest: int = 0
     mtu: int = 0
+    window: int = 0
 
     def __post_init__(self):
         if self.y_buckets is not None and len(self.y_buckets) != self.nb:
@@ -192,6 +218,12 @@ class RoundSpec:
         if self.mtu != 0 and self.mtu < 64:
             raise ValueError(f"mtu must be 0 (unchunked) or >= 64 bytes, "
                              f"got {self.mtu}")
+        if self.window < 0:
+            raise ValueError(f"window must be >= 0 chunks, "
+                             f"got {self.window}")
+        if self.window > 0 and self.mtu == 0:
+            raise ValueError("window > 0 needs a chunked round (mtu > 0): "
+                             "credit is granted per chunk")
 
     @property
     def padded(self) -> int:
@@ -312,6 +344,12 @@ class Payload:
     anchor_digest: int = 0
     anchored: bool = False
     n_summed: int = 1          # additive client count (tree tiers > 1)
+    # True when the words were already residual-folded range-by-range as
+    # the chunks landed (streaming drain): ``words`` is empty — the body
+    # bytes are gone — and only the retained sides sidecar remains for the
+    # spec check at completion.  Streamed payloads never enter the batched
+    # pending store.
+    streamed: bool = False
 
     @property
     def nb(self) -> int:
@@ -328,6 +366,8 @@ class Response:
     y_next: float
     y_buckets: "tuple[float, ...]" = ()    # per-bucket margins (NACK/QUEUED)
     missing: "tuple[int, ...]" = ()        # chunk indices (STATUS_RESEND)
+    ack: int = 0                           # cumulative contiguous chunks held
+    credit: int = 0                        # chunks allowed in flight past ack
 
 
 def _pack_header(h: FrameHeader) -> bytes:
@@ -464,6 +504,19 @@ def payload_from_body(h: FrameHeader, body) -> Payload:
                    n_summed=h.n_summed)
 
 
+def streamed_payload(h: FrameHeader, sides_bytes: bytes) -> Payload:
+    """Assemble the words-free Payload of a stream whose word ranges were
+    already folded incrementally (the streaming drain's completion record:
+    header identity + the retained sides sidecar)."""
+    sides = np.frombuffer(sides_bytes, dtype="<f4", count=h.nb)
+    return Payload(round_id=h.round_id, client_id=h.client_id,
+                   attempt=h.attempt, q=h.q, d=h.d, bucket=h.bucket,
+                   seed=h.seed, rot_seed=h.rot_seed, rotate=h.rotate,
+                   check=h.check, words=np.empty((0,), np.uint32),
+                   sides=sides, anchor_digest=h.anchor_digest,
+                   anchored=h.anchored, n_summed=h.n_summed, streamed=True)
+
+
 def build_payload(spec: RoundSpec, client_id: int, attempt: int, q: int,
                   words: np.ndarray, sides: np.ndarray, check: int,
                   n_summed: int = 1) -> "tuple[FrameHeader, bytes]":
@@ -588,7 +641,7 @@ def encode_response(r: Response) -> bytes:
     head0 = _RESPONSE_HEAD.pack(MAGIC_RESPONSE, WIRE_VERSION, r.status,
                                 r.round_id, r.client_id, r.attempt_next,
                                 r.q_next, r.y_next, yb.shape[0],
-                                miss.shape[0])
+                                miss.shape[0], r.ack, r.credit)
     body = head0 + yb.tobytes() + miss.tobytes()
     return body + struct.pack("<I", zlib.crc32(body))
 
@@ -607,7 +660,7 @@ def _decode_response(data: bytes) -> Response:
         raise TruncatedPayloadError(
             f"response of {len(data)} bytes < {hsize + 4}")
     (magic, version, status, round_id, client_id, attempt_next, q_next,
-     y_next, nb, n_missing) = _RESPONSE_HEAD.unpack_from(data, 0)
+     y_next, nb, n_missing, ack, credit) = _RESPONSE_HEAD.unpack_from(data, 0)
     if magic != MAGIC_RESPONSE:
         raise BadMagicError(f"bad magic {magic!r}")
     if version != WIRE_VERSION:
@@ -626,4 +679,5 @@ def _decode_response(data: bytes) -> Response:
     return Response(status=status, round_id=round_id, client_id=client_id,
                     attempt_next=attempt_next, q_next=q_next, y_next=y_next,
                     y_buckets=tuple(float(v) for v in yb),
-                    missing=tuple(int(v) for v in miss))
+                    missing=tuple(int(v) for v in miss),
+                    ack=ack, credit=credit)

@@ -65,10 +65,11 @@ import numpy as np
 import repro.obs as _obs
 from repro.agg import rounds
 from repro.agg.api import PublishedRound
-from repro.agg.server import AggServer, _reject, _retry
+from repro.agg.server import AggServer, _StreamFold, _reject, _retry
 from repro.agg.transport import chunks as C
 from repro.agg.transport import frame as wire
 from repro.agg.transport import session as S
+from repro.core import lattice as L
 from repro.kernels import ops as K
 
 # tier node ids live far above any realistic client id so the two can share
@@ -121,7 +122,16 @@ class TierAggregator:
     """
 
     def __init__(self, spec: wire.RoundSpec, anchor, node_id: int,
-                 max_pending: "int | None" = None):
+                 max_pending: "int | None" = None,
+                 streaming: "bool | None" = None):
+        """``streaming`` mirrors :class:`~repro.agg.server.AggServer`:
+        ``None`` resolves to ``spec.window > 0`` — a windowed round folds
+        each child stream's validated word ranges as they land (the tier
+        never decoded anyway, so streaming only moves the residual lift
+        from drain time to arrival time and frees the chunk bytes early);
+        commit into ``R`` still happens only at stream completion, after
+        the §5 checksum and the saturation guard (which needs the full
+        residual vector) pass."""
         rounds.check_anchor(spec, anchor if spec.anchored else None)
         self.spec = spec
         self.node_id = node_id
@@ -143,7 +153,17 @@ class TierAggregator:
         self._accepted: set[int] = set()
         self._gave_up: set[int] = set()
         self._pending: dict[int, wire.Payload] = {}
-        self._rx = S.Reassembler(spec)
+        self._attempt_floor: dict[int, int] = {}
+        self._folds: "dict[tuple, _StreamFold]" = {}
+        self._streaming = ((spec.window > 0) if streaming is None
+                           else bool(streaming)) and spec.mtu > 0
+        if self._streaming:
+            self._k0_j = jnp.asarray(self._k0)
+            self._rx = S.Reassembler(spec,
+                                     on_range_validated=self._fold_range,
+                                     on_stream_discarded=self._drop_stream)
+        else:
+            self._rx = S.Reassembler(spec)
         self._margins: dict[int, tuple] = {}
         # ---- the sum-without-decode accumulator ----
         self._R = np.zeros((spec.padded,), np.int64)
@@ -240,6 +260,11 @@ class TierAggregator:
         if h.n_chunks == 1:
             p = wire.payload_from_body(h, chunk)
         else:
+            if h.attempt < self._attempt_floor.get(h.client_id, 0):
+                # stale chunk of an attempt this tier already NACKed must
+                # not re-open a dead reassembly stream
+                self._obs.inc("duplicates")
+                return self._respond(self._queued(h, slim=True))
             event, p = self._rx.add(h, chunk)
             if event == S.REJECT:
                 self._obs.inc("resends_sent")
@@ -248,11 +273,16 @@ class TierAggregator:
                     round_id=self.spec.round_id, client_id=h.client_id,
                     attempt_next=h.attempt, q_next=h.q,
                     y_next=wire.y_at_attempt(self.spec, h.attempt),
-                    missing=tuple(range(h.n_chunks))))
+                    missing=tuple(range(h.n_chunks)),
+                    credit=self.spec.window))
             if p is None:                   # PROGRESS / DUPLICATE / STALE
                 if event in (S.DUPLICATE, S.STALE):
                     self._obs.inc("duplicates")
                 return self._respond(self._queued(h, slim=True))
+            if p.streamed:
+                # stream complete + sealed: verify the incremental fold and
+                # commit into R now (the tier's per-child drain)
+                return self._finish_streamed(h, p)
         try:
             wire.check_sides_against_spec(p, self.spec)
         except wire.HeaderMismatchError:
@@ -335,6 +365,76 @@ class TierAggregator:
             _obs.tracer().end(fold_sp, folded=self._m)
         return responses + self._resend_requests()
 
+    # ------------------------------------------------------- STREAMING RX
+    def _fold_range(self, h: wire.FrameHeader, word_start: int,
+                    words: np.ndarray) -> None:
+        """``on_range_validated``: residual-lift one validated word range
+        into the stream's speculative record (same integer identity the
+        batched fold uses); the session frees the chunk bytes after this."""
+        key = (h.client_id, h.attempt, h.payload_crc)
+        rec = self._folds.get(key)
+        if rec is None:
+            rec = self._folds[key] = _StreamFold(self.spec.padded,
+                                                 self.spec.nb)
+        c0 = word_start * (32 // L.bits_for_q(h.q))
+        r = np.asarray(K.lattice_residuals_range(
+            jnp.asarray(words), self._k0_j, q=h.q, word_start=word_start))
+        n = r.shape[0]
+        rec.r[c0:c0 + n] = r.astype(np.int16)
+        rec.coords += n
+        k = r.astype(np.int64) + self._k0.astype(np.int64)[c0:c0 + n]
+        part = np.sum(k.astype(np.uint32) * self._weights[c0:c0 + n],
+                      dtype=np.uint32)
+        rec.check = (rec.check + int(part)) & 0xFFFFFFFF
+
+    def _drop_stream(self, h: wire.FrameHeader) -> None:
+        """``on_stream_discarded``: drop the speculative record — nothing
+        was committed to R, so this IS the rollback."""
+        self._folds.pop((h.client_id, h.attempt, h.payload_crc), None)
+
+    def _finish_streamed(self, h: wire.FrameHeader,
+                         p: wire.Payload) -> bytes:
+        """A child stream completed and its payload-CRC seal held: verify
+        the incremental §5 checksum and the saturation guard (which needs
+        the FULL residual vector — the record has it), then fold into R."""
+        rec = self._folds.pop((h.client_id, h.attempt, h.payload_crc), None)
+        try:
+            wire.check_sides_against_spec(p, self.spec)
+        except wire.HeaderMismatchError:
+            self._obs.inc("rejected_spec")
+            return self._respond(_reject(self.spec, p.client_id))
+        if rec is None or rec.coords != self.spec.padded:
+            self._obs.inc("resends_sent")
+            return self._respond(wire.Response(
+                status=wire.STATUS_RESEND, round_id=self.spec.round_id,
+                client_id=h.client_id, attempt_next=h.attempt, q_next=h.q,
+                y_next=wire.y_at_attempt(self.spec, h.attempt),
+                missing=tuple(range(h.n_chunks)), credit=self.spec.window))
+        if rec.check != (h.check & 0xFFFFFFFF):
+            return self._decode_failure(p)
+        cand = self._R + rec.r.astype(np.int64)
+        half = self._q_max // 2
+        if cand.max() >= half or cand.min() < -half:
+            self._obs.inc("saturated")
+            self._obs.inc("gave_up")
+            self._gave_up.add(h.client_id)
+            if _obs.tracing_enabled():
+                _obs.tracer().event(
+                    "saturation_reject",
+                    parent=("round", self.spec.round_id),
+                    round=self.spec.round_id, tier=self.node_id,
+                    client=h.client_id)
+            _obs.trigger("saturation_reject", at=_obs.tracer().now(),
+                         round=self.spec.round_id, tier=self.node_id,
+                         client=h.client_id)
+            return self._respond(_reject(self.spec, h.client_id))
+        self._R = cand
+        self._m += h.n_summed
+        self._obs.inc("accepted")
+        self._obs.inc("clients_summed", h.n_summed)
+        self._accepted.add(h.client_id)
+        return self._respond(self._ack(h.client_id, ack=h.n_chunks))
+
     def _decode_failure(self, p: wire.Payload) -> bytes:
         """The flat server's escalation schedule, verbatim: NACK to the
         next attempt, terminal REJECT at the color-space cap."""
@@ -346,12 +446,13 @@ class TierAggregator:
             self._obs.inc("gave_up")
             return self._respond(_reject(self.spec, p.client_id))
         self._obs.inc("nacks_sent")
+        self._attempt_floor[p.client_id] = nxt
         return self._respond(wire.Response(
             status=wire.STATUS_NACK, round_id=self.spec.round_id,
             client_id=p.client_id, attempt_next=nxt,
             q_next=wire.q_at_attempt(self.spec.cfg.q, nxt),
             y_next=wire.y_at_attempt(self.spec, nxt),
-            y_buckets=self._margin_tuple(nxt)))
+            y_buckets=self._margin_tuple(nxt), credit=self.spec.window))
 
     def _margin_tuple(self, attempt: int) -> tuple:
         t = self._margins.get(attempt)
@@ -367,13 +468,15 @@ class TierAggregator:
             status=wire.STATUS_QUEUED, round_id=self.spec.round_id,
             client_id=h.client_id, attempt_next=h.attempt, q_next=h.q,
             y_next=wire.y_at_attempt(self.spec, h.attempt),
-            y_buckets=() if slim else self._margin_tuple(h.attempt))
+            y_buckets=() if slim else self._margin_tuple(h.attempt),
+            ack=self._rx.high_water(h.client_id) if self.spec.window else 0,
+            credit=self.spec.window)
 
-    def _ack(self, client_id: int) -> wire.Response:
+    def _ack(self, client_id: int, ack: int = 0) -> wire.Response:
         return wire.Response(status=wire.STATUS_ACK,
                              round_id=self.spec.round_id,
                              client_id=client_id, attempt_next=0, q_next=0,
-                             y_next=0.0)
+                             y_next=0.0, ack=ack, credit=self.spec.window)
 
     def _respond(self, r: wire.Response) -> bytes:
         out = wire.encode_response(r)
@@ -389,7 +492,9 @@ class TierAggregator:
                 client_id=cid, attempt_next=attempt,
                 q_next=wire.q_at_attempt(self.spec.cfg.q, attempt),
                 y_next=wire.y_at_attempt(self.spec, attempt),
-                y_buckets=self._margin_tuple(attempt), missing=missing)))
+                y_buckets=self._margin_tuple(attempt), missing=missing,
+                ack=self._rx.high_water(cid) if self.spec.window else 0,
+                credit=self.spec.window)))
         return out
 
     # ----------------------------------------------------------- LIFECYCLE

@@ -37,7 +37,8 @@ from repro.core import lattice as L
 SIDE_BYTES = 4
 WORD_BYTES = 4
 
-# agg transport frame layout (v4), see repro.agg.transport.frame:
+# agg transport frame layout (v5; unchanged since v4), see
+# repro.agg.transport.frame:
 #   magic 4s | version u16 | flags u16 | 16 x u32 fields | crc u32
 # The frame module asserts its struct sizes against these at import time —
 # the constants live here so the header math is auditable next to the body
@@ -45,7 +46,9 @@ WORD_BYTES = 4
 FRAME_FIXED_FIELDS = 16
 FRAME_HEADER_BYTES = 4 + 2 + 2 + 4 * FRAME_FIXED_FIELDS + 4        # 76
 # response head: magic 4s | version u16 | status u16 | 4 x u32 | f32 | 2 x u32
-RESPONSE_HEAD_BYTES = 4 + 2 + 2 + 4 * 4 + 4 + 4 * 2                # 36
+# | ack u32 | credit u32 (the v5 additive flow-control fields: cumulative
+# contiguous-chunk ack + send-window credit)
+RESPONSE_HEAD_BYTES = 4 + 2 + 2 + 4 * 4 + 4 + 4 * 2 + 4 * 2        # 44
 RESPONSE_CRC_BYTES = 4
 
 

@@ -606,7 +606,9 @@ def test_server_mean_bit_identical_to_star_8dev():
     allgather_allreduce_mean bitwise for the same inputs/seeds (rotated and
     unrotated), invariant to client arrival order — and (ISSUE 5) the
     mtu-chunked transport is bit-identical to both: the same round carried
-    as out-of-order interleaved chunk frames yields the same mean."""
+    as out-of-order interleaved chunk frames yields the same mean — as does
+    (v5) the streaming server folding credit-windowed chunk ranges on
+    arrival."""
     out = _run_8dev("""
         import dataclasses
         from functools import partial
@@ -657,6 +659,26 @@ def test_server_mean_bit_identical_to_star_8dev():
             cmean, cstats = cserver.finalize()
             assert cstats.accepted == 8, cstats
             assert np.array_equal(cmean, star[0]), rotate
+            # (v5) the same round again through the streaming server:
+            # credit-windowed clients, ranges folded on arrival — still
+            # bit-identical to the star collective
+            sspec = dataclasses.replace(spec, mtu=1024, window=2)
+            sserver = AggServer(sspec, np.asarray(xs[3]))
+            scli = [AggClient(sspec, i, np.asarray(xs[i])) for i in range(8)]
+            outbox = [(c, f) for c in scli for f in c.send_frames()]
+            while outbox:
+                nxt = []
+                for c, f in outbox:
+                    for rb in sserver.ingest_frame(f):
+                        nxt.extend((c, g) for g in c.handle_response(rb))
+                outbox = nxt
+            assert all(c.acked for c in scli)
+            sserver.drain()
+            smean, sstats = sserver.finalize()
+            assert sstats.accepted == 8, sstats
+            assert np.array_equal(smean, star[0]), rotate
+            assert sstats.peak_pending_store_bytes < \
+                cstats.peak_pending_store_bytes, (sstats, cstats)
         print("SERVER_STAR_PARITY_OK")
     """)
     assert "SERVER_STAR_PARITY_OK" in out
@@ -709,3 +731,108 @@ def test_anchored_server_mean_bit_identical_to_anchored_star_8dev():
         print("ANCHORED_PARITY_OK")
     """)
     assert "ANCHORED_PARITY_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Streaming tiers (v5): windowed tree == flat sealed server, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_streaming_tree_windowed_bit_identical_to_flat_sealed():
+    """A windowed round through a 2-tier AggTree (every edge tier folding
+    validated chunk ranges as they land) publishes the same accepted set
+    and a bit-identical mean as the flat SEALED server — under a fully
+    permuted chunk blast AND under credit-paced windowed clients."""
+    from repro.agg.tree import AggTree
+
+    d, n_clients = 2048, 12
+    spec = dataclasses.replace(_spec(d=d, seed=11, round_id=9),
+                               mtu=300, window=2)
+    rng = np.random.RandomState(11)
+    base = 2.0 * rng.randn(d).astype(np.float32)
+    xs = base[None] + 0.02 * rng.randn(n_clients, d).astype(np.float32)
+    clients = [AggClient(spec, cid, xs[cid]) for cid in range(n_clients)]
+    all_frames = [c.frames() for c in clients]
+    assert len(all_frames[0]) >= 3
+
+    flat = AggServer(spec, base, streaming=False)
+    for fs in all_frames:
+        for f in fs:
+            flat.ingest_frame(f)
+    flat.tick()
+    flat.seal()
+    pf = flat.published()[0]
+    assert len(pf.accepted) == n_clients
+
+    # permuted blast: tiers stream ranges out of order, roll nothing back
+    tree = AggTree(spec, base, fanout=4, tiers=2)
+    deliveries = [f for fs in all_frames for f in fs]
+    for i in rng.permutation(len(deliveries)):
+        tree.ingest_frame(deliveries[int(i)])
+    tree.tick()
+    tree.seal()
+    for _ in range(8):
+        tree.tick()
+        if tree.published():
+            break
+    pt = tree.published()[0]
+    assert pt.accepted == pf.accepted
+    assert np.array_equal(np.asarray(pt.mean).view(np.uint32),
+                          np.asarray(pf.mean).view(np.uint32))
+    assert all(t._streaming for t in tree.layers[0])
+
+    # credit-paced windowed clients against the streaming tree
+    tree2 = AggTree(spec, base, fanout=4, tiers=2)
+    cl2 = [AggClient(spec, cid, xs[cid]) for cid in range(n_clients)]
+    outbox = [(c, f) for c in cl2 for f in c.send_frames()]
+    for _ in range(60):
+        nxt = []
+        for c, f in outbox:
+            for rb in tree2.ingest_frame(f):
+                nxt.extend((c, g) for g in c.handle_response(rb))
+        for m in tree2.tick():
+            r = wire.decode_response(m)
+            for c in cl2:
+                if c.client_id == r.client_id:
+                    nxt.extend((c, g) for g in c.handle_response(m))
+        outbox = nxt
+        if all(c.acked for c in cl2):
+            break
+    assert all(c.acked for c in cl2)
+    tree2.seal()
+    for _ in range(8):
+        tree2.tick()
+        if tree2.published():
+            break
+    pt2 = tree2.published()[0]
+    assert pt2.accepted == pf.accepted
+    assert np.array_equal(np.asarray(pt2.mean).view(np.uint32),
+                          np.asarray(pf.mean).view(np.uint32))
+
+
+def test_streaming_server_expire_rolls_back_fold_and_store():
+    """expire_client on a half-streamed client drops its speculative fold
+    and its held bytes: the published mean is over the others only, and
+    the pending store returns to zero."""
+    spec = dataclasses.replace(_spec(d=2048, seed=4), mtu=300, window=2)
+    rng = np.random.RandomState(0)
+    base = rng.randn(spec.d).astype(np.float32)
+    xs = base[None] + 0.02 * rng.randn(3, spec.d).astype(np.float32)
+    fleets = [AggClient(spec, i, xs[i]).frames() for i in range(3)]
+    server = AggServer(spec, base)
+    for f in fleets[0]:
+        server.receive(f)
+    for f in fleets[1]:
+        server.receive(f)
+    for f in fleets[2][:2]:                  # client 2: half a stream
+        server.receive(f)
+    assert server._folds                     # its speculative fold is open
+    server.expire_client(2)
+    assert not any(k[0] == 2 for k in server._folds)
+    server.drain()
+    mean, stats = server.finalize()
+    assert server.accepted_clients == frozenset({0, 1})
+    ref_srv = AggServer(spec, base, streaming=False)
+    for f in fleets[0] + fleets[1]:
+        ref_srv.receive(f)
+    mean_ref, _ = ref_srv.finalize()
+    assert np.array_equal(mean.view(np.uint32), mean_ref.view(np.uint32))

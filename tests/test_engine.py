@@ -422,6 +422,20 @@ def test_open_loop_sim_parity_and_overlap():
     assert lock.rounds >= 2
     assert rep.rounds_per_s > lock.rounds_per_s, (rep.rounds_per_s,
                                                   lock.rounds_per_s)
+    assert rep.window_stalls == 0              # blast mode: no credit cap
+
+
+def test_open_loop_windowed_stalls_and_replay_parity():
+    """The same open-loop trace with per-client in-flight chunk caps
+    (``window=2``): the 3%-loss trace makes clients sit on blocked credit
+    windows (stalls observed), streaming servers fold ranges on arrival,
+    and every published round is STILL bit-identical to its sealed
+    lockstep replay (asserted inside run_open_loop against a
+    streaming=False server)."""
+    rep = sim.run_open_loop(sim.OpenLoopConfig(window=2), check_parity=True)
+    assert rep.rounds >= 3
+    assert rep.window_stalls > 0, "windowed trace never hit the credit cap"
+    assert rep.accepted_total > 0.5 * rep.clients_arrived
 
 
 # ---------------------------------------------------------------------------
