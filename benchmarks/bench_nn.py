@@ -1,7 +1,18 @@
 """Paper Experiment 7 (Figures 12-13 analogue): NN training with compressed
 gradients.  Offline container: a 2-layer MLP classifier on a synthetic
 10-class problem at 4 bits/coord (the claim validated is the *ordering*:
-LQ competitive with QSGD, far above EFSign at 1 bit)."""
+LQ competitive with QSGD, far above EFSign at 1 bit).
+
+Also hosts the ``fsdp_overlap`` row: serial vs prefetched FSDP trainer step
+time on an emulated 8-device CPU mesh, plus the HLO overlap auditor's
+``collective_exposed_fraction`` for both programs.  That probe needs its own
+process (XLA device-count flag must be set before jax initializes), so it is
+run via subprocess — see benchmarks/fsdp_overlap_probe.py."""
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import jax.flatten_util
 import jax.numpy as jnp
@@ -73,6 +84,24 @@ def run(comp_name, steps=120, n=2, lr=0.15):
     return accuracy(p, xv, yv)
 
 
+def run_fsdp_overlap():
+    """Serial vs prefetched FSDP step on an 8-device CPU mesh (subprocess —
+    the probe sets XLA_FLAGS before importing jax).  Returns the probe's
+    RESULT dict; the probe itself asserts bit-identity, exposed-fraction
+    improvement, and zero sharded-anchor state bytes."""
+    probe = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "fsdp_overlap_probe.py")
+    proc = subprocess.run([sys.executable, probe, "--check"],
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"fsdp_overlap probe failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"no RESULT line from probe:\n{proc.stdout}")
+
+
 def main():
     accs = {}
     for name in ("fp32", "lq", "qsgd", "efsign"):
@@ -80,6 +109,15 @@ def main():
         emit(f"exp7_nn_{name}", 0.0, f"val_acc={accs[name]:.3f}")
     assert accs["lq"] > accs["fp32"] - 0.08, accs
     assert accs["lq"] >= accs["efsign"] - 0.02, accs
+
+    r = run_fsdp_overlap()
+    assert r["exposed_prefetch"] < r["exposed_serial"], r
+    assert r["anchor_state_bytes"] == 0, r
+    emit("fsdp_overlap", r["prefetch_us"],
+         f"serial_us={r['serial_us']:.1f};step_ratio={r['step_ratio']:.3f};"
+         f"exposed_serial={r['exposed_serial']:.3f};"
+         f"exposed_prefetch={r['exposed_prefetch']:.3f};"
+         f"anchor_state_bytes={r['anchor_state_bytes']}")
 
 
 if __name__ == "__main__":

@@ -53,10 +53,8 @@ def load(results_dir: str = "results/dryrun", tag: str = "") -> list[dict]:
     out = []
     for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
         r = json.load(open(p))
-        if r.get("skipped"):
-            r["_file"] = p
-            out.append(r)
-            continue
+        # tag filter applies uniformly — skipped records from other tags
+        # used to leak into every report
         if (r.get("tag") or "") != tag:
             continue
         r["_file"] = p
@@ -82,26 +80,35 @@ def terms(rec: dict) -> dict:
         "model_flops_per_chip": mf, "useful_ratio": useful,
         "roofline_fraction": (ideal / bound) if bound > 0 else 0.0,
         "step_lower_bound_s": bound,
+        # fraction of loop-collective bytes on the critical path (HLO
+        # overlap auditor); None for records predating the field
+        "exposed_fraction": rec.get("collective_exposed_fraction"),
     }
+
+
+def _fmt_exposed(t: dict) -> str:
+    e = t.get("exposed_fraction")
+    return "-" if e is None else f"{e:.2f}"
 
 
 def fmt_row(rec: dict) -> str:
     mesh = "2pod" if rec["multi_pod"] else "1pod"
     if rec.get("skipped"):
         return (f"| {rec['arch']} | {rec['shape']} | {mesh} | — | — | — | "
-                f"skip | — | — | {rec['reason'][:40]} |")
+                f"skip | — | — | — | {rec['reason'][:40]} |")
     t = terms(rec)
     peak = rec["memory"]["peak_bytes"] / 2 ** 30
     return (f"| {rec['arch']} | {rec['shape']} | {mesh} "
             f"| {t['t_compute_s']*1e3:.2f} | {t['t_memory_s']*1e3:.2f} "
             f"| {t['t_collective_s']*1e3:.2f} | {t['dominant']} "
             f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']*100:.1f}% "
-            f"| peak {peak:.1f} GiB |")
+            f"| {_fmt_exposed(t)} | peak {peak:.1f} GiB |")
 
 
 HEADER = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
-          "collective (ms) | dominant | MODEL/HLO | roofline frac | note |\n"
-          "|---|---|---|---|---|---|---|---|---|---|")
+          "collective (ms) | dominant | MODEL/HLO | roofline frac | "
+          "exposed frac | note |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
 
 
 def main(results_dir: str = "results/dryrun", tag: str = ""):
@@ -118,17 +125,20 @@ def main(results_dir: str = "results/dryrun", tag: str = ""):
     os.makedirs("results", exist_ok=True)
     with open("results/roofline.csv", "w") as f:
         f.write("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
-                "dominant,useful_ratio,roofline_fraction,peak_gib,skipped\n")
+                "dominant,useful_ratio,roofline_fraction,exposed_fraction,"
+                "peak_gib,skipped\n")
         for r in recs:
             mesh = "2pod" if r["multi_pod"] else "1pod"
             if r.get("skipped"):
-                f.write(f"{r['arch']},{r['shape']},{mesh},,,,,,,,1\n")
+                f.write(f"{r['arch']},{r['shape']},{mesh},,,,,,,,,1\n")
                 continue
             t = terms(r)
+            e = t.get("exposed_fraction")
             f.write(f"{r['arch']},{r['shape']},{mesh},{t['t_compute_s']:.6e},"
                     f"{t['t_memory_s']:.6e},{t['t_collective_s']:.6e},"
                     f"{t['dominant']},{t['useful_ratio']:.4f},"
                     f"{t['roofline_fraction']:.4f},"
+                    f"{'' if e is None else f'{e:.4f}'},"
                     f"{r['memory']['peak_bytes']/2**30:.2f},0\n")
     print("\nwrote results/roofline.csv")
 

@@ -3,7 +3,8 @@
 regression.
 
 Runs ``benchmarks/run.py`` (the ``bench_kernels`` + ``bench_dme`` +
-``bench_agg`` gate set by default, ``--all`` for every module), parses its
+``bench_agg`` + ``bench_nn`` gate set by default, ``--all`` for every
+module), parses its
 ``BENCH_JSON`` summary line, writes ``BENCH_<YYYY-MM-DD>.json`` at the repo
 root (us_per_call + wire_compression + derived metrics per benchmark), and
 compares the guarded entries against the most recent committed
@@ -38,7 +39,7 @@ import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-GATE_MODULES = "bench_dme,bench_kernels,bench_agg"
+GATE_MODULES = "bench_dme,bench_kernels,bench_agg,bench_nn"
 REGRESSION = 0.20          # >20% worse than baseline fails
 US_SLACK = 10_000.0        # absolute us slack: interpret-mode CPU timings
                            # jitter by ~10ms under co-located load
@@ -161,9 +162,39 @@ def compare(entries: dict, base: dict, same_machine: bool = True
             problems.append(
                 f"{name}: obs_overhead_pct {ov:.1f} exceeds the "
                 f"{OBS_OVERHEAD_MAX_PCT:.0f}% enabled-observability budget")
+        # absolute gates for the fsdp_overlap row (bench_nn): the prefetched
+        # program's loop collectives must be structurally overlapped (HLO
+        # auditor exposed fraction strictly below the serial baseline) and
+        # the sharded anchor must add zero per-step state bytes — both are
+        # properties of the lowered program, not of the machine
+        if name == "fsdp_overlap":
+            es = e.get("metrics", {}).get("exposed_serial")
+            ep = e.get("metrics", {}).get("exposed_prefetch")
+            if es is None or ep is None or not ep < es:
+                problems.append(
+                    f"{name}: exposed_prefetch ({ep}) is not strictly below "
+                    f"exposed_serial ({es})")
+            ab = e.get("metrics", {}).get("anchor_state_bytes")
+            if ab != 0:
+                problems.append(
+                    f"{name}: sharded anchor moved {ab} state bytes/step "
+                    f"(must be 0)")
         b = base_entries.get(name)
         if b is None:
             continue
+        if name == "fsdp_overlap":
+            # ratchet vs the committed baseline: the exposed fraction (a
+            # structural property, deterministic per commit — small absolute
+            # slack for lowering drift) and the prefetch/serial step-time
+            # ratio (noisy interpret-mode CPU timing: policy tolerance)
+            for k, tol, slack in (("exposed_prefetch", 0.0, 0.05),
+                                  ("step_ratio", REGRESSION, 0.0)):
+                bv = b.get("metrics", {}).get(k)
+                ev = e.get("metrics", {}).get(k)
+                if bv is not None and ev is not None and \
+                        ev > bv * (1 + tol) + slack:
+                    problems.append(f"{name}: {k} {ev:g} grew past baseline "
+                                    f"{bv:g}")
         if name.startswith(GUARD_PREFIXES):
             if (same_machine and b["us_per_call"] > 0 and
                     e["us_per_call"] > b["us_per_call"] * (1 + REGRESSION)

@@ -36,7 +36,13 @@
 #      reruns the trace with repro.obs fully enabled and asserts every
 #      published round's span tree is causally complete (check_round) and
 #      both exporters render (OBS_SMOKE_OK);
-#   6. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
+#   6. a smoke of the prefetch-pipelined FSDP trainer on 8 emulated devices
+#      (benchmarks/fsdp_overlap_probe.py --check) — 3 steps of the tiny
+#      anchored trainer, serial vs double-buffered prefetch, asserting
+#      bitwise-identical losses/params, a strictly lower HLO
+#      collective_exposed_fraction for the prefetched program, and zero
+#      sharded-anchor state bytes per step;
+#   7. with CI_BENCH=1, the benchmark regression gate (scripts/bench_ci.py:
 #      kernel_lattice_* timings + bench_dme accuracy + agg_* service
 #      throughput + the engine's virtual-clock latency/staleness/speedup
 #      vs the last committed BENCH_*.json baseline, plus the absolute
@@ -68,6 +74,9 @@ python examples/federated_dme.py --topology tree
 
 echo "== tier-1: open-loop continuous-round engine smoke =="
 python examples/open_loop_agg.py
+
+echo "== tier-1: FSDP prefetch-overlap smoke (8 emulated devices) =="
+python benchmarks/fsdp_overlap_probe.py --check
 
 if [[ "${CI_BENCH:-0}" == "1" ]]; then
     echo "== tier-1: benchmark regression gate =="

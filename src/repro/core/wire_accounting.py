@@ -124,6 +124,32 @@ def fp32_ring_reduce_scatter_bytes(seg: int, world: int) -> int:
     return 4 * (seg - seg // world)
 
 
+def anchor_gather_bytes(m: int, world: int) -> int:
+    """Per-rank wire bytes of rebuilding a *sharded* anchor by tiled f32
+    ring all-gather: (world-1)/world of the (m,) vector.  This rides the
+    FSDP forward weight-gather slot (dist/fsdp.py), so it overlaps compute
+    under prefetch rather than serializing the backward sync."""
+    w = max(world, 1)
+    return 4 * (m - m // w)
+
+
+def anchor_state_bytes(m: int, world: int, sharded: bool) -> int:
+    """Per-rank bytes of next-step anchor state one anchored gradient sync
+    materializes *beyond the rank's own ZeRO-3 shard* of the (m,) mean.
+
+    Legacy replicated anchors write the full f32 vector into every rank's
+    telemetry — ``4 * (m - m/world)`` bytes beyond the shard the rank
+    would keep anyway.  Sharded anchors (``FSDPConfig.anchor_sharded``)
+    write only the rank's own ``(m/world,)`` slice: zero extra.  Either
+    way the backward *wire* cost is unchanged (``fsdp.wire_bytes_bwd``) —
+    the butterfly's common output doubles as the anchor, and the sharded
+    anchor's rebuild is :func:`anchor_gather_bytes` on the forward."""
+    if sharded:
+        return 0
+    w = max(world, 1)
+    return 4 * (m - m // w)
+
+
 # ---------------------------------------------------------------------------
 # Framed bytes (the agg transport stack: frame + chunk layers)
 # ---------------------------------------------------------------------------

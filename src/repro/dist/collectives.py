@@ -55,7 +55,11 @@ failures and observed distances to individual buckets (feeding the
 per-bucket ``y`` update in :func:`repro.core.qstate.update_y`), and
 ``rh_reduce_scatter_mean`` additionally returns ``y_seg`` — the kept
 segment's per-bucket bounds — so multi-axis FSDP chains thread per-bucket
-``y`` from axis to axis instead of broadcasting one scalar per leaf.
+``y`` from axis to axis instead of broadcasting one scalar per leaf.  The
+split ``gather_async``/``gather_wait`` FSDP path (dist/fsdp.py, prefetch
+pipelining) reuses the exact same backward chain — the y-threading below is
+shared by both formulations, which is what makes split-vs-monolithic
+bitwise identical.
 
 Wire format (``cfg.packed=True``, the default): what crosses the
 ``all_gather``/``ppermute`` boundary is the *packed* payload produced by the
@@ -211,15 +215,29 @@ def _sides(y_buckets: Array, cfg: QSyncConfig) -> Array:
     return jax.lax.optimization_barrier(s)
 
 
-def _bucket_fails(z: Array, anchor: Array, y_col: Array):
-    """Vectorized lattice.decode_failure over buckets.
+def _bucket_fails(k: Array, k_ref: Array, s_col: Array, y_col: Array):
+    """Vectorized lattice.decode_failure over buckets, in coordinate space.
 
-    z, anchor: (..., nb, bucket); y_col: (nb, 1).  Returns
+    k, k_ref: int32 lattice coordinates (..., nb, bucket) — the decoded
+    sender and the local reference point on the *same* (u, s) lattice;
+    s_col, y_col: (nb, 1) per-bucket sides / distance bounds.  Returns
     (fails_b (nb,), dist_b (nb,)) — per-bucket failure counts and max
-    distances, reduced over any leading (sender/round) axes.  The scalar
-    telemetry is ``fails_b.sum()`` / ``dist_b.max()``.
+    distances ``|k - k_ref| * s``, reduced over any leading (sender/round)
+    axes.  The scalar telemetry is ``fails_b.sum()`` / ``dist_b.max()``.
+
+    Distances are computed from the *integer* coordinate deltas, never from
+    the decoded float points: ``(k + u) * s - anchor`` is a mul-add chain
+    that LLVM FMA-contracts per fusion context (XLA CPU strips
+    ``optimization_barrier`` during HLO optimization, so barriers cannot
+    prevent it), which made the telemetry drift by ulps between structurally
+    different programs — e.g. the serial vs the prefetch-pipelined FSDP
+    backward — and, through the y-state feedback, eventually diverged
+    training.  An int subtract, exact f32 convert, and one correctly-rounded
+    multiply have no contractible pattern: every program computes bit-equal
+    telemetry from bit-equal coords (the same discipline as the
+    integer-space averaging of the mean path).
     """
-    dist = jnp.abs(z - anchor)
+    dist = jnp.abs(k - k_ref).astype(jnp.float32) * s_col
     failed = jnp.any(dist > 1.5 * y_col, axis=-1).astype(jnp.float32)
     dist_b = jnp.max(dist, axis=-1)
     lead = tuple(range(failed.ndim - 1))
@@ -347,15 +365,22 @@ def allgather_allreduce_mean(x_local: Array, state: Union[QState, Array],
     # barrier is an identical subgraph in both, so outputs stay bit-identical
     k = jax.lax.optimization_barrier(k)
     z = L.coords_to_point(k, s, u)                          # (world, nb, b)
-    fails_b, dist_b = _bucket_fails(z, xr[None],
+    # own decode is exact, so k[rank] is this rank's own lattice point —
+    # the coordinate-space reference for the distance telemetry
+    k_own = jax.lax.dynamic_index_in_dim(k, jax.lax.axis_index(axis_name),
+                                         0, keepdims=True)
+    fails_b, dist_b = _bucket_fails(k, k_own, s,
                                     y_buckets.astype(jnp.float32)[:, None])
     # average in integer coordinate space (as the butterfly does): the int
     # sum over senders is exact and order-free, so the mean is bit-identical
     # however XLA reduces, and every rank computes the same value
     ksum = jnp.sum(k, axis=0)
-    mean_b = (ksum.astype(jnp.float32) / world + u) * s
+    kmean = ksum.astype(jnp.float32) / world
+    mean_b = (kmean + u) * s
 
-    dev = jnp.max(jnp.abs(z - mean_b[None]))
+    # coordinate-space deviation (see _bucket_fails: float `z - mean_b` is
+    # an FMA-contractible mul-add; the coord delta times s is not)
+    dev = jnp.max(jnp.abs(k.astype(jnp.float32) - kmean[None]) * s)
     if ab is not None:
         mean_b = mean_b + ab
     aux = QSyncAux(fails=jnp.sum(fails_b), max_dist=jnp.max(dist_b),
@@ -425,8 +450,7 @@ def butterfly_allreduce_mean(x_local: Array, state: Union[QState, Array],
         # pin the (exact) integer coords so the float math below compiles
         # from identical subgraphs whichever wire path produced them
         k_own, k_partner = jax.lax.optimization_barrier((k_own, k_partner))
-        f_b, d_b = _bucket_fails(L.coords_to_point(k_partner, s, u), cur,
-                                 y_col)
+        f_b, d_b = _bucket_fails(k_partner, k_own, s, y_col)
         fails_b = fails_b + f_b
         dist_b = jnp.maximum(dist_b, d_b)
         # average in integer coordinate space: int adds are exact and
@@ -553,15 +577,17 @@ def rh_reduce_scatter_mean(x_local: Array, state: Union[QState, Array],
         # the shared float math below compiles identically for the packed and
         # unpacked paths and the reduce-scatter stays bit-identical
         k_recv = jax.lax.optimization_barrier(k_recv)
-        z = L.coords_to_point(k_recv, s_keep, u_keep)
-        f_b, d_b = _bucket_fails(z, keep, y_keep[:, None])
+        # quantize our own half onto the same (u, s) lattice: the reference
+        # for the coordinate-space telemetry and for the exact average below
+        k_own = L.encode_coords(keep, s_keep, u_keep)
+        f_b, d_b = _bucket_fails(k_recv, k_own, s_keep, y_keep[:, None])
         fails_b = fails_b + f_b
         dist_b = jnp.maximum(dist_b, d_b)
         fails = fails + jnp.sum(f_b)
         max_dist = jnp.maximum(max_dist, jnp.max(d_b))
         # average in integer coordinate space, exactly as the butterfly does:
-        # quantize our own half onto the same (u, s) lattice and average the
-        # *coordinates*.  A float average 0.5*(keep + z) is not
+        # average the *coordinates* of our own quantized half and the
+        # received half.  A float average 0.5*(keep + z) is not
         # compilation-stable — XLA CPU FMA-contracts/reassociates the mul-add
         # chain per fusion context (even across optimization_barrier), which
         # made the packed and unpacked wire paths drift by 1 ulp; the int sum
@@ -569,7 +595,6 @@ def rh_reduce_scatter_mean(x_local: Array, state: Union[QState, Array],
         # add-of-product, so both paths stay bit-identical.  The extra s/2
         # dithered rounding on our own half is the paper's Algorithm 4
         # error model (unbiased, O(s log n) accumulated).
-        k_own = L.encode_coords(keep, s_keep, u_keep)
         cur = (0.5 * (k_own + k_recv).astype(jnp.float32) + u_keep) * s_keep
         y_cur = y_keep
 
@@ -623,3 +648,12 @@ def wire_bytes_rh(n: int, world: int, cfg: QSyncConfig) -> int:
     padded = flat_size_padded(n, cfg)
     return WA.rh_bytes(padded, cfg.bits, padded // cfg.bucket, world,
                        cfg.packed)
+
+
+def wire_bytes_anchor_gather(n: int, world: int) -> int:
+    """Forward f32 tiled all-gather rebuilding a *sharded* anchor (the
+    second gather in the FSDP prefetch slot — see dist/fsdp.py).  Note
+    this is a forward-path cost: the anchored backward sync itself moves
+    zero anchor bytes (the butterfly's common output doubles as the next
+    anchor) regardless of anchor layout."""
+    return WA.anchor_gather_bytes(n, world)

@@ -23,16 +23,37 @@ per leaf, and the backward all-gathers the final segment's per-bucket
 telemetry so every rank reports identical ``(nb,)`` failure/distance maps.
 
 Anchored mode (``FSDPConfig.anchored``): the ``y`` entry is a dict
-``{"y": (nb,), "anchor": (m,)}`` — the anchor is the previous step's decoded
-gradient mean, replicated.  The DP sync then runs the *butterfly* topology
-with a :class:`repro.core.qstate.QState` (encode ``g - anchor``): the
-butterfly's common full-length output is simultaneously this rank's shard
-(sliced locally) and the next step's anchor, maintained with zero extra
-communication.  Cross-step gradient correlation makes ``|g_t - mean_{t-1}|``
+``{"y": (nb,), "anchor": ...}`` — the anchor is the previous step's decoded
+gradient mean.  The anchor arrives either *replicated* (legacy, shape
+``(m,)``) or *sharded* like the weights (``FSDPConfig.anchor_sharded``:
+shape ``(shard,)`` = ``m // dp``, the rank's own slice): the forward then
+rebuilds the full anchor with a second tiled all-gather in the same
+prefetch slot as the weight gather (f32 — the anchor must stay exact), so
+anchoring stops costing a replicated ``(m,)`` vector of state per leaf and
+the *backward sync moves zero extra anchor bytes* either way.  The DP sync
+runs the *butterfly* topology with a :class:`repro.core.qstate.QState`
+(encode ``g - anchor``): the butterfly's common full-length output is
+simultaneously this rank's shard (sliced locally) and the next step's
+anchor, maintained with zero extra communication.  With a sharded anchor
+the telemetry carries back only the rank's ``(shard,)`` slice of that
+output.  Cross-step gradient correlation makes ``|g_t - mean_{t-1}|``
 much smaller than ``|g_t|``, so ``y`` tightens across steps (the paper's
 distance-dependent bound, realized step over step).  The butterfly moves
-log2(world) full payloads where rh moves ~1 — the price of keeping the
-anchor replicated — still ~8x under fp32 at q=16 for world <= 256.
+log2(world) full payloads where rh moves ~1 — still ~8x under fp32 at
+q=16 for world <= 256.
+
+Prefetch pipelining (``FSDPConfig.prefetch``, consumed by the model scan —
+see models/transformer.py): :func:`make_fsdp_gather_split` splits the
+monolithic ``gather(bundle)`` custom-vjp into an *issue* half
+(``gather_async``: the same collective + quantized-RS vjp, its output
+pinned behind an ``optimization_barrier``) and a *consume* half
+(:func:`gather_wait`: a custom-vjp identity barrier).  The model's layer
+scan carries the issued handle for layer k+1 while layer k computes, so
+the all-gather overlaps forward compute — and, transposed, layer k's
+quantized reduce-scatter overlaps layer k-1's cotangent compute.  The
+barriers pin the consumption subgraph to the same fusion context as the
+serial formulation, keeping prefetched training bit-identical to serial
+(XLA CPU FMA-contracts mul-add chains per fusion context otherwise).
 
 Telemetry rides the cotangent of a dummy ``tele`` input: the backward pass
 writes ``[max_dist, fails, y_next]`` (TELE_WIDTH columns), then the
@@ -73,6 +94,11 @@ class FSDPConfig:
     gather_dtype: str = "bfloat16"
     anchored: bool = False              # butterfly sync anchored on the
                                         # previous step's decoded mean
+    anchor_sharded: bool = True         # anchored: store (shard,) anchors and
+                                        # rebuild via a fwd all-gather (f32)
+                                        # instead of replicating (m,) state
+    prefetch: bool = False              # model scans double-buffer the gather
+                                        # (issue layer k+1 while k computes)
 
     def __post_init__(self):
         if self.sync not in ("lq", "fp32"):
@@ -110,7 +136,13 @@ def leaf_nb(m: int, dp: int, qcfg: QSyncConfig) -> int:
 
 def tele_width(nb: int, m: int = 0, anchored: bool = False) -> int:
     """Tele-leaf length carrying per-bucket maps (+ the anchor if asked):
-    [3 scalars | dist_b (nb) | fails_b (nb) | anchor_next (m, anchored)]."""
+    [3 scalars | dist_b (nb) | fails_b (nb) | anchor_next (m, anchored)].
+
+    ``m`` is the anchor length the telemetry carries back: the full
+    gathered length for legacy replicated anchors, the rank's *shard*
+    length (``m // dp``) when the anchor is stored sharded
+    (``FSDPConfig.anchor_sharded`` — see models/sharding.leaf_anchor_len).
+    """
     return TELE_WIDTH + 2 * nb + (m if anchored else 0)
 
 
@@ -139,11 +171,38 @@ def wire_bytes_bwd(m: int, sizes: "list[int]", cfg: FSDPConfig) -> int:
     b = _effective_bucket(cfg.qcfg, m, dp)
     qc = dataclasses.replace(cfg.qcfg, bucket=b)
     if cfg.anchored:
+        # NOTE the sync itself carries zero anchor bytes regardless of
+        # anchor_sharded: the butterfly's common output doubles as the next
+        # anchor, and a sharded anchor's rebuild rides the *forward* gather
+        # slot (anchor_bytes_step / WA.anchor_state_bytes account for the
+        # per-step anchor state beyond the rank's own shard).
         return sum(wire_bytes_butterfly(m, ws, qc) for ws in sizes)
     for ws in sizes:
         total += wire_bytes_rh(cur, ws, qc)
         cur //= ws
     return total
+
+
+def anchor_bytes_step(m: int, sizes: "list[int]", cfg: FSDPConfig) -> int:
+    """Per-rank anchor-state bytes one step materializes *beyond the rank's
+    own ZeRO-3 shard* for a gathered leaf of length m — 0 unless anchored;
+    0 with a sharded anchor (each rank keeps only its ``(m/dp,)`` slice and
+    the full anchor is rebuilt by the forward gather); the legacy
+    replicated anchor re-materializes the full ``(m,)`` f32 vector on every
+    rank every step.  Delegates to
+    :func:`repro.core.wire_accounting.anchor_state_bytes`."""
+    if not (cfg.anchored and cfg.sync == "lq"):
+        return 0
+    return WA.anchor_state_bytes(m, int(np.prod(sizes)), cfg.anchor_sharded)
+
+
+def anchor_gather_bytes_fwd(m: int, sizes: "list[int]", cfg: FSDPConfig) -> int:
+    """Per-rank forward wire bytes of rebuilding a sharded anchor (the f32
+    tiled all-gather that piggybacks on the weight-gather slot).  0 for the
+    legacy replicated anchor (nothing to rebuild) and in unanchored mode."""
+    if not (cfg.anchored and cfg.sync == "lq" and cfg.anchor_sharded):
+        return 0
+    return WA.anchor_gather_bytes(m, int(np.prod(sizes)))
 
 
 def _split_y(y_entry):
@@ -192,14 +251,43 @@ def _rank_linear(axes) -> Array:
     return idx
 
 
+@jax.custom_vjp
+def gather_wait(handle: Array) -> Array:
+    """Consume a prefetched gather handle (the *wait* half of the split
+    gather).  Value-wise the identity; an ``optimization_barrier`` on both
+    the value and the cotangent pins the consumption point so (a) XLA
+    cannot sink the issued collective back into the consuming layer's
+    fusion context, and (b) the compute subgraph downstream sees exactly
+    the pinned operand the serial formulation sees (bit-identity).  A
+    plain ``optimization_barrier`` is *not differentiable* on jax 0.4.x —
+    hence the custom-vjp wrapper."""
+    return jax.lax.optimization_barrier(handle)
+
+
+def _wait_fwd(handle):
+    return jax.lax.optimization_barrier(handle), None
+
+
+def _wait_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+gather_wait.defvjp(_wait_fwd, _wait_bwd)
+
+
 def make_fsdp_gather(cfg: FSDPConfig):
     """Returns gather(bundle) -> w_full.
 
     bundle: {"w": (shard,) storage shard,
              "y": () f32 | (nb,) f32 per-bucket bounds
-                  | {"y": (nb,), "anchor": (m,)} (anchored mode),
+                  | {"y": (nb,), "anchor": (m,) or (shard,)} (anchored
+                    mode; any leading singleton dims are flattened),
              "key": PRNG key, "tele": (>=TELE_WIDTH,) zeros}.
-    w_full: (dp * shard,) in cfg.gather_dtype.
+    w_full: (dp * shard,) in cfg.gather_dtype, pinned behind an
+    ``optimization_barrier`` (the serial and prefetched formulations must
+    hand downstream compute an identically-pinned operand — XLA CPU
+    FMA-contracts per fusion context, so an unpinned gather output can
+    drift by ulps between the two programs).
     """
     gdt = jnp.dtype(cfg.gather_dtype)
 
@@ -209,15 +297,38 @@ def make_fsdp_gather(cfg: FSDPConfig):
         # (outer, ..., inner)-major flat storage layout
         for ax in reversed(cfg.axes):
             w = jax.lax.all_gather(w, ax, axis=0, tiled=True)
-        return w
+        return jax.lax.optimization_barrier(w)
+
+    def _anchor_full(anchor, shard: int) -> Array:
+        """Full-length f32 anchor: gathered from (shard,) slices when the
+        anchor is stored sharded (the second tiled gather in the same
+        prefetch slot as the weight gather — f32, the anchor must be
+        exact), passed through when already replicated.  Pinned either way
+        so both layouts feed the butterfly an identical fusion boundary."""
+        a = anchor.reshape(-1).astype(jnp.float32)
+        if a.shape[0] == shard:
+            for ax in reversed(cfg.axes):
+                a = jax.lax.all_gather(a, ax, axis=0, tiled=True)
+        return jax.lax.optimization_barrier(a)
 
     @jax.custom_vjp
     def gather(bundle):
         return _gather_fwd_value(bundle["w"])
 
     def fwd(bundle):
-        res = (bundle["w"], bundle["y"], bundle["key"], bundle["tele"])
-        return _gather_fwd_value(bundle["w"]), res
+        w_full = _gather_fwd_value(bundle["w"])
+        _, anchor = _split_y(bundle["y"])
+        anchor_full = None
+        if cfg.anchored and anchor is not None:
+            anchor_full = _anchor_full(anchor, bundle["w"].shape[0])
+            if anchor_full.shape[0] != w_full.shape[0]:
+                raise ValueError(
+                    f"anchor length {anchor_full.shape[0]} matches neither "
+                    f"the shard ({bundle['w'].shape[0]}) nor the gathered "
+                    f"leaf ({w_full.shape[0]})")
+        res = (bundle["w"], bundle["y"], bundle["key"], bundle["tele"],
+               anchor_full)
+        return w_full, res
 
     def _bwd_rh(g, y_val, anchor, key):
         """Quantized reduce-scatter chain (rh per axis; butterfly when
@@ -292,9 +403,11 @@ def make_fsdp_gather(cfg: FSDPConfig):
         return g_shard, (max_dist, fails, y_next, dist_b, fails_b, None)
 
     def bwd(res, g):
-        w_shard, y_entry, key, tele_in = res
-        y_val, anchor = _split_y(y_entry)
-        g = g.astype(jnp.float32)
+        w_shard, y_entry, key, tele_in, anchor_full = res
+        y_val, anchor_stored = _split_y(y_entry)
+        # pin the cotangent: the serial and prefetched programs' RS chains
+        # must start from an identically-pinned boundary (bit-identity)
+        g = jax.lax.optimization_barrier(g.astype(jnp.float32))
         sizes = _dp_sizes(cfg.axes)
         dp = int(np.prod(sizes))
 
@@ -307,7 +420,16 @@ def make_fsdp_gather(cfg: FSDPConfig):
             tele = jnp.zeros_like(tele_in)
         else:
             g_shard, (max_dist, fails, y_next, dist_b, fails_b,
-                      anchor_next) = _bwd_rh(g, y_val, anchor, key)
+                      anchor_next) = _bwd_rh(g, y_val, anchor_full, key)
+            if anchor_next is not None and anchor_stored is not None:
+                stored_len = int(np.prod(np.shape(anchor_stored)))
+                if stored_len < anchor_next.shape[0]:
+                    # sharded anchor: the tele carries back only this
+                    # rank's slice of the butterfly's common output
+                    anchor_next = jax.lax.dynamic_slice(
+                        anchor_next,
+                        (_rank_linear(cfg.axes) * stored_len,),
+                        (stored_len,))
             tele = _pack_tele(tele_in, max_dist, fails, y_next, dist_b,
                               fails_b, anchor_next)
 
@@ -321,3 +443,26 @@ def make_fsdp_gather(cfg: FSDPConfig):
 
     gather.defvjp(fwd, bwd)
     return gather
+
+
+def make_fsdp_gather_split(cfg: FSDPConfig):
+    """``gather_async / gather_wait`` split of the monolithic gather.
+
+    Returns ``(gather_async, wait)``:
+
+      * ``gather_async(bundle) -> handle`` — *issues* the tiled all-gather
+        (and, sharded-anchored, the piggybacked anchor gather) and returns
+        the in-flight ``(m,)`` handle, pinned behind an
+        ``optimization_barrier``.  Its custom vjp is the *same* quantized
+        reduce-scatter as the monolithic gather — the two halves share
+        every internal, so split-vs-monolithic is bitwise identical.
+      * ``wait(handle) -> w_full`` — :func:`gather_wait`, the pinned
+        custom-vjp identity consuming the handle.
+
+    The caller (models/transformer.py's double-buffered scan) places the
+    issue in the *previous* loop iteration's carry and the wait at the
+    consumption point, so layer k+1's gather overlaps layer k's compute —
+    and, transposed, layer k's reduce-scatter overlaps layer k-1's
+    cotangent compute.
+    """
+    return make_fsdp_gather(cfg), gather_wait

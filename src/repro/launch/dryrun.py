@@ -33,7 +33,7 @@ import numpy as np
 from repro.configs import registry, shapes as SH
 from repro.launch.mesh import make_production_mesh
 from repro.launch import steps as ST
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import analyze, audit_overlap
 from repro.dist.collectives import QSyncConfig
 
 
@@ -116,6 +116,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     pre = analyze(pre_txt)            # loop-trip-expanded (hlo_analysis.py)
     post_txt = compiled.as_text()
     post = analyze(post_txt)
+    # overlap audit on the post-opt (scheduled) HLO: fraction of loop-
+    # collective wire bytes whose result feeds same-iteration compute
+    # (1.0 = fully serialized; the prefetched scan should sit well below)
+    overlap = audit_overlap(post_txt)
     coll = pre.coll
     if os.environ.get("DRYRUN_SAVE_HLO"):
         import zstandard as zstd
@@ -137,6 +141,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "traffic_bytes": post.traffic,      # trip-expanded HBM proxy (fused)
         "traffic_bytes_pre": pre.traffic,
         "collectives": coll,
+        "collective_exposed_fraction": overlap.exposed_fraction,
         "memory": {
             "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
             "output_bytes": getattr(mem, "output_size_in_bytes", 0),

@@ -120,6 +120,70 @@ def parse_computations(hlo: str):
     return comps, entry
 
 
+def operand_names(op: _Op) -> list:
+    """Operand names of `op`, robust to current XLA HLO text.
+
+    Operands carry inline types with commas/braces/parens inside them —
+    ``dot(f32[8,8]{1,0} %Arg_0.1, f32[8,8]{1,0} %Arg_1.2)`` or tuple
+    types ``while((s32[], f32[8,8]{1,0}) %tuple)`` — so the argument
+    list must be extracted with bracket-aware scanning, not split(",").
+    """
+    start = op.line.find(f"{op.kind}(")
+    if start < 0:
+        return []
+    i = start + len(op.kind)           # at the opening "("
+    depth = 0
+    j = i
+    for j in range(i, len(op.line)):
+        ch = op.line[j]
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                break
+    inner = op.line[i + 1:j]
+    out = []
+    cur: list[str] = []
+    depth = 0
+    for ch in inner + ",":
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            tok = "".join(cur).strip()
+            cur = []
+            if tok:
+                # drop the inline type prefix: the name is the last
+                # whitespace-separated token, with its % sigil stripped
+                out.append(tok.split()[-1].lstrip("%"))
+        else:
+            cur.append(ch)
+    return out
+
+
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}|"
+                       r"true_computation=%?([\w.\-]+)|"
+                       r"false_computation=%?([\w.\-]+)")
+
+
+def _called_comps(op: _Op) -> list:
+    """Names of every sub-computation an op references (fusion calls=,
+    while body=/condition=, reduce/map to_apply=, conditional branches)."""
+    names = []
+    for rx in (_CALLS, _BODY, _COND, _TOAPPLY):
+        m = rx.search(op.line)
+        if m:
+            names.append(m.group(1))
+    for m in _BRANCHES.finditer(op.line):
+        for g in m.groups():
+            if g:
+                names += [nm.lstrip("%") for nm in re.split(r"[,\s]+", g)
+                          if nm.lstrip("%")]
+    return names
+
+
 def analyze(hlo: str, default_trip: int = 1) -> Costs:
     comps, entry = parse_computations(hlo)
     memo: dict[str, Costs] = {}
@@ -133,48 +197,6 @@ def analyze(hlo: str, default_trip: int = 1) -> Costs:
         for op in comps.get(cond_name, []):
             consts += [int(c) for c in _CONST.findall(op.line)]
         return max(consts) if consts else default_trip
-
-    def operand_names(op: _Op) -> list:
-        """Operand names of `op`, robust to current XLA HLO text.
-
-        Operands carry inline types with commas/braces/parens inside them —
-        ``dot(f32[8,8]{1,0} %Arg_0.1, f32[8,8]{1,0} %Arg_1.2)`` or tuple
-        types ``while((s32[], f32[8,8]{1,0}) %tuple)`` — so the argument
-        list must be extracted with bracket-aware scanning, not split(",").
-        """
-        start = op.line.find(f"{op.kind}(")
-        if start < 0:
-            return []
-        i = start + len(op.kind)           # at the opening "("
-        depth = 0
-        j = i
-        for j in range(i, len(op.line)):
-            ch = op.line[j]
-            if ch in "([{":
-                depth += 1
-            elif ch in ")]}":
-                depth -= 1
-                if depth == 0:
-                    break
-        inner = op.line[i + 1:j]
-        out = []
-        cur: list[str] = []
-        depth = 0
-        for ch in inner + ",":
-            if ch in "([{":
-                depth += 1
-            elif ch in ")]}":
-                depth -= 1
-            if ch == "," and depth == 0:
-                tok = "".join(cur).strip()
-                cur = []
-                if tok:
-                    # drop the inline type prefix: the name is the last
-                    # whitespace-separated token, with its % sigil stripped
-                    out.append(tok.split()[-1].lstrip("%"))
-            else:
-                cur.append(ch)
-        return out
 
     def eff_bytes(type_str: str, trip) -> float:
         """Bytes of one access.  Inside a while body with trip count t, a
@@ -325,3 +347,203 @@ def analyze(hlo: str, default_trip: int = 1) -> Costs:
     if entry is None:
         entry = max(comps, key=lambda n: len(comps[n])) if comps else ""
     return cost_of(entry)
+
+
+# ---------------------------------------------------------------------------
+# Collective/compute overlap auditor (the FSDP prefetch proof)
+# ---------------------------------------------------------------------------
+
+_COMPUTE_KINDS = ("dot", "convolution")
+
+
+@dataclasses.dataclass
+class OverlapAudit:
+    """Per-while-body report of whether loop collectives are *exposed*
+    (their result feeds compute in the same iteration — latency on the
+    critical path) or *overlapped* (the result only escapes into the loop
+    carry, so the next iteration consumes it and the collective runs
+    concurrently with this iteration's dominant compute).
+
+    ``bodies``: one dict per audited while body — {"body", "trip_weight",
+    "total_bytes", "exposed_bytes", "collectives": [{"op", "kind", "bytes",
+    "exposed"}]}.  Bytes use the same ring wire model as :func:`analyze`
+    and are trip-count weighted.
+    """
+    bodies: list = dataclasses.field(default_factory=list)
+    total_bytes: float = 0.0
+    exposed_bytes: float = 0.0
+
+    @property
+    def exposed_fraction(self) -> float:
+        """Fraction of loop-collective wire bytes on the critical path
+        (1.0 = fully serialized, as the serial layer scan; the prefetched
+        double-buffered scan must come out strictly lower).  0.0 when no
+        while body contains collectives."""
+        return (self.exposed_bytes / self.total_bytes
+                if self.total_bytes else 0.0)
+
+
+def audit_overlap(hlo: str, default_trip: int = 1) -> OverlapAudit:
+    """Walk every while body of the lowered HLO and classify each loop
+    collective as exposed vs overlapped (see :class:`OverlapAudit`).
+
+    A collective is *overlapped* when every consumer chain of its result
+    reaches only the body root (the loop carry) — possibly escaping
+    through sub-computations (the prefetched scan issues next-layer
+    gathers inside a ``conditional`` branch, whose root value flows to
+    the caller).  It is *exposed* as soon as any chain reaches a compute
+    op: a dot / convolution / custom-call, or a call-like op (fusion,
+    call, nested while, conditional, reduce, ...) whose sub-computation
+    transitively contains one.
+    """
+    comps, entry = parse_computations(hlo)
+    symtab = {cn: {op.name: op.type_str for op in ops}
+              for cn, ops in comps.items()}
+    opmap = {cn: {op.name: op for op in ops} for cn, ops in comps.items()}
+
+    roots: dict = {}
+    for cname, ops in comps.items():
+        for op in ops:
+            if "ROOT" in op.line:
+                roots[cname] = op.name
+
+    _consumers: dict = {}
+
+    def consumers_of(cname: str) -> dict:
+        if cname not in _consumers:
+            mp: dict = {}
+            for op in comps.get(cname, []):
+                for nm in operand_names(op):
+                    mp.setdefault(nm, []).append(op)
+            _consumers[cname] = mp
+        return _consumers[cname]
+
+    hc_memo: dict = {}
+
+    def comp_has_compute(cname: str, stack=()) -> bool:
+        if cname in hc_memo:
+            return hc_memo[cname]
+        if cname in stack or cname not in comps:
+            return False
+        out = any(is_compute(op, stack + (cname,)) for op in comps[cname])
+        hc_memo[cname] = out
+        return out
+
+    def is_compute(op: _Op, stack=()) -> bool:
+        if op.kind in _COMPUTE_KINDS or op.kind.startswith("custom-call"):
+            return True
+        return any(comp_has_compute(c, stack) for c in _called_comps(op)
+                   if c in comps)
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for op in comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST.findall(op.line)]
+        return max(consts) if consts else default_trip
+
+    def coll_wire(op: _Op, cname: str) -> float:
+        # same ring wire model as analyze(): all-gather ~ output bytes,
+        # all-reduce ~ 2x input, everything else ~ input bytes
+        base = next(ck for ck in COLL_KINDS if op.kind.startswith(ck))
+        syms = symtab.get(cname, {})
+        inb = sum(_type_bytes(syms[nm]) for nm in operand_names(op)
+                  if nm in syms)
+        outb = _type_bytes(op.type_str)
+        return float(outb if base == "all-gather"
+                     else 2 * inb if base == "all-reduce" else inb)
+
+    def collect_colls(cname: str, chain, seen):
+        """(collective op, containing comp, call chain) triples reachable
+        from a while body without crossing into nested whiles (those are
+        audited as their own bodies)."""
+        out = []
+        if cname in seen:
+            return out
+        for op in comps.get(cname, []):
+            k = op.kind
+            if any(k.startswith(ck) for ck in COLL_KINDS):
+                if not k.endswith("-done"):     # count async pairs at -start
+                    out.append((op, cname, chain))
+            elif k == "while":
+                continue
+            else:
+                for c in _called_comps(op):
+                    if c in comps:
+                        out += collect_colls(c, chain + ((cname, op),),
+                                             seen | {cname})
+        return out
+
+    def is_exposed(coll_op: _Op, cname: str, chain) -> bool:
+        """BFS over consumer edges from the collective's result.  Reaching
+        compute => exposed; reaching the body root (depth 0) => that chain
+        is overlapped (value parked in the loop carry); reaching a
+        sub-computation's root resumes from the calling op's consumers."""
+        comp_at = [c for c, _ in chain] + [cname]
+        call_at = [op for _, op in chain]
+        frontier = [(len(comp_at) - 1, u.name)
+                    for u in consumers_of(cname).get(coll_op.name, [])]
+        visited = set()
+        while frontier:
+            d, nm = frontier.pop()
+            if (d, nm) in visited:
+                continue
+            visited.add((d, nm))
+            comp = comp_at[d]
+            op = opmap.get(comp, {}).get(nm)
+            if op is None:
+                continue
+            if is_compute(op):
+                return True
+            frontier += [(d, u.name)
+                         for u in consumers_of(comp).get(nm, [])]
+            if roots.get(comp) == nm and d > 0:
+                # escaped the sub-computation: resume from the call site
+                # (skip the compute check on the call op itself — the
+                # collective lives inside it)
+                frontier += [(d - 1, u.name)
+                             for u in consumers_of(comp_at[d - 1]).get(
+                                 call_at[d - 1].name, [])]
+        return False
+
+    audit = OverlapAudit()
+    seen_bodies = set()
+
+    def walk(cname: str, mult: float, stack=()):
+        if cname in stack:
+            return
+        for op in comps.get(cname, []):
+            if op.kind == "while":
+                bm, cm_ = _BODY.search(op.line), _COND.search(op.line)
+                if not bm:
+                    continue
+                body = bm.group(1)
+                t = max(trip_count(cm_.group(1)) if cm_ else default_trip, 1)
+                if body not in seen_bodies:
+                    seen_bodies.add(body)
+                    rec = {"body": body, "trip_weight": mult * t,
+                           "total_bytes": 0.0, "exposed_bytes": 0.0,
+                           "collectives": []}
+                    for cop, ccomp, chain in collect_colls(body, (),
+                                                           frozenset()):
+                        b = coll_wire(cop, ccomp) * mult * t
+                        ex = is_exposed(cop, ccomp, chain)
+                        rec["collectives"].append(
+                            {"op": cop.name, "kind": cop.kind,
+                             "bytes": b, "exposed": ex})
+                        rec["total_bytes"] += b
+                        if ex:
+                            rec["exposed_bytes"] += b
+                    audit.bodies.append(rec)
+                    audit.total_bytes += rec["total_bytes"]
+                    audit.exposed_bytes += rec["exposed_bytes"]
+                walk(body, mult * t, stack + (cname,))
+            else:
+                for c in _called_comps(op):
+                    if c in comps:
+                        walk(c, mult, stack + (cname,))
+
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n])) if comps else ""
+    if entry:
+        walk(entry, 1.0)
+    return audit

@@ -18,7 +18,8 @@ from repro.models import layers as LY
 from repro.models.sharding import (LeafMeta, ShardCtx, gather_param,
                                    make_gathers, psum_tp, tp_index)
 from repro.models.transformer import (_attn_metas, _mlp_metas, _gather_tree,
-                                      _leaf_key, _ce_sum, tele_zeros, y_init)
+                                      _leaf_key, _ce_sum, _prefetch_layer_scan,
+                                      tele_zeros, y_init)
 
 Array = jax.Array
 
@@ -80,13 +81,20 @@ def encdec_param_shapes(cfg: ModelConfig, ctx: ShardCtx) -> dict:
 
 def encdec_y_init(cfg: ModelConfig, ctx: ShardCtx, value: float = 1.0) -> dict:
     """Per-leaf, per-bucket initial distance bounds (rotated-space-seeded
-    like transformer.y_init; see repro.models.sharding.leaf_y0/leaf_nb)."""
-    from repro.models.sharding import leaf_nb, leaf_y0
+    like transformer.y_init; see repro.models.sharding.leaf_y0/leaf_nb).
+    With ``ctx.anchor_grads`` each leaf carries ``{"y", "anchor"}`` with the
+    anchor laid out per :func:`repro.models.sharding.anchor_shape` (sharded
+    ZeRO-3 storage by default, legacy replicated ``(m,)`` otherwise)."""
+    from repro.models.sharding import anchor_shape, leaf_nb, leaf_y0
     metas = encdec_metas(cfg, ctx)
 
     def leaf(m, L):
         shape = (L, leaf_nb(m, ctx)) if L else (leaf_nb(m, ctx),)
-        return jnp.full(shape, leaf_y0(m, ctx, value), jnp.float32)
+        yv = jnp.full(shape, leaf_y0(m, ctx, value), jnp.float32)
+        if not ctx.anchor_grads:
+            return yv
+        return {"y": yv,
+                "anchor": jnp.zeros(anchor_shape(m, ctx, L), jnp.float32)}
 
     return {
         "enc": {k: leaf(m, cfg.enc_layers) for k, m in metas["enc"].items()},
@@ -127,8 +135,10 @@ def cross_attention(xg: Array, mem_k: Array, mem_v: Array, w: dict,
 
 def make_encdec_loss_fn(cfg: ModelConfig, ctx: ShardCtx):
     """batch: {"frames": (B, Se, D) f32, "tokens"/"targets"/"mask": (B, Sd)}."""
+    from repro.models.sharding import make_split_gathers
     metas = encdec_metas(cfg, ctx)
     gathers = make_gathers(ctx)
+    split = make_split_gathers(ctx) if ctx.prefetch else None
 
     def loss_fn(params, tele, batch, key, y):
         frames = batch["frames"].astype(jnp.bfloat16)
@@ -141,22 +151,33 @@ def make_encdec_loss_fn(cfg: ModelConfig, ctx: ShardCtx):
         x = frames
         pos_e = jnp.arange(Se, dtype=jnp.int32)
 
-        def ebody(carry, xs):
-            xc = carry
-            lp, ly, lt, idx = xs
-            kl = jax.random.fold_in(key, idx + 1)
-            wts = _gather_tree(lp, metas["enc"], ctx, ly, kl, lt, gathers)
+        def enc_apply(xc, wts):
             a = LY.rms_norm(xc, wts["ln1"], cfg.norm_eps)
             att = LY.attention(a, wts, cfg, ctx, positions=pos_e, causal=False)
             xc = xc + LY.attn_exit(att, cfg, ctx)
             m = LY.rms_norm(xc, wts["ln2"], cfg.norm_eps)
-            xc = xc + psum_tp(LY.mlp(m, wts, cfg), ctx)
-            return xc, None
+            return xc + psum_tp(LY.mlp(m, wts, cfg), ctx)
 
-        ebody = jax.checkpoint(ebody) if ctx.remat else ebody
-        xs_e = (params["enc"], y["enc"], tele["enc"],
-                jnp.arange(cfg.enc_layers, dtype=jnp.int32))
-        x, _ = jax.lax.scan(ebody, x, xs_e)
+        if ctx.prefetch:
+            x, _ = _prefetch_layer_scan(
+                x, params["enc"], metas["enc"], ctx, y["enc"], tele["enc"],
+                cfg.enc_layers, split,
+                lambda i: jax.random.fold_in(key, i + 1),
+                lambda xc, wts: (enc_apply(xc, wts),
+                                 jnp.zeros((), jnp.float32)),
+                ctx.remat)
+        else:
+            def ebody(carry, xs):
+                xc = carry
+                lp, ly, lt, idx = xs
+                kl = jax.random.fold_in(key, idx + 1)
+                wts = _gather_tree(lp, metas["enc"], ctx, ly, kl, lt, gathers)
+                return enc_apply(xc, wts), None
+
+            ebody = jax.checkpoint(ebody) if ctx.remat else ebody
+            xs_e = (params["enc"], y["enc"], tele["enc"],
+                    jnp.arange(cfg.enc_layers, dtype=jnp.int32))
+            x, _ = jax.lax.scan(ebody, x, xs_e)
 
         en = gather_param(params["top"]["enc_norm"], metas["top"]["enc_norm"],
                           ctx, y["top"]["enc_norm"], _leaf_key(kt, "en"),
@@ -170,11 +191,7 @@ def make_encdec_loss_fn(cfg: ModelConfig, ctx: ShardCtx):
         h = LY.vp_embed(tokens, emb, ctx)
         pos_d = jnp.arange(Sd, dtype=jnp.int32)
 
-        def dbody(carry, xs):
-            hc = carry
-            lp, ly, lt, idx = xs
-            kl = jax.random.fold_in(key, 1000 + idx)
-            wts = _gather_tree(lp, metas["dec"], ctx, ly, kl, lt, gathers)
+        def dec_apply(hc, wts):
             a = LY.rms_norm(hc, wts["ln1"], cfg.norm_eps)
             att = LY.attention(a, wts, cfg, ctx, positions=pos_d, causal=True)
             hc = hc + LY.attn_exit(att, cfg, ctx)
@@ -185,13 +202,28 @@ def make_encdec_loss_fn(cfg: ModelConfig, ctx: ShardCtx):
             xa = cross_attention(c, mk, mv, wts, cfg, ctx)
             hc = hc + LY.attn_exit(xa, cfg, ctx)
             m = LY.rms_norm(hc, wts["ln3"], cfg.norm_eps)
-            hc = hc + psum_tp(LY.mlp(m, wts, cfg), ctx)
-            return hc, None
+            return hc + psum_tp(LY.mlp(m, wts, cfg), ctx)
 
-        dbody = jax.checkpoint(dbody) if ctx.remat else dbody
-        xs_d = (params["dec"], y["dec"], tele["dec"],
-                jnp.arange(cfg.n_layers, dtype=jnp.int32))
-        h, _ = jax.lax.scan(dbody, h, xs_d)
+        if ctx.prefetch:
+            h, _ = _prefetch_layer_scan(
+                h, params["dec"], metas["dec"], ctx, y["dec"], tele["dec"],
+                cfg.n_layers, split,
+                lambda i: jax.random.fold_in(key, 1000 + i),
+                lambda hc, wts: (dec_apply(hc, wts),
+                                 jnp.zeros((), jnp.float32)),
+                ctx.remat)
+        else:
+            def dbody(carry, xs):
+                hc = carry
+                lp, ly, lt, idx = xs
+                kl = jax.random.fold_in(key, 1000 + idx)
+                wts = _gather_tree(lp, metas["dec"], ctx, ly, kl, lt, gathers)
+                return dec_apply(hc, wts), None
+
+            dbody = jax.checkpoint(dbody) if ctx.remat else dbody
+            xs_d = (params["dec"], y["dec"], tele["dec"],
+                    jnp.arange(cfg.n_layers, dtype=jnp.int32))
+            h, _ = jax.lax.scan(dbody, h, xs_d)
 
         fn = gather_param(params["top"]["final_norm"], metas["top"]["final_norm"],
                           ctx, y["top"]["final_norm"], _leaf_key(kt, "fn"),

@@ -61,6 +61,14 @@ class ShardCtx:
     anchor_grads: bool = False        # anchored DP sync: encode g - anchor with
                                       # anchor = previous step's decoded mean
                                       # (butterfly topology; requires "lq")
+    anchor_sharded: bool = True       # anchored: store anchors in ZeRO-3
+                                      # storage layout (tp, dp, shard) beside
+                                      # w; fwd rebuilds them via a piggybacked
+                                      # f32 all-gather.  False = legacy
+                                      # replicated (m,) anchors.
+    prefetch: bool = False            # double-buffer the layer scan: issue
+                                      # layer k+1's FSDP gather while layer k
+                                      # computes (bit-identical to serial)
 
     def __post_init__(self):
         if self.anchor_grads and self.grad_sync != "lq":
@@ -73,7 +81,9 @@ class ShardCtx:
     def fsdp_config(self) -> F.FSDPConfig:
         return F.FSDPConfig(axes=self.dp_axes, qcfg=self.qcfg,
                             sync=self.grad_sync, gather_dtype=self.gather_dtype,
-                            anchored=self.anchor_grads)
+                            anchored=self.anchor_grads,
+                            anchor_sharded=self.anchor_sharded,
+                            prefetch=self.prefetch)
 
 
 # ---------------------------------------------------------------------------
@@ -131,10 +141,45 @@ def leaf_nb(meta: LeafMeta, ctx: ShardCtx) -> int:
     return F.leaf_nb(leaf_gathered_len(meta, ctx), ctx.dp, ctx.qcfg)
 
 
+def leaf_anchor_len(meta: LeafMeta, ctx: ShardCtx) -> int:
+    """Anchor length one leaf's y-state stores (and its tele cotangent
+    carries back): the rank's shard when the anchor is sharded with the
+    weights, the full gathered length for legacy replicated anchors, 0
+    when unanchored."""
+    if not ctx.anchor_grads:
+        return 0
+    return (shard_len(meta, ctx) if ctx.anchor_sharded
+            else leaf_gathered_len(meta, ctx))
+
+
 def leaf_tele_width(meta: LeafMeta, ctx: ShardCtx) -> int:
     """Tele-leaf length: scalars + per-bucket maps (+ anchor when anchored)."""
-    return F.tele_width(leaf_nb(meta, ctx), leaf_gathered_len(meta, ctx),
+    return F.tele_width(leaf_nb(meta, ctx), leaf_anchor_len(meta, ctx),
                         ctx.anchor_grads)
+
+
+def anchor_shape(meta: LeafMeta, ctx: ShardCtx, n_layers: int = 0
+                 ) -> tuple[int, ...]:
+    """Shape of one leaf's anchor state.  Sharded (default): the ZeRO-3
+    storage layout ``(tp, dp, shard_len)`` — the anchor lives beside ``w``
+    with the same in_spec (:func:`anchor_spec`), each (tp, dp) cell holding
+    its own slice of that cell's gathered-leaf mean.  Legacy replicated:
+    a single ``(m,)`` f32 vector.  ``n_layers > 0`` prepends the scan dim."""
+    if ctx.anchor_sharded:
+        s: tuple[int, ...] = (ctx.tp, ctx.dp, shard_len(meta, ctx))
+    else:
+        s = (leaf_gathered_len(meta, ctx),)
+    return ((n_layers,) + s) if n_layers else s
+
+
+def anchor_spec(meta: LeafMeta, ctx: ShardCtx, scanned: bool):
+    """PartitionSpec of one leaf's anchor state (see :func:`anchor_shape`)."""
+    from jax.sharding import PartitionSpec as P
+    if not ctx.anchor_sharded:
+        return P()
+    s = (ctx.tp_axis,
+         ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0], None)
+    return P(*(((None,) + s) if scanned else s))
 
 
 def leaf_y0(meta: LeafMeta, ctx: ShardCtx, value: float) -> float:
@@ -369,6 +414,48 @@ def gather_param(storage: Array, meta: LeafMeta, ctx: ShardCtx,
     n = meta.numel()
     w = w_full[:n].reshape(meta.local_shape)
     return w.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Split (prefetch-pipelined) gather: issue in iteration k-1, consume in k
+# ---------------------------------------------------------------------------
+
+def make_split_gathers(ctx: ShardCtx):
+    """``(gather_async, wait)`` pair for the double-buffered layer scan
+    (``ctx.prefetch``; see dist/fsdp.make_fsdp_gather_split).  Use with
+    :func:`gather_param_async` / :func:`gather_param_wait`."""
+    return F.make_fsdp_gather_split(ctx.fsdp_config())
+
+
+def gather_param_async(storage: Array, meta: LeafMeta, ctx: ShardCtx,
+                       y: Array, key: Array, tele: Array, split) -> Array:
+    """Issue one leaf's FSDP all-gather; returns the in-flight ``(m,)``
+    handle (pinned — carry it through the scan and consume with
+    :func:`gather_param_wait`).  Same bundle contract as
+    :func:`gather_param`."""
+    gather_async, _ = split
+    bundle = {"w": storage.reshape(-1), "y": y, "key": key, "tele": tele}
+    return gather_async(bundle)
+
+
+def gather_param_wait(handle: Array, meta: LeafMeta, ctx: ShardCtx, split,
+                      compute_dtype=jnp.bfloat16) -> Array:
+    """Consume a prefetched handle -> full TP-local weight.
+
+    The TP psum-grad wrapper attaches here, at the consumption point, so
+    the backward runs slice-transpose -> tp psum -> (through the carry)
+    the issued gather's DP reduce-scatter — the same collective order as
+    the monolithic :func:`gather_param`."""
+    _, wait = split
+    w_full = wait(handle)
+    if meta.tp_replicated:
+        w_full = _tp_psum_grad(w_full, ctx, None)
+    elif meta.tp_repl > 1 and ctx.tp > 1:
+        groups = tuple(tuple(s * meta.tp_repl + j for j in range(meta.tp_repl))
+                       for s in range(ctx.tp // meta.tp_repl))
+        w_full = _tp_psum_grad(w_full, ctx, groups)
+    n = meta.numel()
+    return w_full[:n].reshape(meta.local_shape).astype(compute_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -24,8 +24,10 @@ from repro.models import moe as MOE
 from repro.models import ssm as SSM
 from repro.models import rglru as RG
 from repro.models.sharding import (LeafMeta, ShardCtx, gather_param,
-                                   make_gathers, init_leaf, tp_index,
-                                   psum_tp, all_gather_tp)
+                                   gather_param_async, gather_param_wait,
+                                   make_gathers, make_split_gathers,
+                                   init_leaf, tp_index, psum_tp,
+                                   all_gather_tp)
 
 Array = jax.Array
 
@@ -224,10 +226,13 @@ def y_init(cfg: ModelConfig, ctx: ShardCtx, value: float = 1.0) -> dict:
     rotated-space bound instead of the raw-space guess — see
     :func:`repro.models.sharding.leaf_y0`.  With ``ctx.anchor_grads`` each
     leaf carries ``{"y": ..., "anchor": ...}`` — the anchor (the previous
-    step's decoded gradient mean, replicated) starts at zero, which is
-    bit-identical to the unanchored path on step 0.
+    step's decoded gradient mean) starts at zero, which is bit-identical to
+    the unanchored path on step 0.  Its layout follows
+    :func:`repro.models.sharding.anchor_shape`: ZeRO-3 storage
+    ``(tp, dp, shard)`` beside the weights when ``ctx.anchor_sharded``
+    (rebuilt by the forward gather), legacy replicated ``(m,)`` otherwise.
     """
-    from repro.models.sharding import leaf_gathered_len, leaf_nb, leaf_y0
+    from repro.models.sharding import anchor_shape, leaf_nb, leaf_y0
     metas = all_metas(cfg, ctx)
     L = n_scan_steps(cfg)
 
@@ -237,8 +242,7 @@ def y_init(cfg: ModelConfig, ctx: ShardCtx, value: float = 1.0) -> dict:
         y = jnp.full(shape, leaf_y0(meta, ctx, value), jnp.float32)
         if not ctx.anchor_grads:
             return y
-        m = leaf_gathered_len(meta, ctx)
-        a_shape = (L, m) if scanned else (m,)
+        a_shape = anchor_shape(meta, ctx, L if scanned else 0)
         return {"y": y, "anchor": jnp.zeros(a_shape, jnp.float32)}
 
     return {
@@ -350,6 +354,50 @@ def _gather_tree(params: dict, metas: dict, ctx: ShardCtx, y: dict, key: Array,
     return out
 
 
+def _prefetch_layer_scan(x0: Array, params_l: dict, metas_l: dict,
+                         ctx: ShardCtx, y_l, tele_l, L: int, split,
+                         key_fn, apply_fn, remat: bool):
+    """Double-buffered layer scan (``ctx.prefetch``): layer i+1's FSDP
+    gather is *issued* while layer i computes.
+
+    The carry holds the in-flight handle dict for the layer about to run;
+    the body first issues layer i+1 (``lax.cond``-gated off on the last
+    iteration), then consumes the carried handles through the pinned
+    :func:`repro.models.sharding.gather_param_wait` and runs
+    ``apply_fn(x, wts) -> (x', aux)``.  ``key_fn(i)`` must reproduce the
+    serial body's per-layer key fold exactly — the split gather shares
+    every internal with the monolithic one, so with matching keys the scan
+    is bit-identical to the serial formulation (values and grads).
+    """
+    def issue(i):
+        sl = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+        lp = jax.tree.map(sl, params_l)
+        ly = jax.tree.map(sl, y_l)
+        lt = jax.tree.map(sl, tele_l)
+        kl = key_fn(i)
+        return {name: gather_param_async(lp[name], metas_l[name], ctx,
+                                         ly[name], _leaf_key(kl, name),
+                                         lt[name], split)
+                for name in lp}
+
+    def body(carry, idx):
+        xcur, auxsum, bufs = carry
+        nxt = jax.lax.cond(idx < L - 1,
+                           lambda i: issue(i + 1),
+                           lambda i: jax.tree.map(jnp.zeros_like, bufs),
+                           idx)
+        wts = {name: gather_param_wait(bufs[name], metas_l[name], ctx, split)
+               for name in bufs}
+        xnew, aux = apply_fn(xcur, wts)
+        return (xnew, auxsum + aux, nxt), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (xf, aux, _), _ = jax.lax.scan(
+        body_fn, (x0, jnp.zeros((), jnp.float32), issue(0)),
+        jnp.arange(L, dtype=jnp.int32))
+    return xf, aux
+
+
 def make_loss_fn(cfg: ModelConfig, ctx: ShardCtx) -> Callable:
     """Returns loss_fn(params, tele, batch, key, y) -> (loss, metrics).
 
@@ -360,6 +408,7 @@ def make_loss_fn(cfg: ModelConfig, ctx: ShardCtx) -> Callable:
     """
     metas = all_metas(cfg, ctx)
     gathers = make_gathers(ctx)
+    split = make_split_gathers(ctx) if ctx.prefetch else None
     L = n_scan_steps(cfg)
 
     def loss_fn(params, tele, batch, key, y):
@@ -380,27 +429,37 @@ def make_loss_fn(cfg: ModelConfig, ctx: ShardCtx) -> Callable:
             s_loc = S_full // ctx.tp
             x = jax.lax.dynamic_slice_in_dim(x, tp_index(ctx) * s_loc, s_loc, 1)
 
-        def body(carry, xs):
-            xcur, auxsum = carry
-            lp, ly, lt, idx = xs
-            kl = jax.random.fold_in(key, idx + 1)
-            wts = _gather_tree(lp, metas["layers"], ctx, ly, kl, lt, gathers)
+        def apply_block(xcur, wts):
             if cfg.family == "ssm":
-                xnew = ssm_block(xcur, wts, cfg, ctx)
-                aux = jnp.zeros((), jnp.float32)
-            elif cfg.family == "hybrid":
-                xnew = hybrid_unit(xcur, wts, cfg, ctx, positions)
-                aux = jnp.zeros((), jnp.float32)
-            else:
-                xnew, aux = dense_block(xcur, wts, cfg, ctx, positions)
-            return (xnew, auxsum + aux), None
+                return ssm_block(xcur, wts, cfg, ctx), jnp.zeros((), jnp.float32)
+            if cfg.family == "hybrid":
+                return (hybrid_unit(xcur, wts, cfg, ctx, positions),
+                        jnp.zeros((), jnp.float32))
+            return dense_block(xcur, wts, cfg, ctx, positions)
 
-        body_fn = jax.checkpoint(body) if ctx.remat else body
-        xs = (params["layers"],
-              y["layers"],
-              tele["layers"],
-              jnp.arange(L, dtype=jnp.int32))
-        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), xs)
+        if ctx.prefetch:
+            x, aux = _prefetch_layer_scan(
+                x, params["layers"], metas["layers"], ctx, y["layers"],
+                tele["layers"], L, split,
+                lambda i: jax.random.fold_in(key, i + 1), apply_block,
+                ctx.remat)
+        else:
+            def body(carry, xs):
+                xcur, auxsum = carry
+                lp, ly, lt, idx = xs
+                kl = jax.random.fold_in(key, idx + 1)
+                wts = _gather_tree(lp, metas["layers"], ctx, ly, kl, lt,
+                                   gathers)
+                xnew, aux = apply_block(xcur, wts)
+                return (xnew, auxsum + aux), None
+
+            body_fn = jax.checkpoint(body) if ctx.remat else body
+            xs = (params["layers"],
+                  y["layers"],
+                  tele["layers"],
+                  jnp.arange(L, dtype=jnp.int32))
+            (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                       xs)
 
         # hybrid tail layers (unscanned)
         if cfg.family == "hybrid" and cfg.n_layers % 3:

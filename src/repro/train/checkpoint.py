@@ -89,6 +89,41 @@ def load(ckpt_dir: str, step: Optional[int] = None) -> tuple[dict, dict]:
 
 
 # ---------------------------------------------------------------------------
+# y-state migration: replicated -> sharded anchor leaves
+# ---------------------------------------------------------------------------
+
+def reshard_anchor(arr, target_shape: tuple) -> Any:
+    """Migrate one anchor leaf from a pre-sharding checkpoint.
+
+    Old checkpoints hold replicated anchors of shape ``(L?, m)``; the
+    sharded layout stores ``(L?, tp, dp, shard)`` with ``m = dp * shard``
+    (models/sharding.anchor_shape).  When the shapes correspond, reshape
+    the replicated vector into its dp x shard slices and broadcast over
+    tp — the values are identical, only the layout changes.  Anything else
+    (already matching, or a genuinely different mesh) passes through
+    untouched and falls into the trainer's elastic fresh-init fallback.
+    """
+    a = np.asarray(arr)
+    t = tuple(target_shape)
+    if (len(t) >= 3 and a.ndim == len(t) - 2
+            and a.shape[:-1] == t[:-3] and a.shape[-1] == t[-2] * t[-1]):
+        sliced = a.reshape(a.shape[:-1] + (1, t[-2], t[-1]))
+        return np.broadcast_to(sliced, t).copy()
+    return arr
+
+
+def reshard_y(tree, target):
+    """Recursively migrate a restored y-state tree toward ``target``'s
+    layout (anchor leaves only; everything else passes through)."""
+    if isinstance(tree, dict) and isinstance(target, dict):
+        return {k: (reshard_anchor(tree[k], np.shape(target[k]))
+                    if k == "anchor" and not isinstance(target[k], dict)
+                    else reshard_y(tree[k], target[k]))
+                for k in tree if k in target}
+    return tree
+
+
+# ---------------------------------------------------------------------------
 # storage <-> logical round trips for whole parameter trees
 # ---------------------------------------------------------------------------
 

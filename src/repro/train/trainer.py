@@ -40,7 +40,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import qstate as QS
 from repro.dist import fsdp as F
 from repro.models.config import ModelConfig
-from repro.models.sharding import ShardCtx, shard_len, storage_spec
+from repro.models.sharding import (ShardCtx, anchor_spec, shard_len,
+                                   storage_spec)
 from repro.models import transformer as T
 from repro.train import optim as O
 from repro.train import data as D
@@ -77,8 +78,11 @@ def _y_update(y, tele: Array, tc: TrainConfig):
         nb = y["y"].shape[-1]
         m = y["anchor"].shape[-1]
         lo = F.TELE_WIDTH + 2 * nb
+        # the tele slice is the rank's anchor row; reshape restores the
+        # stored layout (sharded anchors live as (L?, 1, 1, shard) local
+        # views of the ZeRO-3 storage array — legacy (L?, m) is a no-op)
         return {"y": _y_update(y["y"], tele, tc),
-                "anchor": tele[..., lo:lo + m]}
+                "anchor": tele[..., lo:lo + m].reshape(y["anchor"].shape)}
     if y.ndim == tele.ndim and \
             tele.shape[-1] >= F.TELE_WIDTH + 2 * y.shape[-1]:
         nb = y.shape[-1]
@@ -112,7 +116,18 @@ def make_train_step(cfg: ModelConfig, ctx: ShardCtx, mesh, opt_cfg: O.OptConfig,
     bspec_leaf = P(dpa)
     opt_spec = ({"m": pspec, "v": pspec} if opt_cfg.name == "adamw"
                 else {"m": pspec})
-    state_spec = {"params": pspec, "opt": opt_spec, "y": P(), "step": P(),
+
+    # anchored leaves are {"y", "anchor"} dicts whose anchor may live in
+    # ZeRO-3 storage layout (sharded over tp x dp like the weights); the y
+    # spec is then a per-leaf tree instead of one replicated P()
+    def _y_leaf_spec(meta):
+        if not ctx.anchor_grads:
+            return P()
+        return {"y": P(), "anchor": anchor_spec(meta, ctx, meta.scanned)}
+
+    y_spec = {"layers": {k: _y_leaf_spec(m) for k, m in metas["layers"].items()},
+              "top": {k: _y_leaf_spec(m) for k, m in metas["top"].items()}}
+    state_spec = {"params": pspec, "opt": opt_spec, "y": y_spec, "step": P(),
                   "key": P()}
 
     def batch_spec(batch):
@@ -227,6 +242,16 @@ class Trainer:
               f"{self.wire_bytes_step / 2**20:.2f} MiB/step per rank "
               f"({self.ctx.fsdp_config().sync}, "
               f"packed={self.ctx.qcfg.packed})", flush=True)
+        # anchor-state + prefetch banner, from the one wire_accounting
+        # definition (core/wire_accounting via fsdp.anchor_bytes_step):
+        # sharded anchors materialize zero bytes beyond the rank's shard
+        cur_a = self._anchor_bytes_step(self.ctx.anchor_sharded)
+        repl_a = self._anchor_bytes_step(False)
+        print(f"[train] anchor state: {cur_a / 2**20:.2f} MiB/step per rank "
+              f"(anchored={self.ctx.anchor_grads}, "
+              f"sharded={self.ctx.anchor_sharded}; replicated equivalent "
+              f"{repl_a / 2**20:.2f} MiB) "
+              f"prefetch={'on' if self.ctx.prefetch else 'off'}", flush=True)
 
     def _wire_bytes_step(self) -> int:
         """Static per-rank wire bytes of one step's DP gradient sync
@@ -241,6 +266,24 @@ class Trainer:
         n_mb = max(self.tc.microbatch, 1)
         layers = T.n_scan_steps(self.cfg) * per_group["layers"]
         return n_mb * (layers + per_group["top"])
+
+    def _anchor_bytes_step(self, sharded: bool) -> int:
+        """Static per-rank anchor-state bytes one step materializes beyond
+        each rank's own shard (0 unanchored; 0 sharded; the legacy
+        replicated layout re-materializes full (m,) anchors —
+        fsdp.anchor_bytes_step / core.wire_accounting.anchor_state_bytes)."""
+        if not self.ctx.anchor_grads:
+            return 0
+        fcfg = dataclasses.replace(self.ctx.fsdp_config(),
+                                   anchor_sharded=sharded)
+        sizes = [int(self.mesh.shape[ax]) for ax in self.ctx.dp_axes]
+        per_group = {
+            grp: sum(F.anchor_bytes_step(shard_len(m, self.ctx) * self.ctx.dp,
+                                         sizes, fcfg)
+                     for m in self.metas[grp].values())
+            for grp in ("layers", "top")}
+        return (T.n_scan_steps(self.cfg) * per_group["layers"]
+                + per_group["top"])
 
     def _batch(self, step: int) -> dict:
         b = D.batch_at(self.data_cfg, step)
@@ -277,7 +320,10 @@ class Trainer:
         # an elastic restore onto a different mesh keeps the fresh init —
         # telemetry state re-converges within a few steps.  A checkpoint
         # *missing* the y entry is corrupt and still raises loudly.
+        # Checkpoints from before sharded anchors hold replicated (L?, m)
+        # anchor leaves: reshard them into the current storage layout first.
         restored_y = jax.tree.map(jnp.asarray, tree["y"])
+        restored_y = C.reshard_y(restored_y, state["y"])
         if (jax.tree.structure(restored_y) == jax.tree.structure(state["y"])
                 and all(a.shape == b.shape for a, b in
                         zip(jax.tree.leaves(restored_y),

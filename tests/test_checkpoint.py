@@ -58,3 +58,49 @@ def test_yi_partial_replication_roundtrip():
     st = logical_to_storage(x, wq, ctx)
     back = storage_to_logical(st, wq, ctx)
     np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-6)
+
+
+def test_reshard_anchor_replicated_to_sharded():
+    """Old checkpoints hold replicated (L?, m) anchors; the sharded layout
+    wants (L?, tp, dp, shard) with m = dp * shard — reshard_anchor slices
+    the vector and broadcasts over tp, bitwise preserving the values."""
+    m, tp, dp = 32, 2, 4
+    shard = m // dp
+    flat = np.arange(m, dtype=np.float32)
+    out = C.reshard_anchor(flat, (tp, dp, shard))
+    assert out.shape == (tp, dp, shard)
+    for t in range(tp):
+        for d in range(dp):
+            np.testing.assert_array_equal(out[t, d],
+                                          flat[d * shard:(d + 1) * shard])
+    # scanned leaf: leading L dim passes through
+    L = 3
+    stacked = np.stack([flat + 100 * i for i in range(L)])
+    out_l = C.reshard_anchor(stacked, (L, tp, dp, shard))
+    assert out_l.shape == (L, tp, dp, shard)
+    np.testing.assert_array_equal(out_l[2, 1, 3],
+                                  stacked[2, 3 * shard:])
+
+
+def test_reshard_anchor_passthrough_on_mismatch():
+    """Already-sharded or genuinely incompatible anchors pass through
+    untouched (the trainer's elastic fresh-init fallback handles them)."""
+    a = np.ones((2, 4, 8), np.float32)
+    assert C.reshard_anchor(a, (2, 4, 8)) is a            # already matches
+    b = np.ones((33,), np.float32)                        # m != dp * shard
+    assert C.reshard_anchor(b, (2, 4, 8)) is b
+
+
+def test_reshard_y_rewrites_only_anchor_leaves():
+    m, tp, dp = 16, 1, 2
+    shard = m // dp
+    old = {"layers": {"wq": {"y": np.ones((3,)),
+                             "anchor": np.arange(m, dtype=np.float32)}},
+           "top": {"head": np.zeros((5,))}}
+    target = {"layers": {"wq": {"y": np.ones((3,)),
+                                "anchor": np.zeros((tp, dp, shard))}},
+              "top": {"head": np.zeros((5,))}}
+    out = C.reshard_y(old, target)
+    assert out["layers"]["wq"]["anchor"].shape == (tp, dp, shard)
+    np.testing.assert_array_equal(out["layers"]["wq"]["y"], old["layers"]["wq"]["y"])
+    np.testing.assert_array_equal(out["top"]["head"], old["top"]["head"])

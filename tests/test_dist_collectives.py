@@ -321,11 +321,10 @@ def test_packed_vs_unpacked_parity_8dev():
             _, au = run(fn, QSyncConfig(q=2, bucket=bucket, packed=False),
                         xs, y_tiny)
             ap, au = np.asarray(ap), np.asarray(au)
-            # the discrete failure count must agree exactly; the analog
-            # max_dist/y_next telemetry may drift 1 ulp (|z - anchor| is an
-            # FMA-contractible mul-sub, compiled per fusion context)
-            assert np.array_equal(ap[:, 0], au[:, 0]), fn.__name__
-            assert np.allclose(ap[:, 1:], au[:, 1:], rtol=1e-5), fn.__name__
+            # telemetry is computed from integer coordinate deltas (one
+            # correctly-rounded multiply, no FMA-contractible chain), so
+            # packed and unpacked agree bitwise — including the distances
+            assert np.array_equal(ap, au), fn.__name__
             assert float(ap[0, 0]) > 0, fn.__name__
         print("PACKED_PARITY_OK")
     """)
@@ -448,15 +447,20 @@ def test_fsdp_anchored_butterfly_8dev():
                  out_specs=(P(("pod","data")), P(("pod","data"))),
                  check_vma=False)
         def f2(wl, tele):
+            # per-rank loss scale => per-rank cotangents, so decoded partner
+            # coords differ from local coords and dist_b is populated
+            ri = jax.lax.axis_index("pod") * 4 + jax.lax.axis_index("data")
+            scale = 1.0 + 0.01 * ri.astype(jnp.float32)
             def loss(wv, t):
                 bundle = {"w": wv.reshape(-1), "y": y_b,
                           "key": jax.random.PRNGKey(5), "tele": t}
-                return jnp.sum(gather_rh(bundle).astype(jnp.float32) * coef2)
+                return jnp.sum(gather_rh(bundle).astype(jnp.float32) * coef2) * scale
             _, (gw, gt) = jax.value_and_grad(loss, argnums=(0, 1))(wl, tele)
             return gw.reshape(1, -1), gt[None]
         gw2, gt2 = jax.jit(f2)(w, jnp.zeros((tw_rh,)))
         gw2, gt2 = np.asarray(gw2), np.asarray(gt2)
-        err2 = np.abs(gw2.reshape(-1) - np.asarray(coef2))
+        # true mean gradient is coef2 * mean(scale) = coef2 * 1.035
+        err2 = np.abs(gw2.reshape(-1) - 1.035 * np.asarray(coef2))
         # bucket 0 runs at y=4 (s=8/15, up to ~s/2 per rh round); the rest
         # at y=1 — per-bucket sides really are per bucket
         b = 64

@@ -1,0 +1,232 @@
+"""Split (async/wait) FSDP gather vs the monolithic gather, the sharded
+anchor layout, and the prefetch-pipelined trainer.
+
+The split gather powering the double-buffered layer scan must be *bitwise*
+equivalent to the monolithic custom-vjp gather — same forward values, same
+w-cotangents, same tele cotangents — across packed/unpacked wire paths,
+multi-axis DP, and all three anchor modes (off / legacy replicated /
+sharded).  Multi-device cases run in subprocesses (XLA_FLAGS must be set
+before jax initializes), like tests/test_multidevice.py.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import fsdp as F
+from repro.dist.collectives import QSyncConfig
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_8dev(code: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Accounting: the sharded anchor changes *state* bytes, never *sync* bytes
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_bwd_ignores_anchor_layout():
+    """The quantized sync moves the same wire bytes whether the anchor is
+    sharded or replicated — the layout only changes what each rank stores
+    (anchor_bytes_step) and what the forward gather rebuilds
+    (anchor_gather_bytes_fwd)."""
+    qc = QSyncConfig(q=16, bucket=512)
+    m = 8 * 4096
+    for anchored in (False, True):
+        a = F.FSDPConfig(axes=("data",), qcfg=qc, sync="lq",
+                         anchored=anchored, anchor_sharded=True)
+        b = dataclasses.replace(a, anchor_sharded=False)
+        assert F.wire_bytes_bwd(m, [8], a) == F.wire_bytes_bwd(m, [8], b)
+
+    sharded = F.FSDPConfig(axes=("data",), qcfg=qc, sync="lq", anchored=True,
+                           anchor_sharded=True)
+    legacy = dataclasses.replace(sharded, anchor_sharded=False)
+    # per-step anchor state beyond each rank's own shard
+    assert F.anchor_bytes_step(m, [8], sharded) == 0
+    assert F.anchor_bytes_step(m, [8], legacy) == 4 * (m - m // 8)
+    # the sharded anchor is instead rebuilt by the forward gather (f32)
+    assert F.anchor_gather_bytes_fwd(m, [8], sharded) == 4 * (m - m // 8)
+    assert F.anchor_gather_bytes_fwd(m, [8], legacy) == 0
+    # neither exists unanchored
+    off = dataclasses.replace(sharded, anchored=False)
+    assert F.anchor_bytes_step(m, [8], off) == 0
+    assert F.anchor_gather_bytes_fwd(m, [8], off) == 0
+
+
+# ---------------------------------------------------------------------------
+# world=1: split == monolithic, bitwise, in-process
+# ---------------------------------------------------------------------------
+
+def test_split_gather_bitwise_world1():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = F.FSDPConfig(axes=("data",), qcfg=QSyncConfig(q=16, bucket=64),
+                       sync="lq")
+    gather = F.make_fsdp_gather(cfg)
+    g_async, g_wait = F.make_fsdp_gather_split(cfg)
+    w = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    coef = jax.random.normal(jax.random.PRNGKey(1), (128,))
+    tele0 = jnp.zeros((F.TELE_WIDTH,), jnp.float32)
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
+             out_specs=(P(),) * 6, check_vma=False)
+    def f(w, tele):
+        def bundle(t):
+            return {"w": w, "y": jnp.float32(1.0),
+                    "key": jax.random.PRNGKey(3), "tele": t}
+
+        def loss_mono(w_, t):
+            return jnp.sum(gather(bundle(t)).astype(jnp.float32) * coef)
+
+        def loss_split(w_, t):
+            return jnp.sum(g_wait(g_async(bundle(t)))
+                           .astype(jnp.float32) * coef)
+
+        lm, (gwm, gtm) = jax.value_and_grad(loss_mono, (0, 1))(w, tele)
+        ls, (gws, gts) = jax.value_and_grad(loss_split, (0, 1))(w, tele)
+        return lm, gwm, gtm, ls, gws, gts
+
+    lm, gwm, gtm, ls, gws, gts = jax.jit(f)(w, tele0)
+    assert np.asarray(lm).tobytes() == np.asarray(ls).tobytes()
+    assert np.asarray(gwm).tobytes() == np.asarray(gws).tobytes()
+    assert np.asarray(gtm).tobytes() == np.asarray(gts).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# 8 devices, multi-axis DP, packed + unpacked, all three anchor modes
+# ---------------------------------------------------------------------------
+
+def test_split_gather_parity_8dev():
+    """Split async/wait gather is bitwise-identical to the monolithic
+    gather on a (2,4) pod x data mesh, packed and unpacked, unanchored and
+    anchored; the sharded anchor produces bitwise the same mean as the
+    legacy replicated anchor while each rank carries only its (m/8,) slice
+    — the in-test len() cross-check of fsdp.anchor_bytes_step == 0."""
+    out = _run_8dev("""
+        from functools import partial
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import QSyncConfig
+        from repro.dist.fsdp import (FSDPConfig, TELE_WIDTH, leaf_nb,
+                                     make_fsdp_gather, make_fsdp_gather_split,
+                                     tele_width, anchor_bytes_step)
+        import dataclasses
+        mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        m = 8 * 512
+        shard = m // 8
+        w = jax.random.normal(jax.random.PRNGKey(0), (8, shard))
+        anchor_full = jax.random.normal(jax.random.PRNGKey(2), (m,))
+        anchor_sh = anchor_full.reshape(8, shard)
+
+        def run(cfg, split, y, tele_w, anchor=None, anchor_spec=P()):
+            gather = make_fsdp_gather(cfg)
+            g_async, g_wait = make_fsdp_gather_split(cfg)
+            anchored = anchor is not None
+            coef = jax.random.normal(jax.random.PRNGKey(1), (m,)) + 10.0
+            specs = (P(("pod", "data")), P(), anchor_spec)
+            @partial(jax.shard_map, mesh=mesh, in_specs=specs,
+                     out_specs=(P(("pod", "data")),) * 3, check_vma=False)
+            def f(wl, tele, anc):
+                def loss(wv, t):
+                    yv = ({"y": y, "anchor": anc.reshape(-1)}
+                          if anchored else y)
+                    bundle = {"w": wv.reshape(-1), "y": yv,
+                              "key": jax.random.PRNGKey(3), "tele": t}
+                    full = (g_wait(g_async(bundle)) if split
+                            else gather(bundle))
+                    return jnp.sum(full.astype(jnp.float32) * coef)
+                l, (gw, gt) = jax.value_and_grad(loss, (0, 1))(wl, tele)
+                return (jnp.broadcast_to(l, (1,)), gw.reshape(1, -1),
+                        gt[None])
+            anc_in = anchor if anchor is not None else jnp.zeros((8, 1))
+            l, gw, gt = jax.jit(f)(w, jnp.zeros((tele_w,)), anc_in)
+            return (np.asarray(l), np.asarray(gw), np.asarray(gt))
+
+        for packed in (False, True):
+            qc = QSyncConfig(q=16, bucket=64, packed=packed)
+            nb = leaf_nb(m, 8, qc)
+            y_b = jnp.full((nb,), 1.0)
+            # --- unanchored, multi-axis rh ---
+            cfg = FSDPConfig(axes=("pod", "data"), qcfg=qc, sync="lq")
+            mono = run(cfg, False, y_b, tele_width(nb))
+            splt = run(cfg, True, y_b, tele_width(nb))
+            for a, b in zip(mono, splt):
+                assert a.tobytes() == b.tobytes(), "unanchored split parity"
+            # --- anchored, legacy replicated anchor ---
+            cfg_l = FSDPConfig(axes=("pod", "data"), qcfg=qc, sync="lq",
+                               anchored=True, anchor_sharded=False)
+            ml = run(cfg_l, False, y_b, tele_width(nb, m, True),
+                     anchor=jnp.broadcast_to(anchor_full, (8, m)),
+                     anchor_spec=P(("pod", "data")))
+            sl = run(cfg_l, True, y_b, tele_width(nb, m, True),
+                     anchor=jnp.broadcast_to(anchor_full, (8, m)),
+                     anchor_spec=P(("pod", "data")))
+            for a, b in zip(ml, sl):
+                assert a.tobytes() == b.tobytes(), "legacy split parity"
+            # --- anchored, sharded anchor (each rank holds its slice) ---
+            cfg_s = dataclasses.replace(cfg_l, anchor_sharded=True)
+            ms = run(cfg_s, False, y_b, tele_width(nb, shard, True),
+                     anchor=anchor_sh, anchor_spec=P(("pod", "data")))
+            ss = run(cfg_s, True, y_b, tele_width(nb, shard, True),
+                     anchor=anchor_sh, anchor_spec=P(("pod", "data")))
+            for a, b in zip(ms, ss):
+                assert a.tobytes() == b.tobytes(), "sharded split parity"
+            # sharded vs legacy: identical loss and mean (the gathered
+            # anchor reassembles the exact replicated values)
+            assert ms[0].tobytes() == ml[0].tobytes()
+            assert ms[1].tobytes() == ml[1].tobytes()
+            # tele cotangents agree on everything but the carried anchor
+            lo = TELE_WIDTH + 2 * nb
+            assert ms[2][:, :lo].tobytes() == ml[2][:, :lo].tobytes()
+            # the carried anchor payload: legacy re-materializes the full
+            # (m,) mean on every rank, sharded carries only this rank's
+            # (m/8,) slice — and those slices tile the legacy vector
+            a_leg, a_sh = ml[2][:, lo:], ms[2][:, lo:]
+            assert a_leg.shape[1] == m and a_sh.shape[1] == shard
+            for r in range(8):
+                assert a_sh[r].tobytes() == \\
+                    a_leg[r, r * shard:(r + 1) * shard].tobytes()
+            # len() cross-check of the accounting: extra carried state
+            # beyond the rank's own shard matches anchor_bytes_step
+            assert 4 * (a_sh.shape[1] - shard) == \\
+                anchor_bytes_step(m, [2, 4], cfg_s) == 0
+            assert 4 * (a_leg.shape[1] - shard) == \\
+                anchor_bytes_step(m, [2, 4], cfg_l)
+        print("SPLIT_PARITY_OK")
+    """)
+    assert "SPLIT_PARITY_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# trainer: prefetched scan bit-identical to serial (8 devices, slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_prefetch_trainer_bit_identity_8dev():
+    """3 steps of the tiny anchored trainer, serial vs double-buffered
+    prefetch: bitwise-identical losses and final params, strictly lower
+    HLO collective_exposed_fraction, zero sharded-anchor state bytes.
+    Delegates to the CI smoke (benchmarks/fsdp_overlap_probe.py)."""
+    probe = os.path.join(_ROOT, "benchmarks", "fsdp_overlap_probe.py")
+    r = subprocess.run([sys.executable, probe, "--check"],
+                       capture_output=True, text=True, timeout=1500)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "FSDP_OVERLAP_OK" in r.stdout

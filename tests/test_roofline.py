@@ -1,0 +1,60 @@
+"""benchmarks/roofline.py report plumbing: tag filtering and the
+exposed-fraction column."""
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from benchmarks import roofline as R  # noqa: E402
+
+
+def _write(d, name, rec):
+    with open(os.path.join(d, name), "w") as f:
+        json.dump(rec, f)
+
+
+def test_load_applies_tag_filter_to_skipped_records(tmp_path):
+    """Regression: skipped records were appended before the tag check, so
+    skip rows from every tag leaked into every report."""
+    d = str(tmp_path)
+    _write(d, "a.json", {"tag": "", "skipped": False, "arch": "x"})
+    _write(d, "b.json", {"tag": "exp2", "skipped": True, "arch": "y",
+                         "reason": "r"})
+    _write(d, "c.json", {"tag": "exp2", "skipped": False, "arch": "z"})
+    _write(d, "d.json", {"skipped": True, "arch": "w", "reason": "r"})
+
+    default = R.load(d, tag="")
+    assert {r["arch"] for r in default} == {"x", "w"}
+    exp2 = R.load(d, tag="exp2")
+    assert {r["arch"] for r in exp2} == {"y", "z"}
+
+
+def _rec(exposed=None):
+    rec = {
+        "arch": "a", "shape": "train_4k", "multi_pod": False,
+        "skipped": False, "flops": 1e15, "traffic_bytes": 1e12,
+        "collectives": {"all-gather": 1e9, "all-gather_count": 4},
+        "memory": {"peak_bytes": 2 ** 30},
+        "active_params_B": 1.0, "mesh": {"data": 16, "model": 16},
+    }
+    if exposed is not None:
+        rec["collective_exposed_fraction"] = exposed
+    return rec
+
+
+def test_terms_carries_exposed_fraction():
+    assert R.terms(_rec(0.25))["exposed_fraction"] == 0.25
+    # records predating the auditor read as None and format as "-"
+    t = R.terms(_rec())
+    assert t["exposed_fraction"] is None
+    assert R._fmt_exposed(t) == "-"
+    assert R._fmt_exposed(R.terms(_rec(0.5))) == "0.50"
+
+
+def test_fmt_row_has_exposed_column():
+    row = R.fmt_row(_rec(0.37))
+    assert "| 0.37 |" in row
+    assert row.count("|") == R.HEADER.splitlines()[0].count("|")
